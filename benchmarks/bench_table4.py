@@ -1,0 +1,47 @@
+"""Table IV: space usage of the similarity-search methods, measured on
+the scaled DBs AND extrapolated analytically to the paper's billion-scale
+n — checking the headline claim (SI-bST ~10 GiB vs SIH ~32/29 GiB on
+SIFT at n = 10^9)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.registry import PAPER_DATASETS
+from repro.core.baselines import MIH, SIH, HmSearch
+from repro.core.bst import build_bst
+from repro.core.multi_index import build_multi_index
+
+from .common import Csv, make_dataset
+
+
+def run(csv: Csv, datasets=("review", "sift")) -> None:
+    for name in datasets:
+        cfg, db, _ = make_dataset(name)
+        n_scaled = db.shape[0]
+        sizes = {
+            "SI-bST": build_bst(db, cfg.b).array_bytes(),
+            "MI-bST": build_multi_index(db, cfg.b, m=2).array_bytes(),
+            "SIH": SIH.build(db, cfg.b).array_bytes(),
+            "MIH": MIH.build(db, cfg.b, m=2).array_bytes(),
+            "HmSearch": HmSearch.build(db, cfg.b, 3).array_bytes(),
+        }
+        for k, v in sizes.items():
+            csv.add(f"table4/{name}/{k}", 0.0,
+                    f"MiB={v / 2**20:.1f};bytes_per_sketch={v / n_scaled:.1f}")
+        assert sizes["SI-bST"] == min(sizes.values()), sizes
+
+        # analytic billion-scale extrapolation: bytes/sketch held fixed
+        n_full = PAPER_DATASETS[name].n
+        for k in ("SI-bST", "SIH"):
+            gib = sizes[k] / n_scaled * n_full / 2**30
+            csv.add(f"table4/{name}/extrapolated/{k}", 0.0,
+                    f"GiB_at_n={n_full}={gib:.1f}")
+        ratio = sizes["SIH"] / sizes["SI-bST"]
+        csv.add(f"table4/{name}/ratio", 0.0, f"sih_over_bst={ratio:.2f}x")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

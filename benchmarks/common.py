@@ -1,0 +1,72 @@
+"""Shared benchmark utilities: scaled paper datasets, timing, CSV rows.
+
+Scale note (DESIGN.md §7): the container is one CPU core with 35 GB RAM;
+benchmarks use synthetic sketch databases at n = 2^16..2^20 with the
+paper's exact (L, b) per dataset, reproducing *relative* claims (bST vs
+LOUDS space ratios, SIH blow-up in τ and b, SI/MI crossover).  Space
+models are additionally evaluated analytically at the paper's billion-
+scale n (bench_table4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import PAPER_DATASETS, SketchDatasetConfig
+
+# scaled-down database sizes per dataset (same L, b as the paper)
+SCALED_N = {"review": 1 << 17, "cp": 1 << 17, "sift": 1 << 17, "gist": 1 << 16}
+N_QUERIES = 20
+
+
+def make_dataset(name: str, n: Optional[int] = None, seed: int = 0):
+    """Synthetic b-bit sketch DB with the paper's (L, b).  Near-uniform
+    random characters — the distribution minhash/CWS produce (paper §V)."""
+    cfg = PAPER_DATASETS[name]
+    n = n or SCALED_N[name]
+    rng = np.random.default_rng(seed)
+    db = rng.integers(0, 1 << cfg.b, size=(n, cfg.L), dtype=np.uint8)
+    # queries: half perturbed DB rows (guaranteed near neighbours), half random
+    q = db[rng.integers(0, n, N_QUERIES)].copy()
+    for i in range(N_QUERIES // 2, N_QUERIES):
+        q[i] = rng.integers(0, 1 << cfg.b, size=cfg.L, dtype=np.uint8)
+    for i in range(N_QUERIES // 2):
+        flips = rng.integers(0, cfg.L, size=2)
+        q[i, flips] = rng.integers(0, 1 << cfg.b, size=2)
+    return cfg, db, q
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") else None
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        if hasattr(r, "block_until_ready"):
+            r.block_until_ready()
+        elif isinstance(r, (tuple, list)) and r and hasattr(r[0], "block_until_ready"):
+            r[0].block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+class Csv:
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, us_per_call: float, derived: str = "") -> None:
+        row = f"{name},{us_per_call:.2f},{derived}"
+        self.rows.append(row)
+        print(row, flush=True)
+
+    def header(self) -> None:
+        print("name,us_per_call,derived", flush=True)

@@ -1,0 +1,62 @@
+"""Roofline table assembler: reads the dry-run JSON cache and renders the
+per-(arch x shape x mesh) three-term table for EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_records(results_dir: str = RESULTS_DIR) -> List[dict]:
+    records = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            records.append(json.load(f))
+    return records
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("status") != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} | "
+                f"ERROR: {r.get('error','')[:60]} | | | | | |")
+    roof = r["roofline"]
+    mem = r.get("memory", {})
+    return ("| {arch} | {shape} | {mesh} | {tc:.4f} | {tm:.4f} | {tcoll:.4f} "
+            "| {bn} | {uf:.2f} | {gb:.1f} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        tc=roof["t_compute_s"], tm=roof["t_memory_s"],
+        tcoll=roof["t_collective_s"], bn=roof["bottleneck"],
+        uf=roof.get("useful_flops_ratio", 0.0),
+        gb=mem.get("total_bytes", 0) / 1e9)
+
+
+def render_table(records: List[dict], mesh: Optional[str] = None) -> str:
+    head = ("| arch | shape | mesh | T_comp (s) | T_mem (s) | T_coll (s) "
+            "| bottleneck | useful-FLOPs | bytes/dev (GB) |\n"
+            "|---|---|---|---|---|---|---|---|---|")
+    rows = [fmt_row(r) for r in records
+            if mesh is None or r.get("mesh") == mesh]
+    return "\n".join([head] + rows)
+
+
+def run(csv=None) -> None:
+    records = load_records()
+    ok = [r for r in records if r.get("status") == "ok"]
+    err = [r for r in records if r.get("status") != "ok"]
+    print(render_table(records))
+    print(f"\n{len(ok)} ok, {len(err)} errors")
+    if csv is not None:
+        for r in ok:
+            roof = r["roofline"]
+            csv.add(f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}", 0.0,
+                    f"Tc={roof['t_compute_s']:.4f};Tm={roof['t_memory_s']:.4f};"
+                    f"Tcoll={roof['t_collective_s']:.4f};"
+                    f"bottleneck={roof['bottleneck']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick]`` prints
+``name,us_per_call,derived`` CSV rows (plus the roofline table from the
+dry-run cache if present)."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (bench_fig7, bench_fig8, bench_table2, bench_table3,
+               bench_table4, bench_vertical, roofline)
+from .common import Csv
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller datasets / skip slow suites")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names (table2,table3,...)")
+    args = ap.parse_args(argv)
+
+    suites = {
+        "fig8": lambda c: bench_fig8.run(c),
+        "table2": lambda c: bench_table2.run(
+            c, datasets=("review",) if args.quick else ("review", "gist")),
+        "vertical": lambda c: bench_vertical.run(c),
+        "table3": lambda c: bench_table3.run(
+            c, datasets=("review",) if args.quick else ("review", "cp")),
+        "table4": lambda c: bench_table4.run(
+            c, datasets=("review",) if args.quick else ("review", "sift")),
+        "fig7": lambda c: bench_fig7.run(
+            c, datasets=("review",) if args.quick else ("review", "sift")),
+        "roofline": lambda c: roofline.run(c),
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    csv = Csv()
+    csv.header()
+    failures = []
+    for name, fn in suites.items():
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn(csv)
+        except Exception as e:
+            failures.append((name, e))
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED suites: {[n for n, _ in failures]}")
+        return 1
+    print(f"# all {len(suites)} suites passed ({len(csv.rows)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""Serving example: batched autoregressive generation + the paper's
+sketch-retrieval plane (0-bit CWS of request states -> MI-bST lookup).
+
+    PYTHONPATH=src python examples/retrieval_serve.py
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    return serve_main(["--arch", "smollm-135m", "--smoke", "--batch", "4",
+                       "--prompt-len", "24", "--gen-len", "12",
+                       "--retrieval", "--index-size", "2048", "--tau", "3"])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""End-to-end driver: train a ~100M-class model (smollm-135m family) for a
+few hundred steps on synthetic data with bST near-duplicate filtering,
+checkpoint/restart, and loss-curve reporting.
+
+    PYTHONPATH=src python examples/train_smollm.py             # full (slow on CPU)
+    PYTHONPATH=src python examples/train_smollm.py --smoke     # reduced config
+
+This is a thin veneer over ``repro.launch.train`` — the same launcher the
+cluster deployment uses."""
+
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+    steps = args.steps or (60 if args.smoke else 300)
+    argv = ["--arch", "smollm-135m", "--steps", str(steps),
+            "--batch", "8", "--seq", "128" if args.smoke else "512",
+            "--dedup", "--ckpt-dir", "/tmp/repro_smollm_ckpt",
+            "--ckpt-every", "50", "--log-every", "10"]
+    if args.smoke:
+        argv.append("--smoke")
+    return train_main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

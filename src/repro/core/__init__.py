@@ -1,0 +1,15 @@
+"""The paper's contribution: b-bit sketch trie similarity search."""
+
+from .bitvector import BitVector
+from .bst import SketchIndex, build_bst, build_fst_style, build_louds
+from .cost_model import cost_multi, cost_single, frontier_capacities, sigs
+from .multi_index import (MultiIndex, build_multi_index, choose_plan,
+                          make_mi_searcher, mi_search)
+from .search import SearchResult, make_batch_searcher, make_searcher, search
+
+__all__ = [
+    "BitVector", "SketchIndex", "build_bst", "build_louds", "build_fst_style",
+    "SearchResult", "make_searcher", "make_batch_searcher", "search",
+    "MultiIndex", "build_multi_index", "mi_search", "make_mi_searcher",
+    "choose_plan", "sigs", "cost_single", "cost_multi", "frontier_capacities",
+]

@@ -1,0 +1,286 @@
+"""Comparison methods from the paper's experiments (§VI-C): SIH, MIH,
+HmSearch-style, and exhaustive linear scan.
+
+These are the *baselines the paper beats*; we implement them faithfully
+enough to reproduce the relative behaviour (SIH blowing up exponentially in
+τ and b, MIH winning at large τ, HmSearch trading memory for filter time).
+
+TPU adaptation note: hash tables do not exist on TPU; the idiomatic
+equivalent of an inverted index is a **lexicographically sorted key array
+queried with vectorized binary search** — identical asymptotics for batched
+lookups.  Keys are the raw sketch bytes viewed as numpy ``void`` scalars
+(memcmp ordering).  Signature *enumeration* (the very thing the paper
+shows to be the bottleneck) is inherently combinatorial and data-dependent
+— it stays host-side, which matches how SIH/MIH drive their index.
+Verification always goes through the shared Pallas hamming kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import cost_model
+from .hamming import pack_vertical
+from ..kernels import ops
+
+
+def _as_void(rows: np.ndarray) -> np.ndarray:
+    rows = np.ascontiguousarray(rows, dtype=np.uint8)
+    return rows.view(np.dtype((np.void, rows.shape[1]))).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# linear scan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LinearScan:
+    """Exhaustive vertical-format scan — the no-index floor."""
+
+    full_vert: jnp.ndarray   # (b, W, n)
+    b: int
+    L: int
+    n: int
+
+    @staticmethod
+    def build(sketches: np.ndarray, b: int) -> "LinearScan":
+        n, L = sketches.shape
+        planes = pack_vertical(sketches, b)
+        return LinearScan(full_vert=jnp.asarray(np.transpose(planes, (1, 2, 0)).copy()),
+                          b=b, L=L, n=n)
+
+    def search(self, q: np.ndarray, tau: int) -> np.ndarray:
+        qv = jnp.asarray(np.transpose(pack_vertical(np.asarray(q)[None], self.b), (1, 2, 0)))
+        dist = ops.hamming_distances(self.full_vert, qv)[0]
+        return np.asarray(dist <= tau)
+
+    def array_bytes(self) -> int:
+        return int(self.full_vert.nbytes)
+
+
+# ---------------------------------------------------------------------------
+# signature enumeration (shared by SIH / MIH)
+# ---------------------------------------------------------------------------
+
+def enumerate_signatures(q: np.ndarray, b: int, tau: int,
+                         limit: Optional[int] = None) -> Tuple[np.ndarray, bool]:
+    """All strings within Hamming distance τ of q (Eq. 3 enumeration).
+
+    Returns (signatures, truncated).  ``limit`` emulates the paper's 10 s
+    SIH timeout: enumeration stops once ``limit`` signatures exist.
+    """
+    L = len(q)
+    A = 1 << b
+    out = [q[None, :].copy()]
+    count = 1
+    truncated = False
+    deltas = np.arange(1, A, dtype=np.uint8)
+    for k in range(1, min(tau, L) + 1):
+        for pos in itertools.combinations(range(L), k):
+            # all (A-1)^k character-replacement combos, vectorized
+            grids = np.meshgrid(*([deltas] * k), indexing="ij")
+            combo = np.stack([g.reshape(-1) for g in grids], axis=1)  # ((A-1)^k, k)
+            sig = np.repeat(q[None, :], combo.shape[0], axis=0)
+            for j, p in enumerate(pos):
+                sig[:, p] = (q[p] + combo[:, j]) % A
+            out.append(sig)
+            count += combo.shape[0]
+            if limit is not None and count > limit:
+                truncated = True
+                return np.concatenate(out, axis=0)[:limit], truncated
+    return np.concatenate(out, axis=0), truncated
+
+
+class _SortedInvertedIndex:
+    """Sorted-key inverted index: key -> contiguous id range (CSR)."""
+
+    def __init__(self, keys: np.ndarray, ids: Optional[np.ndarray] = None):
+        n = keys.shape[0]
+        ids = ids if ids is not None else np.arange(n, dtype=np.int64)
+        void = _as_void(keys)
+        order = np.argsort(void, kind="stable")
+        self.sorted_void = void[order]
+        self.ids_sorted = ids[order]
+        uniq_mask = np.concatenate([[True], self.sorted_void[1:] != self.sorted_void[:-1]]) \
+            if n > 1 else np.ones(n, bool)
+        self.uniq = self.sorted_void[uniq_mask]
+        starts = np.flatnonzero(uniq_mask)
+        self.offsets = np.concatenate([starts, [n]]).astype(np.int64)
+        self.key_bytes = keys.shape[1]
+
+    def lookup_many(self, queries: np.ndarray) -> np.ndarray:
+        """(m, key_len) query rows -> concatenated candidate ids."""
+        qv = _as_void(queries)
+        pos = np.searchsorted(self.uniq, qv)
+        pos_c = np.minimum(pos, len(self.uniq) - 1) if len(self.uniq) else pos
+        hit = np.zeros(len(qv), dtype=bool)
+        if len(self.uniq):
+            hit = self.uniq[pos_c] == qv
+        out = []
+        for p in pos_c[hit]:
+            out.append(self.ids_sorted[self.offsets[p]:self.offsets[p + 1]])
+        return np.concatenate(out) if out else np.zeros(0, dtype=np.int64)
+
+    def nbytes(self) -> int:
+        return (self.uniq.size * self.key_bytes + self.ids_sorted.nbytes
+                + self.offsets.nbytes)
+
+
+# ---------------------------------------------------------------------------
+# SIH — single-index hashing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SIH:
+    index: _SortedInvertedIndex
+    b: int
+    L: int
+    n: int
+
+    @staticmethod
+    def build(sketches: np.ndarray, b: int) -> "SIH":
+        n, L = np.asarray(sketches).shape
+        return SIH(index=_SortedInvertedIndex(np.asarray(sketches, np.uint8)),
+                   b=b, L=L, n=n)
+
+    def search(self, q: np.ndarray, tau: int,
+               limit: Optional[int] = 2_000_000) -> Tuple[np.ndarray, bool]:
+        """Returns (mask, truncated). truncated=True ~ the paper's timeout."""
+        sigs, truncated = enumerate_signatures(np.asarray(q, np.uint8), self.b, tau, limit)
+        ids = self.index.lookup_many(sigs)
+        mask = np.zeros(self.n, dtype=bool)
+        mask[ids] = True
+        return mask, truncated
+
+    def array_bytes(self) -> int:
+        return self.index.nbytes()
+
+
+# ---------------------------------------------------------------------------
+# MIH — multi-index hashing (Norouzi et al., adapted to b-bit sketches)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MIH:
+    indexes: List[_SortedInvertedIndex]
+    bounds: List[Tuple[int, int]]
+    full_vert: jnp.ndarray
+    b: int
+    L: int
+    n: int
+    m: int
+
+    @staticmethod
+    def build(sketches: np.ndarray, b: int, m: int) -> "MIH":
+        sketches = np.asarray(sketches, np.uint8)
+        n, L = sketches.shape
+        lens = cost_model._block_lengths(L, m)
+        bounds, indexes, lo = [], [], 0
+        for Lj in lens:
+            hi = lo + Lj
+            indexes.append(_SortedInvertedIndex(sketches[:, lo:hi]))
+            bounds.append((lo, hi))
+            lo = hi
+        planes = pack_vertical(sketches, b)
+        return MIH(indexes=indexes, bounds=bounds,
+                   full_vert=jnp.asarray(np.transpose(planes, (1, 2, 0)).copy()),
+                   b=b, L=L, n=n, m=m)
+
+    def search(self, q: np.ndarray, tau: int,
+               limit: Optional[int] = 2_000_000) -> Tuple[np.ndarray, bool, int]:
+        """Filter blocks with MIH thresholds, verify with the kernel.
+        Returns (mask, truncated, n_candidates)."""
+        q = np.asarray(q, np.uint8)
+        taus = cost_model.block_thresholds(tau, self.m, mih_style=True)
+        cand: List[np.ndarray] = []
+        truncated = False
+        for idx, (lo, hi), tj in zip(self.indexes, self.bounds, taus):
+            sigs, tr = enumerate_signatures(q[lo:hi], self.b, tj, limit)
+            truncated |= tr
+            cand.append(idx.lookup_many(sigs))
+        ids = np.unique(np.concatenate(cand)) if cand else np.zeros(0, np.int64)
+        if ids.size == 0:
+            return np.zeros(self.n, bool), truncated, 0
+        cand_vert = self.full_vert[:, :, jnp.asarray(ids)]
+        qv = jnp.asarray(np.transpose(pack_vertical(q[None], self.b), (1, 2, 0)))
+        dist = np.asarray(ops.hamming_distances(cand_vert, qv)[0])
+        mask = np.zeros(self.n, dtype=bool)
+        mask[ids[dist <= tau]] = True
+        return mask, truncated, int(ids.size)
+
+    def array_bytes(self) -> int:
+        return sum(ix.nbytes() for ix in self.indexes) + int(self.full_vert.nbytes)
+
+
+# ---------------------------------------------------------------------------
+# HmSearch-style (Zhang et al.): τ^j ∈ {0,1} blocks, 1-wildcard variants
+# registered at **index** time — fast filter, heavy memory (paper §III-B)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HmSearch:
+    indexes: List[_SortedInvertedIndex]
+    bounds: List[Tuple[int, int]]
+    full_vert: jnp.ndarray
+    b: int
+    L: int
+    n: int
+    m: int
+
+    @staticmethod
+    def _variant_keys(block: np.ndarray) -> np.ndarray:
+        """Key scheme: [block with position p zeroed | p+1] for each wildcard
+        position p, plus [block | 0] for the exact entry.  The trailing
+        position byte keeps variants from colliding with real characters
+        (a plain 255-wildcard byte would collide at b=8)."""
+        n, Lj = block.shape
+        keys = [np.concatenate([block, np.zeros((n, 1), np.uint8)], axis=1)]
+        for p in range(Lj):
+            v = block.copy()
+            v[:, p] = 0
+            keys.append(np.concatenate([v, np.full((n, 1), p + 1, np.uint8)], axis=1))
+        return np.concatenate(keys, axis=0)
+
+    @staticmethod
+    def build(sketches: np.ndarray, b: int, tau: int) -> "HmSearch":
+        """m = ⌊τ/2⌋ + 1 blocks ⇒ pigeonhole guarantees some block has ≤ 1
+        mismatch; register every 1-wildcard variant of every block string."""
+        sketches = np.asarray(sketches, np.uint8)
+        n, L = sketches.shape
+        m = tau // 2 + 1
+        lens = cost_model._block_lengths(L, m)
+        bounds, indexes, lo = [], [], 0
+        for Lj in lens:
+            hi = lo + Lj
+            keys = HmSearch._variant_keys(sketches[:, lo:hi])
+            ids = np.tile(np.arange(n, dtype=np.int64), Lj + 1)
+            indexes.append(_SortedInvertedIndex(keys, ids))
+            bounds.append((lo, hi))
+            lo = hi
+        planes = pack_vertical(sketches, b)
+        return HmSearch(indexes=indexes, bounds=bounds,
+                        full_vert=jnp.asarray(np.transpose(planes, (1, 2, 0)).copy()),
+                        b=b, L=L, n=n, m=m)
+
+    def search(self, q: np.ndarray, tau: int) -> Tuple[np.ndarray, int]:
+        q = np.asarray(q, np.uint8)
+        cand: List[np.ndarray] = []
+        for idx, (lo, hi) in zip(self.indexes, self.bounds):
+            cand.append(idx.lookup_many(HmSearch._variant_keys(q[lo:hi][None, :])))
+        ids = np.unique(np.concatenate(cand)) if cand else np.zeros(0, np.int64)
+        if ids.size == 0:
+            return np.zeros(self.n, bool), 0
+        cand_vert = self.full_vert[:, :, jnp.asarray(ids)]
+        qv = jnp.asarray(np.transpose(pack_vertical(q[None], self.b), (1, 2, 0)))
+        dist = np.asarray(ops.hamming_distances(cand_vert, qv)[0])
+        mask = np.zeros(self.n, dtype=bool)
+        mask[ids[dist <= tau]] = True
+        return mask, int(ids.size)
+
+    def array_bytes(self) -> int:
+        return sum(ix.nbytes() for ix in self.indexes) + int(self.full_vert.nbytes)

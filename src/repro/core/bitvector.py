@@ -1,0 +1,187 @@
+"""Succinct bit vector with rank/select — the substrate of every bST layer.
+
+The paper uses Jacobson-style rank/select directories (o(N) auxiliary bits,
+O(1) scalar queries) from the SDSL.  Those directory layouts are scalar-ISA
+artifacts; on TPU the same role is played by
+
+  * ``rank``   : a gather from a per-word *cumulative popcount* table plus a
+                 native ``lax.population_count`` on the residual word, and
+  * ``select`` : a vectorized binary search (``searchsorted``) over the same
+                 table plus an in-word select done with a 32-lane compare.
+
+Both are O(1)-gather / O(log W)-search per query and fully batched — the
+trie traversal issues them for a whole frontier at once.
+
+Space accounting (reported by ``nbits``): N bits of payload + 32·(W+1) bits
+of cumulative table = N + N + o(N) for word size 32.  A production TPU
+deployment would widen the table blocks to trade the o(N); we keep per-word
+cumsums because the dry-run shows the traversal is gather-latency bound,
+not capacity bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+_WORD_SHIFT = 5
+_WORD_MASK = 31
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BitVector:
+    """Packed bit array with rank/select support.
+
+    Attributes:
+      words: uint32[W]   — packed payload, LSB-first within each word.
+      cum:   int32[W+1]  — exclusive cumulative popcount; ``cum[w]`` is the
+             number of set bits strictly before word ``w``.
+      length: python int — logical number of bits (static; not traced).
+    """
+
+    words: jnp.ndarray
+    cum: jnp.ndarray
+    length: int
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.words, self.cum), self.length
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        words, cum = children
+        return cls(words=words, cum=cum, length=aux)
+
+    # -- constructors ----------------------------------------------------
+    @staticmethod
+    def from_bits(bits: np.ndarray) -> "BitVector":
+        """Build from a host-side 0/1 array.  Construction is preprocessing
+        (index build), so it runs in numpy; queries run in JAX."""
+        bits = np.asarray(bits, dtype=np.uint8)
+        n = int(bits.shape[0])
+        n_words = max(1, (n + WORD_BITS - 1) // WORD_BITS)
+        padded = np.zeros(n_words * WORD_BITS, dtype=np.uint8)
+        padded[:n] = bits
+        lanes = padded.reshape(n_words, WORD_BITS)
+        weights = (1 << np.arange(WORD_BITS, dtype=np.uint64)).astype(np.uint64)
+        words = (lanes.astype(np.uint64) * weights).sum(axis=1).astype(np.uint32)
+        pops = lanes.sum(axis=1).astype(np.int64)
+        cum = np.zeros(n_words + 1, dtype=np.int32)
+        np.cumsum(pops, out=cum[1:])
+        return BitVector(words=jnp.asarray(words), cum=jnp.asarray(cum), length=n)
+
+    # -- metadata ----------------------------------------------------------
+    @property
+    def total_ones(self) -> jnp.ndarray:
+        return self.cum[-1]
+
+    def nbits(self) -> int:
+        """Storage cost in bits (payload + rank directory)."""
+        return int(self.words.shape[0]) * 32 + int(self.cum.shape[0]) * 32
+
+    # -- queries (all traceable + batched) -------------------------------
+    def rank(self, i: jnp.ndarray) -> jnp.ndarray:
+        """Number of set bits in positions [0, i) — i.e. exclusive rank.
+
+        ``i`` may be any int array; values are clipped to [0, length].
+        """
+        i = jnp.clip(jnp.asarray(i, jnp.int32), 0, self.length)
+        w = i >> _WORD_SHIFT
+        r = i & _WORD_MASK
+        base = self.cum[w]
+        word = self.words[jnp.minimum(w, self.words.shape[0] - 1)]
+        mask = jnp.where(r > 0, (jnp.uint32(1) << r.astype(jnp.uint32)) - 1, jnp.uint32(0))
+        partial = jax.lax.population_count(word & mask).astype(jnp.int32)
+        # when i lands exactly on length with a partial final word, the clip
+        # plus mask arithmetic above already excludes padding bits (they are 0)
+        return base + jnp.where(r > 0, partial, 0)
+
+    def select(self, k: jnp.ndarray) -> jnp.ndarray:
+        """Position (0-indexed) of the k-th set bit, k being 1-indexed as in
+        the paper.  Out-of-range k returns ``length`` (paper: "returns N+1").
+        """
+        k = jnp.asarray(k, jnp.int32)
+        total = self.cum[-1]
+        valid = (k >= 1) & (k <= total)
+        k_safe = jnp.clip(k, 1, jnp.maximum(total, 1))
+        # word containing the k-th one: last w with cum[w] < k
+        w = jnp.searchsorted(self.cum, k_safe, side="left") - 1
+        w = jnp.clip(w, 0, self.words.shape[0] - 1)
+        residual = k_safe - self.cum[w]  # 1-indexed within the word
+        word = self.words[w]
+        lane = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+        if word.ndim > 0:
+            lane = lane.reshape((1,) * word.ndim + (WORD_BITS,))
+            word_b = word[..., None]
+            residual_b = residual[..., None]
+        else:
+            word_b = word
+            residual_b = residual
+        bits = (word_b >> lane) & jnp.uint32(1)
+        cs = jnp.cumsum(bits.astype(jnp.int32), axis=-1)
+        # first lane where the cumulative count reaches the residual
+        hit = (cs >= residual_b) & (bits == 1)
+        inword = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+        pos = (w << _WORD_SHIFT) + inword
+        return jnp.where(valid, pos, self.length)
+
+    def select0(self, k: jnp.ndarray) -> jnp.ndarray:
+        """Position of the k-th *zero* bit (k 1-indexed); ``length`` if out
+        of range.  Used by the LOUDS baseline's unary degree sequences.
+        Implemented over the complement cumsum ``32·w − cum[w]``."""
+        k = jnp.asarray(k, jnp.int32)
+        n_words_ = self.words.shape[0]
+        word_idx = jnp.arange(n_words_ + 1, dtype=jnp.int32)
+        cum0 = (word_idx << _WORD_SHIFT) - self.cum  # zeros before word w (incl. padding)
+        # total zeros within logical length:
+        total0 = jnp.int32(self.length) - self.cum[-1]
+        valid = (k >= 1) & (k <= total0)
+        k_safe = jnp.clip(k, 1, jnp.maximum(total0, 1))
+        w = jnp.searchsorted(cum0, k_safe, side="left") - 1
+        w = jnp.clip(w, 0, n_words_ - 1)
+        residual = k_safe - cum0[w]
+        word = ~self.words[w]  # complement: zeros become ones
+        lane = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+        if word.ndim > 0:
+            lane = lane.reshape((1,) * word.ndim + (WORD_BITS,))
+            word_b = word[..., None]
+            residual_b = residual[..., None]
+        else:
+            word_b = word
+            residual_b = residual
+        bits = (word_b >> lane) & jnp.uint32(1)
+        cs = jnp.cumsum(bits.astype(jnp.int32), axis=-1)
+        hit = (cs >= residual_b) & (bits == 1)
+        inword = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+        pos = (w << _WORD_SHIFT) + inword
+        return jnp.where(valid, pos, self.length)
+
+    def get(self, i: jnp.ndarray) -> jnp.ndarray:
+        """Bit at position i (0 for out-of-range)."""
+        i = jnp.asarray(i, jnp.int32)
+        ok = (i >= 0) & (i < self.length)
+        i_safe = jnp.clip(i, 0, self.length - 1 if self.length else 0)
+        w = i_safe >> _WORD_SHIFT
+        r = (i_safe & _WORD_MASK).astype(jnp.uint32)
+        bit = (self.words[w] >> r) & jnp.uint32(1)
+        return jnp.where(ok, bit.astype(jnp.int32), 0)
+
+
+def pack_bits_matrix(bits: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Pack a (n, L) 0/1 matrix row-wise into (n, ceil(L/32)) uint32 words
+    plus per-row popcounts.  Host-side helper for the vertical format."""
+    bits = np.asarray(bits, dtype=np.uint8)
+    n, L = bits.shape
+    n_words = (L + WORD_BITS - 1) // WORD_BITS
+    padded = np.zeros((n, n_words * WORD_BITS), dtype=np.uint8)
+    padded[:, :L] = bits
+    lanes = padded.reshape(n, n_words, WORD_BITS)
+    weights = (1 << np.arange(WORD_BITS, dtype=np.uint64)).astype(np.uint64)
+    words = (lanes.astype(np.uint64) * weights).sum(axis=2).astype(np.uint32)
+    return words, lanes.sum(axis=(1, 2)).astype(np.int32)

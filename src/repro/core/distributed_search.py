@@ -1,0 +1,435 @@
+"""Sharded bST similarity search — the paper's technique at pod scale.
+
+The database of n sketches is split over the mesh's data axes; every
+device owns a *local* bST over its n/D shard and answers every query
+against it (classic sharded-retrieval: queries replicated, index
+sharded, result masks concatenated).  Index build stays embarrassingly
+parallel — a lost shard re-sketches and rebuilds 1/D of the database
+(the fault-tolerance story for the retrieval plane).
+
+SPMD constraint and the adaptation it forces (DESIGN.md §2): one program
+must serve every shard, so per-shard tries must share
+  * a COMMON static layer plan (dense span, TABLE/LIST choice per level,
+    collapse level ℓ_s) — computed from aggregate statistics; because
+    b-bit sketches are uniformly random (the paper's own observation,
+    §V), per-shard density profiles are nearly identical and the common
+    plan is near-optimal for every shard; and
+  * COMMON array shapes — per-shard encodings are zero-padded to the
+    max across shards and stacked on a leading shard axis; true sizes
+    travel as int32 *data* (t_prev per level, t_L, n_local), and every
+    children() variant takes them as traced scalars.
+
+``make_sharded_searcher`` returns a jit-able f(db_arrays, queries) whose
+in_shardings place the shard axis on the mesh data axes — under GSPMD
+each device computes exactly its local trie traversal, and the only
+collective is the final result all-gather.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from .bitvector import BitVector
+from .bst import BIG
+from .cost_model import frontier_capacities
+from .hamming import pack_vertical, pack_vertical_jax
+from .trie_builder import TrieLevels, build_trie_levels, pick_layers, table_or_list
+
+WORD_SHIFT = 5
+WORD_MASK = 31
+
+
+# ---------------------------------------------------------------------------
+# dynamic-size rank/select on padded (words, cum) pairs
+# ---------------------------------------------------------------------------
+
+def _rank(words: jnp.ndarray, cum: jnp.ndarray, i: jnp.ndarray,
+          length: jnp.ndarray) -> jnp.ndarray:
+    i = jnp.clip(i.astype(jnp.int32), 0, length)
+    w = i >> WORD_SHIFT
+    r = i & WORD_MASK
+    base = cum[w]
+    word = words[jnp.minimum(w, words.shape[0] - 1)]
+    mask = jnp.where(r > 0, (jnp.uint32(1) << r.astype(jnp.uint32))
+                     - 1, jnp.uint32(0))
+    partial = jax.lax.population_count(word & mask).astype(jnp.int32)
+    return base + jnp.where(r > 0, partial, 0)
+
+
+def _select(words: jnp.ndarray, cum: jnp.ndarray, k: jnp.ndarray,
+            length: jnp.ndarray) -> jnp.ndarray:
+    """Position of the k-th one (1-indexed); ``length`` when out of range
+    (note: *dynamic* length, not the padded array length)."""
+    k = k.astype(jnp.int32)
+    total = _rank(words, cum, length, length)
+    valid = (k >= 1) & (k <= total)
+    k_safe = jnp.clip(k, 1, jnp.maximum(total, 1))
+    w = jnp.searchsorted(cum, k_safe, side="left") - 1
+    w = jnp.clip(w, 0, words.shape[0] - 1)
+    residual = k_safe - cum[w]
+    word = words[w]
+    lane = jnp.arange(32, dtype=jnp.uint32)
+    lane = lane.reshape((1,) * word.ndim + (32,))
+    bits = (word[..., None] >> lane) & jnp.uint32(1)
+    cs = jnp.cumsum(bits.astype(jnp.int32), axis=-1)
+    hit = (cs >= residual[..., None]) & (bits == 1)
+    inword = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+    pos = (w << WORD_SHIFT) + inword
+    return jnp.where(valid, pos, length)
+
+
+# ---------------------------------------------------------------------------
+# stacked, padded index container
+# ---------------------------------------------------------------------------
+
+class ShardedLevel(NamedTuple):
+    kind: str                      # static: "dense" | "table" | "list"
+    words: Optional[jnp.ndarray]   # (S, Wmax) uint32 (table: H; list: B)
+    cum: Optional[jnp.ndarray]     # (S, Wmax+1) int32
+    labels: Optional[jnp.ndarray]  # (S, Tmax) uint8 (list only)
+
+
+class ShardedBST(NamedTuple):
+    levels: Tuple[ShardedLevel, ...]
+    t: jnp.ndarray            # (S, L+1) int32 true node counts per level
+    paths_vert: jnp.ndarray   # (S, b, Wsfx, tLmax) uint32
+    d_words: jnp.ndarray      # (S, WD) uint32  — leftmost-leaf bitvector
+    d_cum: jnp.ndarray        # (S, WD+1) int32
+    leaf_root: jnp.ndarray    # (S, tLmax) int32 (t_root sentinel on pads)
+    id_leaf: jnp.ndarray      # (S, n_max) int32 (leaf idx per local id)
+    n_local: jnp.ndarray      # (S,) int32
+    shard_of: np.ndarray      # (n,) host-side: global id -> shard
+    pos_of: np.ndarray        # (n,) host-side: global id -> local position
+    # static metadata (identical across shards)
+    L: int
+    b: int
+    lm: int
+    ls: int
+    kinds: Tuple[str, ...]
+    n_max: int
+    max_leaves_per_root: int
+
+
+def _pad_to(arr: np.ndarray, n: int, fill=0) -> np.ndarray:
+    pad = n - arr.shape[0]
+    if pad <= 0:
+        return arr
+    return np.concatenate(
+        [arr, np.full((pad,) + arr.shape[1:], fill, arr.dtype)])
+
+
+def build_sharded_bst(sketches: np.ndarray, b: int, n_shards: int,
+                      lam: float = 0.5) -> ShardedBST:
+    n, L = sketches.shape
+    shard_of = (np.arange(n) % n_shards).astype(np.int64)
+    tries: List[TrieLevels] = []
+    locals_: List[np.ndarray] = []
+    pos_of = np.zeros(n, np.int64)
+    for s in range(n_shards):
+        ids = np.flatnonzero(shard_of == s)
+        pos_of[ids] = np.arange(len(ids))
+        locals_.append(ids)
+        tries.append(build_trie_levels(sketches[ids], b))
+
+    # common layer plan from aggregate stats
+    agg_t = [sum(tr.t[lev] for tr in tries) for lev in range(L + 1)]
+    lm = 0
+    A = 1 << b
+    while lm + 1 <= L and agg_t[lm + 1] == n_shards * (A ** (lm + 1)):
+        lm += 1
+    ls = L
+    while ls - 1 >= lm and agg_t[L] / max(agg_t[ls - 1], 1) < 1.0 / lam:
+        ls -= 1
+    ls = max(ls, lm)
+    kinds: List[str] = []
+    for lev in range(1, ls + 1):
+        if lev <= lm:
+            kinds.append("dense")
+        elif agg_t[lev] * (b + 1) < agg_t[lev - 1] * A:
+            kinds.append("list")
+        else:
+            kinds.append("table")
+
+    levels: List[ShardedLevel] = []
+    for lev in range(1, ls + 1):
+        kind = kinds[lev - 1]
+        if kind == "dense":
+            levels.append(ShardedLevel("dense", None, None, None))
+            continue
+        words_l, cum_l, labels_l = [], [], []
+        for tr in tries:
+            if kind == "table":
+                bits = np.zeros(A * tr.t[lev - 1], dtype=np.uint8)
+                pos = tr.parents[lev] * A + tr.labels[lev].astype(np.int64)
+                bits[pos] = 1
+                bv = BitVector.from_bits(bits)
+                labels_l.append(np.zeros(1, np.uint8))
+            else:
+                par = tr.parents[lev]
+                first = (np.concatenate([[True], par[1:] != par[:-1]])
+                         if len(par) > 1 else np.ones(len(par), bool))
+                bv = BitVector.from_bits(first.astype(np.uint8))
+                labels_l.append(np.asarray(tr.labels[lev]))
+            words_l.append(np.asarray(bv.words))
+            cum_l.append(np.asarray(bv.cum))
+        wmax = max(w.shape[0] for w in words_l)
+        tmax = max(l.shape[0] for l in labels_l)
+        words = np.stack([_pad_to(w, wmax) for w in words_l])
+        cum = np.stack([_pad_to(c, wmax + 1, fill=c[-1]) for c in cum_l])
+        labels = np.stack([_pad_to(l, tmax) for l in labels_l])
+        levels.append(ShardedLevel(
+            kind, jnp.asarray(words), jnp.asarray(cum),
+            jnp.asarray(labels) if kind == "list" else None))
+
+    # sparse tail
+    sfx = L - ls
+    tl_max = max(tr.t[L] for tr in tries)
+    n_max = max(len(ids) for ids in locals_)
+    paths, dwords, dcums, leafroots, idleafs = [], [], [], [], []
+    for tr in tries:
+        t_L = tr.t[L]
+        if sfx > 0:
+            planes = pack_vertical(tr.uniq[:, ls:], b)      # (t_L, b, W)
+            pv = np.transpose(planes, (1, 2, 0))            # (b, W, t_L)
+        else:
+            pv = np.zeros((b, 1, t_L), np.uint32)
+        pv = np.concatenate(
+            [pv, np.zeros(pv.shape[:2] + (tl_max - t_L,), np.uint32)], -1)
+        paths.append(pv)
+        lr = tr.node_of_leaf[ls]
+        d_bits = (np.concatenate([[1], (lr[1:] != lr[:-1]).astype(np.uint8)])
+                  if t_L > 1 else np.ones(t_L, np.uint8))
+        bv = BitVector.from_bits(d_bits)
+        dwords.append(np.asarray(bv.words))
+        dcums.append(np.asarray(bv.cum))
+        leafroots.append(_pad_to(np.asarray(lr, np.int32), tl_max,
+                                 fill=tr.t[ls]))
+        idleafs.append(_pad_to(np.asarray(tr.id_leaf, np.int32), n_max))
+    wd = max(w.shape[0] for w in dwords)
+    t_mat = np.stack([np.asarray(tr.t, np.int32) for tr in tries])
+    max_lpr = 1
+    for tr in tries:
+        lr = tr.node_of_leaf[ls]
+        if len(lr):
+            max_lpr = max(max_lpr, int(np.bincount(lr).max()))
+
+    return ShardedBST(
+        levels=tuple(levels),
+        t=jnp.asarray(t_mat),
+        paths_vert=jnp.asarray(np.stack(paths)),
+        d_words=jnp.asarray(np.stack([_pad_to(w, wd) for w in dwords])),
+        d_cum=jnp.asarray(np.stack([_pad_to(c, wd + 1, fill=c[-1])
+                                    for c in dcums])),
+        leaf_root=jnp.asarray(np.stack(leafroots)),
+        id_leaf=jnp.asarray(np.stack(idleafs)),
+        n_local=jnp.asarray([len(ids) for ids in locals_], jnp.int32),
+        shard_of=shard_of, pos_of=pos_of,
+        L=L, b=b, lm=lm, ls=ls, kinds=tuple(kinds), n_max=n_max,
+        max_leaves_per_root=max_lpr)
+
+
+# ---------------------------------------------------------------------------
+# single-shard traced search with dynamic sizes
+# ---------------------------------------------------------------------------
+
+def _children_dense(u, b):
+    A = 1 << b
+    c = jnp.arange(A, dtype=jnp.int32)[None, :]
+    ids = u[:, None] * A + c
+    return ids, jnp.broadcast_to(c, ids.shape), jnp.ones(ids.shape, bool)
+
+
+def _children_table(words, cum, u, t_prev, b):
+    A = 1 << b
+    c = jnp.arange(A, dtype=jnp.int32)[None, :]
+    u_safe = jnp.clip(u, 0, jnp.maximum(t_prev - 1, 0))
+    pos = u_safe[:, None] * A + c
+    length = t_prev * A
+    w = pos >> WORD_SHIFT
+    r = (pos & WORD_MASK).astype(jnp.uint32)
+    bit = (words[jnp.minimum(w, words.shape[0] - 1)] >> r) & jnp.uint32(1)
+    exists = (bit == 1) & (pos < length)
+    ids = _rank(words, cum, pos, length)
+    return ids, jnp.broadcast_to(c, ids.shape), exists
+
+
+def _children_list(words, cum, labels, u, t_prev, t_cur, b):
+    A = 1 << b
+    u_safe = jnp.clip(u, 0, jnp.maximum(t_prev - 1, 0))
+    length = jnp.int32(words.shape[0] * 32)
+    start = _select(words, cum, u_safe + 1, length)
+    end = jnp.minimum(_select(words, cum, u_safe + 2, length), t_cur)
+    j = jnp.arange(A, dtype=jnp.int32)[None, :]
+    ids = start[:, None] + j
+    exists = ids < end[:, None]
+    lab = labels[jnp.clip(ids, 0, labels.shape[0] - 1)].astype(jnp.int32)
+    return ids, lab, exists
+
+
+def _compact(ids, dists, valid, capacity):
+    pos = jnp.cumsum(valid) - 1
+    slot = jnp.where(valid & (pos < capacity), pos, capacity)
+    out_ids = jnp.zeros((capacity + 1,), jnp.int32).at[slot].set(
+        ids, mode="drop")
+    out_dists = jnp.full((capacity + 1,), BIG, jnp.int32).at[slot].set(
+        dists, mode="drop")
+    total = jnp.where(valid.shape[0] > 0, pos[-1] + 1, 0).astype(jnp.int32)
+    kept = jnp.minimum(total, capacity)
+    out_valid = jnp.arange(capacity + 1, dtype=jnp.int32) < kept
+    overflow = jnp.maximum(total - capacity, 0)
+    return out_ids[:capacity], out_dists[:capacity], out_valid[:capacity], overflow
+
+
+def _shard_search(index: ShardedBST, shard_levels, shard_t, paths_vert,
+                  d_words, d_cum, leaf_root, id_leaf, n_local,
+                  q: jnp.ndarray, tau: int, caps,
+                  verify: str = "scan"):
+    """One shard, one query -> (n_max,) bool local mask.
+
+    ``verify``: "scan" streams EVERY collapsed suffix path past the query
+    (pruning = masking — the original TPU adaptation);  "gather" (§Perf
+    P7) restores the paper's pruning to the verification stage: only the
+    leaves under *surviving* ℓ_s roots are gathered into a fixed-capacity
+    candidate buffer and verified — the dominant bytes term drops by the
+    pruned fraction.
+    """
+    q = q.astype(jnp.int32)
+    ids = jnp.zeros((1,), jnp.int32)
+    dists = jnp.zeros((1,), jnp.int32)
+    valid = jnp.ones((1,), bool)
+    overflow = jnp.int32(0)
+    b = index.b
+    for lev in range(1, index.ls + 1):
+        kind = index.kinds[lev - 1]
+        lv = shard_levels[lev - 1]
+        t_prev = shard_t[lev - 1]
+        t_cur = shard_t[lev]
+        if kind == "dense":
+            c_ids, c_lab, c_ex = _children_dense(ids, b)
+        elif kind == "table":
+            c_ids, c_lab, c_ex = _children_table(
+                lv[0], lv[1], ids, t_prev, b)
+        else:
+            c_ids, c_lab, c_ex = _children_list(
+                lv[0], lv[1], lv[2], ids, t_prev, t_cur, b)
+        c_d = dists[:, None] + (c_lab != q[lev - 1]).astype(jnp.int32)
+        c_v = valid[:, None] & c_ex & (c_d <= tau)
+        ids, dists, valid, ov = _compact(
+            c_ids.reshape(-1), c_d.reshape(-1), c_v.reshape(-1), caps[lev])
+        overflow = overflow + ov
+
+    t_L = shard_t[index.L]
+    t_Lmax = index.paths_vert.shape[-1]
+    sfx = index.L - index.ls
+    q_sfx = (pack_vertical_jax(q[index.ls:][None], b)[0] if sfx > 0 else None)
+
+    if verify == "gather":
+        # leaf range per surviving root from the leftmost-leaf bitvector
+        safe = jnp.where(valid, ids, 0)
+        start = _select(d_words, d_cum, safe + 1, t_L)      # (F,)
+        end = jnp.minimum(_select(d_words, d_cum, safe + 2, t_L), t_L)
+        counts = jnp.where(valid, jnp.maximum(end - start, 0), 0)
+        prefix = jnp.cumsum(counts)                          # inclusive
+        total = prefix[-1]
+        cap_v = min(t_Lmax, caps[index.ls] * index.max_leaves_per_root)
+        slots = jnp.arange(cap_v, dtype=jnp.int32)
+        root_idx = jnp.searchsorted(prefix, slots, side="right")
+        root_idx = jnp.clip(root_idx, 0, start.shape[0] - 1)
+        excl = prefix[root_idx] - counts[root_idx]
+        leaf = start[root_idx] + (slots - excl)
+        ok = slots < jnp.minimum(total, cap_v)
+        leaf_safe = jnp.clip(leaf, 0, t_Lmax - 1)
+        overflow = overflow + jnp.maximum(total - cap_v, 0)
+        base = jnp.where(ok, dists[root_idx], BIG)
+        if sfx > 0:
+            cand = paths_vert[:, :, leaf_safe]               # (b, W, cap_v)
+            hit = ops.sparse_verify(cand, q_sfx, base, tau=tau,
+                                    use_kernel=False) > 0
+        else:
+            hit = base <= tau
+        survive = jnp.zeros((t_Lmax,), bool)
+        survive = survive.at[jnp.where(ok, leaf_safe, t_Lmax)].max(
+            hit & ok, mode="drop")
+    else:
+        base_root = jnp.full((t_Lmax + 1,), BIG, jnp.int32)
+        safe = jnp.where(valid, ids, 0)
+        base_root = base_root.at[safe].min(jnp.where(valid, dists, BIG),
+                                           mode="drop")
+        base_leaf = base_root[jnp.clip(leaf_root, 0, base_root.shape[0] - 1)]
+        lanes = jnp.arange(t_Lmax)
+        base_leaf = jnp.where(lanes < t_L, base_leaf, BIG)
+        if sfx > 0:
+            survive = ops.sparse_verify(paths_vert, q_sfx, base_leaf,
+                                        tau=tau, use_kernel=False) > 0
+        else:
+            survive = base_leaf <= tau
+    mask = survive[jnp.clip(id_leaf, 0, survive.shape[0] - 1)]
+    return mask & (jnp.arange(index.n_max) < n_local), overflow
+
+
+def expected_caps(t: Tuple[int, ...], b: int, tau: int,
+                  safety: int = 16, floor: int = 64) -> Tuple[int, ...]:
+    """Expected-case frontier capacities (§Perf P8): for uniform sketches
+    the expected level-ℓ frontier is t_ℓ · sigs(b, ℓ, τ) / A^ℓ — orders of
+    magnitude below the worst-case sigs bound that ``frontier_capacities``
+    allocates.  Exactness is preserved by the overflow counter + host
+    retry ladder (the same discipline as core.search)."""
+    import math
+    A = 1 << b
+    caps = [1]
+    for lev in range(1, len(t)):
+        exp = t[lev] * min(
+            sum(math.comb(lev, k) * (A - 1) ** k for k in range(tau + 1))
+            / float(A) ** lev, 1.0)
+        caps.append(int(min(t[lev], max(floor, safety * math.ceil(exp)))))
+    return tuple(caps)
+
+
+def make_sharded_searcher(index: ShardedBST, tau: int,
+                          cap_max: int = 1 << 14, verify: str = "scan",
+                          caps_mode: str = "worst"):
+    """Returns jitted f(queries (m, L)) -> (m, S, n_max) bool masks.
+    The shard axis vmaps — under jit-with-shardings it partitions over
+    the mesh data axes (each device runs only its own shard's trie)."""
+    t_max = tuple(int(x) for x in np.asarray(index.t).max(axis=0))
+    if caps_mode == "expected":
+        caps = expected_caps(t_max, index.b, tau)
+    else:
+        caps = frontier_capacities(t_max, index.b, tau, cap_max)
+    level_arrays = tuple(
+        (lv.words, lv.cum, lv.labels) if lv.kind == "list"
+        else (lv.words, lv.cum) if lv.kind == "table" else ()
+        for lv in index.levels)
+
+    def one_shard(levels, t_row, pv, dw, dc, lr, il, nl, q):
+        return _shard_search(index, levels, t_row, pv, dw, dc, lr, il, nl,
+                             q, tau, caps, verify=verify)
+
+    def search(queries):
+        def per_query(q):
+            return jax.vmap(
+                lambda levels, t_row, pv, dw, dc, lr, il, nl: one_shard(
+                    levels, t_row, pv, dw, dc, lr, il, nl, q)
+            )(level_arrays, index.t, index.paths_vert, index.d_words,
+              index.d_cum, index.leaf_root, index.id_leaf, index.n_local)
+        masks, overflows = jax.vmap(per_query)(queries)
+        return masks, overflows.sum()
+
+    return jax.jit(search)
+
+
+def gather_ids(index: ShardedBST, masks: np.ndarray) -> List[np.ndarray]:
+    """(m, S, n_max) masks -> per-query arrays of global ids."""
+    out = []
+    n = index.shard_of.shape[0]
+    # global id -> (shard, pos) lookup is host-side metadata
+    for qmask in masks:
+        hit = qmask[index.shard_of, index.pos_of]
+        out.append(np.flatnonzero(hit))
+    return out

@@ -1,0 +1,109 @@
+"""Vertical-format bit-parallel Hamming distance (paper §V-C).
+
+A b-bit sketch of length L over Σ=[0, 2^b) is transposed into *b bit
+planes*: plane ``i`` holds the i-th significant bit of every character,
+packed LSB-first into ``ceil(L/32)`` uint32 words.  Two sketches differ at a
+position iff *any* plane differs there, so
+
+    bits  = OR_{i<b} ( s'[i] XOR q'[i] )
+    ham   = popcount(bits)
+
+which costs O(b·ceil(L/32)) word ops instead of O(L) character compares.
+The paper measured >10x over the naive loop on CPU; on TPU the same layout
+is the difference between an int8 gather-compare per character and a dense
+uint32 VPU stream — the Pallas kernel in ``repro.kernels`` consumes exactly
+this layout.
+
+Conventions: characters are 0-indexed (``[0, 2^b)``) internally; the paper
+writes Σ=[1, 2^b].  This is a pure relabeling and keeps arrays compact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+
+
+def n_words(L: int) -> int:
+    return (L + WORD_BITS - 1) // WORD_BITS
+
+
+def pack_vertical(sketches: np.ndarray, b: int) -> np.ndarray:
+    """(n, L) uint8/int sketches -> (n, b, W) uint32 bit planes (host-side).
+
+    Index order (n, b, W) keeps a single sketch's planes contiguous, which
+    is the layout the verification kernel streams.
+    """
+    sketches = np.asarray(sketches)
+    if sketches.ndim == 1:
+        sketches = sketches[None, :]
+    n, L = sketches.shape
+    W = n_words(L)
+    assert sketches.max(initial=0) < (1 << b), "character out of alphabet range"
+    planes = np.zeros((n, b, W), dtype=np.uint32)
+    pos = np.arange(L)
+    word_idx = pos // WORD_BITS
+    bit_idx = (pos % WORD_BITS).astype(np.uint32)
+    for i in range(b):
+        plane_bits = ((sketches >> i) & 1).astype(np.uint32)  # (n, L)
+        # scatter-add each bit into its word
+        contrib = plane_bits << bit_idx  # (n, L)
+        for w in range(W):
+            sel = word_idx == w
+            if sel.any():
+                planes[:, i, w] = contrib[:, sel].sum(axis=1, dtype=np.uint64).astype(np.uint32)
+    return planes
+
+
+def pack_vertical_jax(sketches: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Traceable version of :func:`pack_vertical` — used when sketches are
+    produced on-device (e.g. dedup inside the data pipeline)."""
+    if sketches.ndim == 1:
+        sketches = sketches[None, :]
+    n, L = sketches.shape
+    W = n_words(L)
+    pad = W * WORD_BITS - L
+    s = jnp.pad(sketches.astype(jnp.uint32), ((0, 0), (0, pad)))
+    s = s.reshape(n, W, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+
+    def plane(i):
+        bits = (s >> jnp.uint32(i)) & jnp.uint32(1)
+        return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)  # (n, W)
+
+    planes = jnp.stack([plane(i) for i in range(b)], axis=1)  # (n, b, W)
+    return planes
+
+
+@jax.jit
+def hamming_vertical(db_planes: jnp.ndarray, q_planes: jnp.ndarray) -> jnp.ndarray:
+    """Hamming distances between every DB sketch and one query.
+
+    db_planes: (n, b, W) uint32;  q_planes: (b, W) uint32  ->  (n,) int32.
+    """
+    diff = db_planes ^ q_planes[None, :, :]  # (n, b, W)
+    acc = diff[:, 0, :]
+    for i in range(1, diff.shape[1]):  # b is static under jit
+        acc = acc | diff[:, i, :]
+    pops = jax.lax.population_count(acc).astype(jnp.int32)
+    return pops.sum(axis=-1)
+
+
+def hamming_vertical_many(db_planes: jnp.ndarray, q_planes: jnp.ndarray) -> jnp.ndarray:
+    """(n, b, W) x (m, b, W) -> (m, n) distances, vmapped over queries."""
+    return jax.vmap(lambda q: hamming_vertical(db_planes, q))(q_planes)
+
+
+def hamming_naive(db: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Character-by-character O(L) reference (paper's 'naive approach')."""
+    return (db != q[None, :]).sum(axis=-1).astype(jnp.int32)
+
+
+def hamming_pairwise_naive(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(m, L) x (n, L) -> (m, n) distances, the brute-force oracle."""
+    return (a[:, None, :] != b[None, :, :]).sum(axis=-1).astype(jnp.int32)

@@ -1,0 +1,154 @@
+"""MI-bST: the multi-index approach with bST as each block's inverted index
+(paper §III-B, §VI-C).
+
+The sketch is split into ``m`` disjoint blocks; block j gets its own bST
+built over the block *substrings* (deduplication within a block is what
+makes the per-block tries small), searched with the pigeonhole threshold
+τ^j = ⌊τ/m⌋.  A candidate is any id surviving in ≥ 1 block; verification
+re-checks the full-length Hamming distance with the Pallas kernel over the
+compacted candidate set (fixed capacity from the cost model + overflow
+ladder — same static-shape discipline as the frontier).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cost_model
+from .bst import BIG, SketchIndex, build_bst
+from .hamming import pack_vertical, pack_vertical_jax
+from .search import _compact, _search_trace
+from ..kernels import ops
+
+
+class MultiSearchResult(NamedTuple):
+    mask: jnp.ndarray        # (n,) bool final solutions
+    candidates: jnp.ndarray  # int32 — |∪ C^j| before verification
+    overflow: jnp.ndarray    # int32 — frontier + candidate-capacity drops
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class MultiIndex:
+    blocks: Tuple[SketchIndex, ...]
+    full_vert: jnp.ndarray          # (b, W, n) — verification layout
+    bounds: Tuple[Tuple[int, int], ...]
+    L: int
+    b: int
+    n: int
+
+    def tree_flatten(self):
+        return (self.blocks, self.full_vert), (self.bounds, self.L, self.b, self.n)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    def model_bits(self) -> int:
+        return sum(blk.model_bits() for blk in self.blocks) \
+            + int(self.full_vert.size) * 32
+
+    def array_bytes(self) -> int:
+        return sum(blk.array_bytes() for blk in self.blocks) \
+            + int(self.full_vert.nbytes)
+
+
+def build_multi_index(sketches: np.ndarray, b: int, m: int,
+                      lam: float = 0.5) -> MultiIndex:
+    sketches = np.asarray(sketches, dtype=np.uint8)
+    n, L = sketches.shape
+    lens = cost_model._block_lengths(L, m)
+    bounds = []
+    lo = 0
+    blocks = []
+    for Lj in lens:
+        hi = lo + Lj
+        blocks.append(build_bst(sketches[:, lo:hi], b, lam))
+        bounds.append((lo, hi))
+        lo = hi
+    planes = pack_vertical(sketches, b)                 # (n, b, W)
+    full_vert = jnp.asarray(np.transpose(planes, (1, 2, 0)).copy())
+    return MultiIndex(blocks=tuple(blocks), full_vert=full_vert,
+                      bounds=tuple(bounds), L=L, b=b, n=n)
+
+
+def candidate_capacity(mi: MultiIndex, tau: int, safety: int = 8,
+                       cap_max: int = 1 << 20) -> int:
+    """Static capacity for the verification gather, from the Appendix-A
+    candidate estimate |C^j| = sigs(b, L^j, τ^j)·n/(2^b)^{L^j}."""
+    est = 1.0
+    taus = cost_model.block_thresholds(tau, len(mi.blocks))
+    for (lo, hi), tj in zip(mi.bounds, taus):
+        Lj = hi - lo
+        est += min(cost_model.sigs(mi.b, Lj, tj) * mi.n / float(1 << mi.b) ** Lj, mi.n)
+    return int(min(max(est * safety, 1024), min(cap_max, mi.n)))
+
+
+def _mi_search_trace(mi: MultiIndex, q: jnp.ndarray, *, tau: int,
+                     caps_per_block, cand_cap: int) -> MultiSearchResult:
+    q = q.astype(jnp.int32)
+    taus = cost_model.block_thresholds(tau, len(mi.blocks))
+    cand_mask = jnp.zeros((mi.n,), bool)
+    overflow = jnp.int32(0)
+    for blk, (lo, hi), tj, caps in zip(mi.blocks, mi.bounds, taus, caps_per_block):
+        res = _search_trace(blk, q[lo:hi], tau=tj, caps=caps)
+        cand_mask = cand_mask | res.mask
+        overflow = overflow + res.overflow
+
+    n_cand = cand_mask.sum(dtype=jnp.int32)
+    ids, _, cvalid, ov = _compact(jnp.arange(mi.n, dtype=jnp.int32),
+                                  jnp.zeros((mi.n,), jnp.int32),
+                                  cand_mask, cand_cap)
+    overflow = overflow + ov
+    cand_vert = mi.full_vert[:, :, jnp.where(cvalid, ids, 0)]   # (b, W, C)
+    q_vert = pack_vertical_jax(q[None], mi.b)[0]                 # (b, W)
+    dist = ops.hamming_distances(cand_vert, q_vert[..., None])[0]  # (C,)
+    ok = cvalid & (dist <= tau)
+    mask = jnp.zeros((mi.n,), bool).at[jnp.where(cvalid, ids, 0)].max(ok, mode="drop")
+    return MultiSearchResult(mask=mask, candidates=n_cand, overflow=overflow)
+
+
+def make_mi_searcher(mi: MultiIndex, tau: int, cap_max: int = 1 << 17,
+                     cand_cap: int | None = None):
+    taus = cost_model.block_thresholds(tau, len(mi.blocks))
+    caps_per_block = tuple(
+        cost_model.frontier_capacities(blk.t, blk.b, tj, cap_max)
+        for blk, tj in zip(mi.blocks, taus))
+    cc = cand_cap if cand_cap is not None else candidate_capacity(mi, tau)
+
+    @jax.jit
+    def run(q):
+        return _mi_search_trace(mi, q, tau=tau, caps_per_block=caps_per_block,
+                                cand_cap=cc)
+
+    return run
+
+
+def mi_search(mi: MultiIndex, q: np.ndarray, tau: int) -> MultiSearchResult:
+    """Host wrapper with the overflow ladder."""
+    q = jnp.asarray(q)
+    cap_max, cand_cap = 1 << 15, candidate_capacity(mi, tau)
+    while True:
+        res = make_mi_searcher(mi, tau, cap_max, cand_cap)(q)
+        if int(res.overflow) == 0 or (cap_max >= 1 << 22 and cand_cap >= mi.n):
+            return res
+        cap_max *= 4
+        cand_cap = min(cand_cap * 4, mi.n)
+
+
+def choose_plan(b: int, L: int, tau: int, n: int,
+                ms: Tuple[int, ...] = (2, 3, 4)) -> Tuple[str, int]:
+    """Cost-model auto-tuner: single- vs multi-index and the block count.
+    Mirrors the paper's finding (SI fastest for τ<=4, MI competitive at 5)."""
+    best = ("single", 1)
+    best_cost = cost_model.cost_single(b, L, tau, n)
+    for m in ms:
+        c = cost_model.cost_multi(b, L, tau, n, m)
+        if c < best_cost:
+            best, best_cost = ("multi", m), c
+    return best

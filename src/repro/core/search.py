@@ -1,0 +1,134 @@
+"""Level-synchronous similarity search over a SketchIndex (paper Alg. 1,
+re-derived for TPU — see DESIGN.md §2).
+
+The paper's recursive DFS visits one node at a time and prunes a subtree
+when the accumulated Hamming distance exceeds τ.  Here the *whole frontier
+at level ℓ* is a fixed-capacity array of (node id, distance) pairs; one
+step expands every node's ≤ 2^b children with one vectorized ``children``
+call, masks out children with dist > τ (the paper's pruning), and
+compacts survivors with a cumsum-scatter.  The sparse tail is *not*
+traversed: pruned ℓ_s-subtries get a +∞ base distance and the Pallas
+verify kernel streams every collapsed suffix path in one masked scan —
+pruning becomes masking, pointer work becomes bandwidth.
+
+Static shapes: frontier capacities come from the cost model
+(min(t_ℓ, sigs(b,ℓ,τ), cap_max)).  Exceeding ``cap_max`` is detected and
+reported; the host wrapper retries on a doubled ladder (production: one
+compiled searcher per (index, τ) pair, the common case never overflows).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bst import BIG, SketchIndex
+from .cost_model import frontier_capacities
+from .hamming import pack_vertical_jax
+from ..kernels import ops
+
+
+class SearchResult(NamedTuple):
+    mask: jnp.ndarray        # (n,) bool — ids within τ of the query
+    overflow: jnp.ndarray    # int32 — dropped frontier entries (0 = exact)
+    traversed: jnp.ndarray   # int32 — Σ frontier sizes (paper's t_tra)
+
+
+def _compact(ids: jnp.ndarray, dists: jnp.ndarray, valid: jnp.ndarray,
+             capacity: int):
+    """Stable masked compaction into a fixed-size frontier."""
+    pos = jnp.cumsum(valid) - 1
+    total = jnp.where(valid.shape[0] > 0, pos[-1] + 1, 0).astype(jnp.int32)
+    slot = jnp.where(valid & (pos < capacity), pos, capacity)
+    out_ids = jnp.zeros((capacity + 1,), jnp.int32).at[slot].set(ids, mode="drop")
+    out_dists = jnp.full((capacity + 1,), BIG, jnp.int32).at[slot].set(dists, mode="drop")
+    kept = jnp.minimum(total, capacity)
+    out_valid = jnp.arange(capacity + 1, dtype=jnp.int32) < kept
+    overflow = jnp.maximum(total - capacity, 0)
+    return out_ids[:capacity], out_dists[:capacity], out_valid[:capacity], overflow
+
+
+def _search_trace(index: SketchIndex, q: jnp.ndarray, *, tau: int,
+                  caps: Tuple[int, ...]) -> SearchResult:
+    """Traced search body.  ``q``: (L,) uint8/int32 query sketch."""
+    q = q.astype(jnp.int32)
+    ids = jnp.zeros((1,), jnp.int32)
+    dists = jnp.zeros((1,), jnp.int32)
+    valid = jnp.ones((1,), bool)
+    overflow = jnp.int32(0)
+    traversed = jnp.int32(1)
+
+    depth = len(index.levels)
+    for lev in range(1, depth + 1):
+        enc = index.levels[lev - 1]
+        c_ids, c_labels, c_exists = enc.children(ids)            # (F, A)
+        c_dists = dists[:, None] + (c_labels != q[lev - 1]).astype(jnp.int32)
+        c_valid = valid[:, None] & c_exists & (c_dists <= tau)
+        ids, dists, valid, ov = _compact(
+            c_ids.reshape(-1), c_dists.reshape(-1), c_valid.reshape(-1),
+            caps[lev])
+        overflow = overflow + ov
+        traversed = traversed + valid.sum(dtype=jnp.int32)
+
+    if index.tail is not None:
+        tail = index.tail
+        # scatter frontier distances onto ℓ_s roots (+∞ = pruned subtrie)
+        base_root = jnp.full((tail.t_root,), BIG, jnp.int32)
+        safe_ids = jnp.where(valid, ids, 0)
+        base_root = base_root.at[safe_ids].min(
+            jnp.where(valid, dists, BIG), mode="drop")
+        base_leaf = base_root[tail.leaf_root]                     # (t_L,)
+        if tail.suffix_len > 0:
+            q_sfx = pack_vertical_jax(q[index.ls:][None], index.b)[0]  # (b, W)
+            survive = ops.sparse_verify(tail.paths_vert, q_sfx, base_leaf,
+                                        tau=tau) > 0
+        else:
+            survive = base_leaf <= tau
+    else:
+        # no collapsed tail (LOUDS/FST baselines): frontier is at level L
+        t_L = index.t[index.L]
+        survive = jnp.zeros((t_L,), bool)
+        safe_ids = jnp.where(valid, ids, 0)
+        survive = survive.at[safe_ids].max(valid, mode="drop")
+
+    mask = survive[index.id_leaf]
+    return SearchResult(mask=mask, overflow=overflow, traversed=traversed)
+
+
+def make_searcher(index: SketchIndex, tau: int, cap_max: int = 1 << 17):
+    """Compile a single-query searcher for this (index, τ).  Returns
+    ``fn(q) -> SearchResult`` (jitted, index closed over as constant)."""
+    caps = frontier_capacities(index.t, index.b, tau, cap_max)
+
+    @jax.jit
+    def run(q):
+        return _search_trace(index, q, tau=tau, caps=caps)
+
+    return run
+
+
+def make_batch_searcher(index: SketchIndex, tau: int, cap_max: int = 1 << 17):
+    """vmapped searcher: (m, L) queries -> SearchResult with leading axis."""
+    caps = frontier_capacities(index.t, index.b, tau, cap_max)
+
+    @jax.jit
+    def run(qs):
+        return jax.vmap(lambda q: _search_trace(index, q, tau=tau, caps=caps))(qs)
+
+    return run
+
+
+def search(index: SketchIndex, q: np.ndarray, tau: int,
+           cap_max: int = 1 << 15, max_cap: int = 1 << 22) -> SearchResult:
+    """Host convenience wrapper with the overflow ladder: retries with a
+    doubled capacity until the traversal is exact."""
+    q = jnp.asarray(q)
+    while True:
+        res = make_searcher(index, tau, cap_max)(q)
+        if int(res.overflow) == 0 or cap_max >= max_cap:
+            return res
+        cap_max *= 4

@@ -1,0 +1,121 @@
+"""Similarity-preserving hashing: b-bit minhash and 0-bit CWS (paper §I, §VI-A).
+
+Both hashers map vectorial data to length-L strings over Σ=[0, 2^b) — the
+*b-bit sketches* the index consumes.
+
+* ``bbit_minhash`` [Li & König, WWW'10]: for binary vectors (sets), L
+  independent min-wise hashes; keep the low b bits of each minimum.
+  Collision probability per position ≈ J + (1-J)/2^b for Jaccard J.
+* ``zbit_cws`` [Li, KDD'15]: 0-bit consistent weighted sampling for
+  non-negative (weighted) vectors; per hash, the Ioffe-CWS argmin feature
+  id i* is kept (the "0-bit" trick discards t*); low b bits of i* form the
+  character.  Approximates the min-max kernel.
+
+Everything is pure JAX (jit/vmap/pjit-able) so sketching runs *inside* the
+sharded data pipeline: on a (pod, data, model) mesh each data shard
+sketches its own documents — sketch generation is embarrassingly parallel
+and needs no collectives.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+def _mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3 finalizer on uint32 — a strong bijective mixer; uint32
+    wraparound multiplies keep everything in 32-bit lanes (no x64 needed)."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _hash_params(key: jax.Array, L: int):
+    ka, kb = jax.random.split(key)
+    a = jax.random.randint(ka, (L,), 1, jnp.iinfo(jnp.int32).max, dtype=jnp.uint32) | jnp.uint32(1)
+    b = jax.random.randint(kb, (L,), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.uint32)
+    return a, b
+
+
+@functools.partial(jax.jit, static_argnames=("L", "b"))
+def bbit_minhash(key: jax.Array, items: jnp.ndarray, mask: jnp.ndarray, *, L: int, b: int) -> jnp.ndarray:
+    """b-bit minhash of a batch of sets.
+
+    items: (batch, max_items) int32 feature ids (padded);
+    mask:  (batch, max_items) bool validity;
+    returns (batch, L) uint8 sketches over [0, 2^b).
+    """
+    a, c = _hash_params(key, L)
+    x = items.astype(jnp.uint32)  # (batch, m)
+    # h_j(x) = mix32(a_j * x + c_j)  — broadcast to (batch, m, L)
+    hashed = _mix32(x[:, :, None] * a[None, None, :] + c[None, None, :])
+    big = jnp.uint32(0xFFFFFFFF)
+    hashed = jnp.where(mask[:, :, None], hashed, big)
+    mins = hashed.min(axis=1)  # (batch, L)
+    return (mins & jnp.uint32((1 << b) - 1)).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("L", "b"))
+def zbit_cws(key: jax.Array, weights: jnp.ndarray, *, L: int, b: int) -> jnp.ndarray:
+    """0-bit consistent weighted sampling of non-negative weighted vectors.
+
+    weights: (batch, dim) float, >= 0; returns (batch, L) uint8 sketches.
+
+    Ioffe-CWS per hash j and feature i:
+      r, c ~ Gamma(2,1), beta ~ U(0,1)   (fixed per (j, i))
+      t = floor(ln w_i / r + beta); ln y = r (t - beta); ln a = ln c - ln y - r
+      k* = argmin_i ln a_i ;   0-bit: emit k* (low b bits)
+    Features with w=0 are excluded via +inf.
+    """
+    batch, dim = weights.shape
+    kr, kc, kb = jax.random.split(key, 3)
+    # Gamma(2,1) = sum of two Exp(1); cheap and exact.
+    r = (jax.random.exponential(kr, (2, L, dim)).sum(0)).astype(jnp.float32)
+    cpar = (jax.random.exponential(kc, (2, L, dim)).sum(0)).astype(jnp.float32)
+    beta = jax.random.uniform(kb, (L, dim), dtype=jnp.float32)
+
+    logw = jnp.where(weights > 0, jnp.log(jnp.maximum(weights, 1e-30)), -jnp.inf)  # (batch, dim)
+    t = jnp.floor(logw[:, None, :] / r[None] + beta[None])  # (batch, L, dim)
+    lny = r[None] * (t - beta[None])
+    lna = jnp.log(cpar)[None] - lny - r[None]
+    lna = jnp.where(jnp.isfinite(logw)[:, None, :], lna, jnp.inf)
+    kstar = jnp.argmin(lna, axis=-1)  # (batch, L)
+    return (kstar & ((1 << b) - 1)).astype(jnp.uint8)
+
+
+def jaccard(items_a, mask_a, items_b, mask_b) -> jnp.ndarray:
+    """Exact Jaccard between two padded sets — oracle for minhash tests."""
+    def one(ia, ma, ib, mb):
+        ia = jnp.where(ma, ia, -1)
+        ib = jnp.where(mb, ib, -2)
+        inter = (ia[:, None] == ib[None, :]).any(axis=1) & ma
+        ni = inter.sum()
+        nu = ma.sum() + mb.sum() - ni
+        return jnp.where(nu > 0, ni / nu, 0.0)
+    return jax.vmap(one)(items_a, mask_a, items_b, mask_b)
+
+
+def minmax_kernel(wa: jnp.ndarray, wb: jnp.ndarray) -> jnp.ndarray:
+    """Exact min-max kernel — oracle for CWS tests."""
+    num = jnp.minimum(wa, wb).sum(axis=-1)
+    den = jnp.maximum(wa, wb).sum(axis=-1)
+    return jnp.where(den > 0, num / den, 0.0)
+
+
+def sketch_tokens(key: jax.Array, tokens: jnp.ndarray, *, L: int, b: int,
+                  vocab_hash_dim: Optional[int] = None) -> jnp.ndarray:
+    """Sketch token sequences (documents) for the dedup pipeline.
+
+    tokens: (batch, seq) int32 — each document is treated as the *set* of
+    its token ids (bag semantics collapse to set under minhash), matching
+    the paper's Review preprocessing (presence/absence fingerprint).
+    """
+    mask = tokens >= 0
+    items = jnp.maximum(tokens, 0)
+    return bbit_minhash(key, items, mask, L=L, b=b)

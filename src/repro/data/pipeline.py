@@ -1,0 +1,148 @@
+"""Data pipeline with bST near-duplicate filtering — the paper's flagship
+application (web-scale near-dup detection) wired into training.
+
+Determinism contract: ``batch_for_step(step)`` is a pure function of
+(config, step).  That is the straggler/elasticity story — any worker (or
+a replacement for a failed one) regenerates any step's shard with no
+coordination, and a restarted run replays bit-identically.
+
+Dedup flow per step (when enabled):
+  1. generate ``oversample x batch`` candidate documents; a configurable
+     fraction are *near-duplicates* (token-perturbed copies) — synthetic
+     stand-ins for the web-crawl duplicates of the paper's Review set;
+  2. b-bit-minhash each document (``core.sketch.sketch_tokens``);
+  3. reject candidates within Hamming ``tau`` of (a) an already-accepted
+     candidate in this batch (pairwise vertical-format kernel) or (b) the
+     persistent history index — a bST over every sketch accepted so far,
+     rebuilt on a doubling schedule (LSM-style amortization);
+  4. take the first ``batch`` survivors (padding deterministically with
+     rejected docs if over-aggressive).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.bst import build_bst
+from ..core.hamming import hamming_pairwise_naive
+from ..core.search import make_batch_searcher
+from ..core.sketch import sketch_tokens
+
+
+@dataclasses.dataclass
+class DataConfig:
+    vocab: int
+    batch: int
+    seq: int
+    seed: int = 0
+    dedup: bool = False
+    oversample: int = 2
+    dup_frac: float = 0.25       # injected near-duplicate rate
+    dedup_L: int = 16
+    dedup_b: int = 2
+    dedup_tau: int = 2
+    embeds_dim: int = 0          # >0: frontend-stub pipeline (hubert)
+    rebuild_factor: float = 2.0  # rebuild history bST when 2x larger
+
+
+class SketchDedupPipeline:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self._sketch_key = jax.random.PRNGKey(cfg.seed ^ 0x5E7C)
+        self._history: Optional[np.ndarray] = None     # accepted sketches
+        self._index = None
+        self._index_size = 0
+        self.stats = {"candidates": 0, "rejected_in_batch": 0,
+                      "rejected_history": 0}
+
+    # -- candidate generation (pure in (cfg, step)) -----------------------
+    def _candidates(self, step: int) -> np.ndarray:
+        cfg = self.cfg
+        n = cfg.batch * (cfg.oversample if cfg.dedup else 1)
+        rng = np.random.default_rng((cfg.seed, step))
+        toks = rng.integers(0, cfg.vocab, size=(n, cfg.seq + 1), dtype=np.int64)
+        if cfg.dedup and cfg.dup_frac > 0:
+            n_dup = int(n * cfg.dup_frac)
+            src = rng.integers(0, n - n_dup, size=n_dup)
+            for i, s in enumerate(src):
+                row = toks[s].copy()
+                # perturb ~2% of positions — a near (not exact) duplicate
+                flip = rng.random(cfg.seq + 1) < 0.02
+                row[flip] = rng.integers(0, cfg.vocab, size=flip.sum())
+                toks[n - n_dup + i] = row
+            perm = rng.permutation(n)
+            toks = toks[perm]
+        return toks
+
+    # -- dedup -------------------------------------------------------------
+    def _dedup_mask(self, sketches: np.ndarray) -> np.ndarray:
+        """Greedy accept mask: True = keep."""
+        cfg = self.cfg
+        n = sketches.shape[0]
+        keep = np.ones(n, bool)
+
+        # (a) vs history bST
+        if self._index is not None:
+            searcher = make_batch_searcher(self._index, cfg.dedup_tau)
+            res = searcher(jnp.asarray(sketches))
+            dup_hist = np.asarray(res.mask).any(axis=1)
+            self.stats["rejected_history"] += int(dup_hist.sum())
+            keep &= ~dup_hist
+
+        # (b) in-batch greedy: reject anything within tau of an earlier kept
+        dists = np.asarray(hamming_pairwise_naive(
+            jnp.asarray(sketches), jnp.asarray(sketches)))
+        close = dists <= cfg.dedup_tau
+        for i in range(n):
+            if not keep[i]:
+                continue
+            later = close[i, i + 1:]
+            dropped = later & keep[i + 1:]
+            self.stats["rejected_in_batch"] += int(dropped.sum())
+            keep[i + 1:] &= ~later
+        return keep
+
+    def _update_history(self, accepted: np.ndarray) -> None:
+        if self._history is None:
+            self._history = accepted.copy()
+        else:
+            self._history = np.concatenate([self._history, accepted])
+        if (self._index is None
+                or len(self._history) >= self.cfg.rebuild_factor
+                * max(self._index_size, 1)):
+            self._index = build_bst(self._history, self.cfg.dedup_b)
+            self._index_size = len(self._history)
+
+    # -- public ------------------------------------------------------------
+    def batch_for_step(self, step: int) -> Dict[str, jnp.ndarray]:
+        cfg = self.cfg
+        if cfg.embeds_dim:
+            rng = np.random.default_rng((cfg.seed, step))
+            return {
+                "embeds": jnp.asarray(rng.standard_normal(
+                    (cfg.batch, cfg.seq, cfg.embeds_dim), dtype=np.float32)),
+                "targets": jnp.asarray(rng.integers(
+                    0, cfg.vocab, (cfg.batch, cfg.seq)), jnp.int32),
+            }
+        toks = self._candidates(step)
+        if cfg.dedup:
+            sk = np.asarray(sketch_tokens(
+                self._sketch_key, jnp.asarray(toks[:, :-1], jnp.int32),
+                L=cfg.dedup_L, b=cfg.dedup_b))
+            self.stats["candidates"] += len(toks)
+            keep = self._dedup_mask(sk)
+            order = np.concatenate([np.flatnonzero(keep),
+                                    np.flatnonzero(~keep)])
+            chosen = order[:cfg.batch]
+            self._update_history(sk[chosen[keep[chosen]]]
+                                 if keep[chosen].any() else sk[chosen[:1]])
+            toks = toks[chosen]
+        else:
+            toks = toks[:cfg.batch]
+        return {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                "targets": jnp.asarray(toks[:, 1:], jnp.int32)}

@@ -1,0 +1,161 @@
+"""Checkpointing: sharded-array save/restore with manifest + atomic rename,
+an async writer thread, and *elastic* restore (any mesh shape).
+
+Layout per step::
+
+    <dir>/step_0000042.tmp-<pid>/   (written)  ->  <dir>/step_0000042/
+        manifest.json     {step, keys, shapes, dtypes}
+        arrays.npz        one entry per flattened key path
+
+Arrays are stored *unsharded-logical* (gathered to host), so a restore
+can target any mesh whose axes divide the dimensions — the elastic
+re-shard story (node count changed between runs) is just
+``device_put(value, NamedSharding(new_mesh, spec))``.  On a real
+multi-host pod each host would write its address-space slice and the
+manifest would carry the global shape; the format here is the
+single-process projection of that design (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import time
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_STEP_RE = re.compile(r"^step_(\d{7})$")
+
+
+def _flatten(tree: PyTree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keyed = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                       for k in path)
+        keyed[key] = leaf
+    return keyed, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree) -> str:
+    """Synchronous save; returns the final path.  Atomic: the directory
+    appears under its final name only when complete."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:07d}")
+    tmp = f"{final}.tmp-{os.getpid()}"
+    os.makedirs(tmp, exist_ok=True)
+    keyed, _ = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in keyed.items()}
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays),
+        "shapes": {k: list(a.shape) for k, a in arrays.items()},
+        "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
+        "time": time.time(),
+    }
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):  # overwrite-resume case
+        os.rename(final, final + f".old-{os.getpid()}")
+    os.rename(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Fetches device arrays to host synchronously (cheap), then writes on
+    a background thread so the train loop never blocks on disk."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._pending: List[threading.Thread] = []
+
+    def save(self, step: int, tree: PyTree) -> None:
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+        t = threading.Thread(
+            target=self._write, args=(step, host_tree), daemon=True)
+        t.start()
+        self._pending.append(t)
+
+    def _write(self, step: int, host_tree: PyTree) -> None:
+        save_checkpoint(self.ckpt_dir, step, host_tree)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = list_checkpoints(self.ckpt_dir)
+        for s in steps[:-self.keep]:
+            path = os.path.join(self.ckpt_dir, f"step_{s:07d}")
+            tmp = path + ".rm"
+            try:
+                os.rename(path, tmp)
+            except OSError:
+                continue
+            for root, dirs, files in os.walk(tmp, topdown=False):
+                for fn in files:
+                    os.unlink(os.path.join(root, fn))
+                for d in dirs:
+                    os.rmdir(os.path.join(root, d))
+            os.rmdir(tmp)
+
+    def wait(self) -> None:
+        for t in self._pending:
+            t.join()
+        self._pending.clear()
+
+
+def list_checkpoints(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[int]:
+    steps = list_checkpoints(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, abstract_tree: PyTree,
+                       shardings: Optional[PyTree] = None) -> PyTree:
+    """Restore into the structure of ``abstract_tree``; if ``shardings``
+    (a NamedSharding pytree, e.g. from ``sharding.param_specs`` on the
+    *current* mesh) is given, leaves are placed sharded — this is the
+    elastic-restore path."""
+    path = os.path.join(ckpt_dir, f"step_{step:07d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    keyed, treedef = _flatten(abstract_tree)
+    missing = sorted(set(keyed) - set(manifest["keys"]))
+    if missing:
+        raise ValueError(f"checkpoint at step {step} lacks keys: {missing[:5]}")
+    flat_sh = None
+    if shardings is not None:
+        sh_keyed, _ = _flatten(shardings)
+        flat_sh = sh_keyed
+
+    out = {}
+    for key, ref in keyed.items():
+        arr = data[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != expected {ref.shape}")
+        arr = arr.astype(ref.dtype)
+        if flat_sh is not None:
+            out[key] = jax.device_put(arr, flat_sh[key])
+        else:
+            out[key] = jnp.asarray(arr)
+
+    leaves_in_order = [out[k] for k, _ in _flatten(abstract_tree)[0].items()]
+    return jax.tree_util.tree_unflatten(treedef, leaves_in_order)

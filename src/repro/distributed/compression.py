@@ -1,0 +1,65 @@
+"""Gradient compression for cross-pod all-reduce.
+
+Two tiers (DESIGN.md §5):
+
+1. **bf16 collectives** (default, always on): parameters are cast to
+   bf16 inside the differentiated function (train.steps), so every
+   gradient collective GSPMD inserts — FSDP reduce-scatter over "data",
+   DP all-reduce over "pod" — carries bf16.  Nothing to do here; the
+   dry-run HLO verifies it.
+
+2. **int8 + error feedback** (optional, for bandwidth-starved inter-pod
+   links): per-tensor symmetric quantization with a residual buffer so
+   the quantization error is re-injected next step (1-bit-Adam-style
+   convergence behaviour).  ``compress`` runs *before* the pod
+   all-reduce boundary; ``decompress`` after.  In a shard_map deployment
+   the int8 payload is what crosses the pod axis — an ~4x byte reduction
+   on the slowest links.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class CompressedGrads(NamedTuple):
+    q: PyTree        # int8 payloads
+    scale: PyTree    # f32 per-tensor scales
+
+
+def init_error_feedback(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads: PyTree, error: PyTree) -> Tuple[CompressedGrads, PyTree]:
+    """Quantize grads+error to int8; returns payload and the new residual."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        residual = g - q.astype(jnp.float32) * scale
+        return q, scale, residual
+
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat, flat_e)]
+    q = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    scale = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_err = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return CompressedGrads(q=q, scale=scale), new_err
+
+
+def decompress(c: CompressedGrads) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, c.q, c.scale)
+
+
+def compressed_bytes(c: CompressedGrads) -> int:
+    leaves = jax.tree_util.tree_leaves(c.q)
+    return sum(l.size for l in leaves) + 4 * len(leaves)

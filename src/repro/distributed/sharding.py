@@ -1,0 +1,190 @@
+"""Sharding rules: logical axes -> mesh axes, param/cache/batch specs.
+
+The physical mesh is ``(pod, data, model)`` (multi-pod) or
+``(data, model)`` (single pod).  Logical axes used by the model code:
+
+  * ``batch``  -> ("pod", "data")  — activation batch, MoE dispatch groups
+  * ``data``   -> "data"           — FSDP shard axis for parameters
+  * ``model``  -> "model"          — tensor parallel (heads / ffn / vocab /
+                                      experts / SSM heads)
+
+Parameters are therefore FSDP-sharded over ``data`` *and* tensor-sharded
+over ``model`` (ZeRO-3 + TP), replicated across ``pod`` — the pod axis is
+pure data parallelism, so the only cross-pod traffic is the gradient
+all-reduce, which is what makes the 2-pod dry-run's collective schedule
+legible (see EXPERIMENTS.md §Dry-run).
+
+``constrain`` is the activation-annotation hook used inside model code:
+it resolves logical names against a process-global mesh (set by the
+launcher) and silently no-ops on CPU smoke tests (no mesh) or when a
+dimension does not divide the axis (e.g. batch=1 long-context decode —
+the spec degrades to replicated rather than padding 31/32 of the array).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_LOGICAL = {
+    "batch": ("pod", "data"),
+    "data": ("data",),
+    "fsdp": ("data",),
+    "model": ("model",),
+    "expert": ("model",),
+}
+
+_GLOBAL_MESH: Optional[Mesh] = None
+
+
+def set_global_mesh(mesh: Optional[Mesh]) -> None:
+    global _GLOBAL_MESH
+    _GLOBAL_MESH = mesh
+
+
+def get_global_mesh() -> Optional[Mesh]:
+    return _GLOBAL_MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = get_global_mesh()
+    set_global_mesh(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        set_global_mesh(prev)
+
+
+def _resolve(spec: Sequence, mesh: Mesh, shape: Tuple[int, ...]) -> P:
+    """Logical spec -> PartitionSpec, dropping axes that are absent from
+    the mesh or that do not divide the dimension."""
+    out = []
+    for dim, name in enumerate(spec):
+        if name is None:
+            out.append(None)
+            continue
+        axes = []
+        for logical in ([name] if isinstance(name, str) else list(name)):
+            axes.extend(a for a in _LOGICAL.get(logical, (logical,))
+                        if a in mesh.axis_names)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if axes and total > 1 and shape[dim] % total == 0:
+            out.append(tuple(axes) if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def constrain(x: jnp.ndarray, spec: Sequence) -> jnp.ndarray:
+    mesh = get_global_mesh()
+    if mesh is None or not hasattr(x, "shape") or x.ndim != len(spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _resolve(spec, mesh, x.shape)))
+
+
+# ---------------------------------------------------------------------------
+# parameter specs (path-based rules)
+# ---------------------------------------------------------------------------
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+    return tuple(names)
+
+
+def _param_logical(path_names: Tuple[str, ...], ndim: int) -> Tuple:
+    """Logical spec for one parameter leaf.  Stacked unit params carry a
+    leading ``n_units`` axis; rules are written for the *unstacked* rank
+    and get ``None`` prepended for any extra leading axes."""
+    name = path_names[-1]
+    in_moe = "moe" in path_names or "router" in path_names
+
+    base = None
+    if name == "embed":
+        base = ("model", "data")                 # (V, d) vocab-TP + FSDP
+    elif name == "lm_head":
+        base = ("data", "model")                 # (d, V)
+    elif name in ("wq", "wk", "wv"):
+        base = ("data", "model", None)           # (d, H, hd)
+    elif name == "wo":
+        base = ("model", None, "data")           # (H, hd, d)
+    elif name == "router":
+        base = ("data", None)                    # (d, E) — replicated over model
+    elif name in ("w_gate", "w_up"):
+        base = ("model", "data", None) if in_moe else ("data", "model")
+    elif name == "w_down":
+        base = ("model", None, "data") if in_moe else ("model", "data")
+    elif name in ("wz", "wx"):
+        base = ("data", "model")                 # (d, d_inner)
+    elif name in ("wB", "wC", "wdt"):
+        base = ("data", None)
+    elif name == "out_proj":
+        base = ("model", "data")                 # (d_inner, d)
+    elif name == "conv_x":
+        base = (None, "model")                   # (K, d_inner)
+    if base is None:
+        base = (None,) * ndim                    # norms, biases, A_log, ...
+    if len(base) < ndim:
+        base = (None,) * (ndim - len(base)) + tuple(base)
+    return base
+
+
+def param_specs(params: Any, mesh: Mesh):
+    """ShapeDtypeStruct/array pytree -> NamedSharding pytree."""
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        spec = _param_logical(names, leaf.ndim)
+        return NamedSharding(mesh, _resolve(spec, mesh, leaf.shape))
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+# ---------------------------------------------------------------------------
+# cache / batch specs
+# ---------------------------------------------------------------------------
+
+def cache_specs(cache: Any, mesh: Mesh, kv_shard: str = "heads"):
+    """Decode-cache pytree specs.  KV leaves are (u, B, S, Kv, hd); SSM
+    conv (u, B, K-1, C) and state (u, B, H, P, N) — batch over
+    (pod, data), heads/channels over model (or the SEQUENCE axis over
+    model when kv_shard="seq" — §Perf P9), with divisibility fallback."""
+    def leaf_spec(path, leaf):
+        if leaf.ndim == 5:      # KV cache or SSM state
+            names = _path_names(path)
+            if "state" in names:
+                spec = (None, "batch", "model", None, None)
+            elif kv_shard == "seq":
+                spec = (None, "batch", "model", None, None)
+            else:
+                spec = (None, "batch", None, "model", None)
+        elif leaf.ndim == 4:    # conv window (u, B, K-1, C)
+            spec = (None, "batch", None, "model")
+        else:
+            spec = (None,) * leaf.ndim
+        return NamedSharding(mesh, _resolve(spec, mesh, leaf.shape))
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def batch_specs(batch: Any, mesh: Mesh):
+    def leaf_spec(leaf):
+        spec = ("batch",) + (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, _resolve(spec, mesh, leaf.shape))
+    return jax.tree_util.tree_map(leaf_spec, batch)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: vertical-format Hamming-threshold scan.
+
+This is the measured hot spot of the paper's pipeline — the sparse-layer
+path scan and the multi-index verification step both reduce to "stream a
+packed sketch database past a query and popcount the XOR".  The workload
+is integer and element-wise: it never touches the MXU, so the kernel is a
+pure VPU streaming kernel and its roofline is the HBM bandwidth term.
+
+Layout (see ref.py): the database is *fully vertical* — (b, W, n) uint32
+with the sketch index on the last (lane) axis.  A block of
+(b, W, BLOCK_N) therefore occupies b·W·BLOCK_N·4 bytes of VMEM and
+vectorizes the whole XOR/OR/popcount chain across 128-sketch lanes with
+the (tiny) b·W plane/word axes on sublanes.
+
+Block-shape reasoning (v5e: 128 lanes, 8 sublanes, ~16 MiB VMEM/core):
+  * BLOCK_N multiple of 128 (lane width).  Default 2048.
+  * b·W ≤ 16 for every paper dataset (b=2,W=1 … b=8,W=2), so a block is at
+    most 16·2048·4 = 128 KiB — VMEM pressure is negligible and the grid
+    can double-buffer aggressively; arithmetic intensity is ~1.5 int-ops
+    per byte, i.e. firmly memory-bound, which the roofline table reflects.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 2048
+
+
+def _hamming_kernel(db_ref, q_ref, out_ref, *, b: int, W: int):
+    """One (query j, db block i) cell: distances for BLOCK_N sketches."""
+    db = db_ref[...]          # (b, W, BLOCK_N) uint32
+    q = q_ref[...]            # (b, W, 1) uint32
+    diff = db ^ q             # broadcast over lanes
+    acc = diff[0]
+    for i in range(1, b):     # b is a python constant -> fully unrolled
+        acc = acc | diff[i]
+    pops = jax.lax.population_count(acc).astype(jnp.int32)  # (W, BLOCK_N)
+    dist = pops[0]
+    for w in range(1, W):
+        dist = dist + pops[w]
+    out_ref[...] = dist[None, :]  # (1, BLOCK_N)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def hamming_distances_pallas(db_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                             *, block_n: int = DEFAULT_BLOCK_N,
+                             interpret: bool = False) -> jnp.ndarray:
+    """(b, W, n) x (b, W, m) -> (m, n) int32 distances via pallas_call.
+
+    Grid is (m, n/block_n): queries on the outer axis so each query's
+    planes stay VMEM-resident while database blocks stream past.
+    ``n`` must be a multiple of ``block_n`` (ops.py pads).
+    """
+    b, W, n = db_vert.shape
+    m = q_vert.shape[-1]
+    assert n % block_n == 0, (n, block_n)
+    grid = (m, n // block_n)
+    kernel = functools.partial(_hamming_kernel, b=b, W=W)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, W, block_n), lambda j, i: (0, 0, i)),
+            pl.BlockSpec((b, W, 1), lambda j, i: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda j, i: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(db_vert, q_vert)
+
+
+def _verify_kernel(db_ref, q_ref, base_ref, out_ref, *, b: int, W: int, tau: int):
+    """Fused sparse-layer verify: suffix distance + accumulated prefix
+    distance, thresholded — emits an int32 0/1 survival mask."""
+    db = db_ref[...]
+    q = q_ref[...]
+    diff = db ^ q
+    acc = diff[0]
+    for i in range(1, b):
+        acc = acc | diff[i]
+    pops = jax.lax.population_count(acc).astype(jnp.int32)
+    dist = pops[0]
+    for w in range(1, W):
+        dist = dist + pops[w]
+    total = dist + base_ref[0, :]
+    out_ref[...] = (total <= tau).astype(jnp.int32)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "block_n", "interpret"))
+def sparse_verify_pallas(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                         base_dist: jnp.ndarray, *, tau: int,
+                         block_n: int = DEFAULT_BLOCK_N,
+                         interpret: bool = False) -> jnp.ndarray:
+    """(b, W, n) suffix paths + (b, W) query suffix + (n,) prefix distances
+    -> (n,) int32 survival mask (1 = leaf within tau)."""
+    b, W, n = paths_vert.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    kernel = functools.partial(_verify_kernel, b=b, W=W, tau=tau)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, W, block_n), lambda i: (0, 0, i)),
+            pl.BlockSpec((b, W, 1), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.int32),
+        interpret=interpret,
+    )(paths_vert, q_vert[..., None], base_dist[None, :].astype(jnp.int32))
+    return out[0]

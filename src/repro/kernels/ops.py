@@ -1,0 +1,71 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities: layout conversion ((n, b, W) <-> (b, W, n)), padding to
+block multiples, backend selection (compiled Pallas on TPU, interpret mode
+on CPU so correctness tests execute the *same kernel body*), and fallback
+to the pure-jnp oracle for shapes where a kernel launch is not worth it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .hamming_kernel import (DEFAULT_BLOCK_N, hamming_distances_pallas,
+                             sparse_verify_pallas)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def to_lane_major(planes: jnp.ndarray) -> jnp.ndarray:
+    """(n, b, W) sketch-major -> (b, W, n) lane-major (kernel layout)."""
+    return jnp.transpose(planes, (1, 2, 0))
+
+
+def _pad_lanes(x: jnp.ndarray, block_n: int) -> jnp.ndarray:
+    n = x.shape[-1]
+    pad = (-n) % block_n
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x
+
+
+def hamming_distances(db_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                      *, block_n: int = DEFAULT_BLOCK_N,
+                      use_kernel: bool | None = None) -> jnp.ndarray:
+    """(b, W, n) x (b, W, m) -> (m, n) int32.  Pads n to a block multiple,
+    launches the kernel, and slices the pad back off (pad sketches are
+    all-zero words -> garbage distances, dropped here)."""
+    n = db_vert.shape[-1]
+    if use_kernel is None:
+        use_kernel = n >= block_n  # tiny scans: oracle is cheaper than launch
+    if not use_kernel:
+        return ref.hamming_distances_ref(db_vert, q_vert)
+    db_p = _pad_lanes(db_vert, block_n)
+    out = hamming_distances_pallas(db_p, q_vert, block_n=block_n,
+                                   interpret=not _on_tpu())
+    return out[:, :n]
+
+
+def sparse_verify(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                  base_dist: jnp.ndarray, *, tau: int,
+                  block_n: int = DEFAULT_BLOCK_N,
+                  use_kernel: bool | None = None) -> jnp.ndarray:
+    """Fused verify: (n,) int32 mask of leaves with prefix+suffix dist <= tau."""
+    n = paths_vert.shape[-1]
+    if use_kernel is None:
+        use_kernel = n >= block_n
+    if not use_kernel:
+        return ref.sparse_verify_ref(paths_vert, q_vert, base_dist, tau).astype(jnp.int32)
+    paths_p = _pad_lanes(paths_vert, block_n)
+    # pad base distances with +inf-like so pad lanes never survive
+    pad = paths_p.shape[-1] - n
+    base_p = jnp.pad(base_dist.astype(jnp.int32), (0, pad), constant_values=jnp.int32(1 << 20))
+    out = sparse_verify_pallas(paths_p, q_vert, base_p, tau=tau,
+                               block_n=block_n, interpret=not _on_tpu())
+    return out[:n]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+The oracle is the *specification*: kernels are validated against these in
+``tests/test_kernels.py`` across a (shape × dtype × b × L) sweep with
+``assert_allclose`` (exact equality — integer kernels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hamming_distances_ref(db_vert: jnp.ndarray, q_vert: jnp.ndarray) -> jnp.ndarray:
+    """Batched vertical-format Hamming distances.
+
+    db_vert: (b, W, n) uint32 — fully-vertical layout: plane-major, then
+             word, with the *database axis on lanes* (TPU-native: the XOR/
+             OR/popcount stream vectorizes over 128-wide sketch lanes).
+    q_vert:  (b, W, m) uint32 — m queries in the same layout.
+    returns: (m, n) int32 distances.
+    """
+    b, W, n = db_vert.shape
+    m = q_vert.shape[-1]
+    # (m, b, W, n)
+    diff = db_vert[None] ^ jnp.transpose(q_vert, (2, 0, 1))[..., None]
+    acc = diff[:, 0]
+    for i in range(1, b):
+        acc = acc | diff[:, i]
+    pops = jax.lax.population_count(acc).astype(jnp.int32)  # (m, W, n)
+    return pops.sum(axis=1)
+
+
+def hamming_threshold_count_ref(db_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                                tau: jnp.ndarray) -> jnp.ndarray:
+    """(m,) int32 — number of DB sketches within distance tau of each query."""
+    d = hamming_distances_ref(db_vert, q_vert)
+    return (d <= tau).sum(axis=1).astype(jnp.int32)
+
+
+def sparse_verify_ref(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                      base_dist: jnp.ndarray, tau: int) -> jnp.ndarray:
+    """Sparse-layer verification oracle.
+
+    paths_vert: (b, W, n) uint32 — collapsed root-to-leaf suffix paths;
+    q_vert:     (b, W) uint32    — query suffix, single query;
+    base_dist:  (n,) int32       — Hamming distance accumulated down to the
+                                   sparse-layer roots (per leaf);
+    returns (n,) bool — leaf survives iff base + suffix distance <= tau.
+    """
+    d = hamming_distances_ref(paths_vert, q_vert[..., None])[0]
+    return (base_dist + d) <= tau

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against 512 placeholder host devices, and extract the §Roofline
+terms from the compiled artifact.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, compile-time OOM, or unsupported
+collective fails the cell.  Results are cached as JSON per cell under
+``--out`` so the grid can be filled incrementally (and in parallel across
+processes).
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k --mesh multi
+    python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.registry import ARCH_IDS, all_cells, get_config, skipped_cells
+from ..distributed.sharding import (batch_specs, cache_specs, param_specs,
+                                    replicated, use_mesh)
+from ..launch import hlo_analysis, hlo_cost
+from ..launch.mesh import dp_shards, make_production_mesh
+from ..models import model as M
+from ..models.config import SHAPES
+from ..models.io import input_specs
+from ..optim.adamw import Hyper, abstract_opt_state
+from ..train.steps import make_decode_step, make_prefill_step, make_train_step
+
+MODEL_AXIS = 16
+STASH_BUDGET = 2e9   # bytes of remat-stash per device before microbatching
+
+
+def pick_microbatches(cfg, shape, mesh) -> int:
+    dp = dp_shards(mesh)
+    b_local = max(shape.global_batch // dp, 1)
+    # remat stash: per-unit residual inputs
+    stash = cfg.num_layers * b_local * shape.seq_len * cfg.d_model * 2
+    # MoE dispatch transient: per-layer (E, cap, d + 2·ff) bf16 per device
+    if cfg.n_experts:
+        tok_dev = b_local * shape.seq_len
+        cap = tok_dev * cfg.top_k * cfg.capacity_factor / max(cfg.n_experts, 1)
+        moe_transient = (cfg.n_experts * cap
+                         * (cfg.d_model + 2 * cfg.moe_d_ff) * 2)
+        stash = max(stash, moe_transient * cfg.num_layers // 8)
+    mb = 1
+    while stash / mb > STASH_BUDGET and mb * dp < shape.global_batch:
+        mb *= 2
+    return mb
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, multi_pod: bool):
+    """Build + lower + compile one cell; returns (record, compiled)."""
+    cfg = get_config(arch, pad_for_mesh=True, model_axis=MODEL_AXIS)
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    groups = dp_shards(mesh) if cfg.n_experts else 1
+    params_abs = M.abstract_params(cfg)
+    p_specs = param_specs(params_abs, mesh)
+
+    t0 = time.time()
+    with use_mesh(mesh):
+        if shape.kind == "train":
+            mb = pick_microbatches(cfg, shape, mesh)
+            step = make_train_step(cfg, Hyper(), num_microbatches=mb,
+                                   moe_groups=groups)
+            opt_abs = abstract_opt_state(params_abs)
+            o_specs = param_specs(opt_abs, mesh)
+            b_specs = batch_specs(specs["batch"], mesh)
+            m_specs = {k: replicated(mesh) for k in ("lr", "grad_norm", "loss")}
+            jitted = jax.jit(step,
+                             in_shardings=(p_specs, o_specs, b_specs),
+                             out_shardings=(p_specs, o_specs, m_specs),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, specs["batch"])
+            extra = {"num_microbatches": mb}
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, moe_groups=groups)
+            b_specs = batch_specs(specs["batch"], mesh)
+            jitted = jax.jit(step, in_shardings=(p_specs, b_specs))
+            lowered = jitted.lower(params_abs, specs["batch"])
+            extra = {}
+        else:  # decode
+            step = make_decode_step(cfg, moe_groups=groups)
+            c_specs = cache_specs(specs["cache"], mesh,
+                                  kv_shard=cfg.decode_kv_shard)
+            t_specs = batch_specs(specs["tokens"], mesh)
+            jitted = jax.jit(step,
+                             in_shardings=(p_specs, t_specs, c_specs,
+                                           replicated(mesh)),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_abs, specs["tokens"],
+                                   specs["cache"], specs["cache_len"])
+            extra = {}
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    record = analyze(compiled, cfg, shape, mesh, arch=arch,
+                     shape_name=shape_name, multi_pod=multi_pod)
+    record.update(extra)
+    record["lower_s"] = round(t_lower, 2)
+    record["compile_s"] = round(t_compile, 2)
+    return record, compiled
+
+
+def analyze(compiled, cfg, shape, mesh, *, arch, shape_name, multi_pod):
+    chips = mesh.devices.size
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "padded_dims": dict(cfg.logical),
+        "kind": shape.kind,
+    }
+
+    # --- memory (proves it fits) ---------------------------------------
+    try:
+        ma = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        }
+        record["memory"]["total_bytes"] = (
+            record["memory"]["argument_bytes"]
+            + record["memory"]["temp_bytes"])
+    except Exception as e:  # CPU backend may not implement every field
+        record["memory"] = {"error": repr(e)}
+
+    # --- raw XLA cost analysis (counts each while body ONCE — kept for
+    # reference; the roofline uses the while-aware model below) ----------
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        record["cost_analysis_raw"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+        }
+    except Exception as e:
+        record["cost_analysis_raw"] = {"error": repr(e)}
+
+    # --- while-aware HLO cost model (per-device) -------------------------
+    hlo = compiled.as_text()
+    cost = hlo_cost.analyze_hlo(hlo)
+    flops = cost.flops
+    bytes_accessed = cost.bytes
+    record["hlo_cost"] = {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+    }
+    record["collectives"] = {
+        "bytes_by_kind": {k: int(v) for k, v in cost.coll_bytes.items()},
+        "count_by_kind": {k: int(v) for k, v in cost.coll_count.items()},
+        "total_bytes": int(cost.total_coll_bytes),
+    }
+    # one-shot census (per static instruction, not trip-weighted): spot
+    # remat recompute and layout churn
+    stats = hlo_analysis.parse_collectives(hlo)
+    record["collectives"]["largest_static"] = [
+        {"kind": k, "bytes": b, "shape": s[:120]}
+        for k, b, s in stats.largest[:8]]
+    census = hlo_analysis.op_census(hlo)
+    record["op_census_top"] = dict(
+        sorted(census.items(), key=lambda kv: -kv[1])[:15])
+
+    # --- roofline ---------------------------------------------------------
+    n_params = cfg.param_count()
+    n_active = cfg.param_count(active_only=True)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    factor = 6 if shape.kind == "train" else 2
+    model_flops = factor * n_active * tokens
+    roof = hlo_analysis.Roofline(
+        flops_per_device=flops,
+        hbm_bytes_per_device=bytes_accessed,
+        collective_bytes_per_device=cost.total_coll_bytes,
+        n_links=4)
+    record["roofline"] = roof.summary()
+    record["roofline"].update({
+        "param_count": n_params,
+        "param_count_active": n_active,
+        "model_flops_global": model_flops,
+        "model_flops_per_chip": model_flops / chips,
+        "useful_flops_ratio": (model_flops / chips / flops) if flops else 0.0,
+    })
+    return record
+
+
+def run_cells(cells, meshes, out_dir, force=False):
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for mesh_name in meshes:
+        multi = mesh_name == "multi"
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch, shape_name in cells:
+            tag = f"{'2x16x16' if multi else '16x16'}__{arch}__{shape_name}"
+            path = os.path.join(out_dir, tag + ".json")
+            if os.path.exists(path) and not force:
+                print(f"[skip-cached] {tag}")
+                continue
+            print(f"[lower+compile] {tag} ...", flush=True)
+            try:
+                record, compiled = lower_cell(arch, shape_name, mesh,
+                                              multi_pod=multi)
+                del compiled
+                record["status"] = "ok"
+            except Exception as e:
+                record = {"arch": arch, "shape": shape_name,
+                          "mesh": mesh_name, "status": "error",
+                          "error": repr(e),
+                          "traceback": traceback.format_exc()[-2000:]}
+                print(f"  ERROR: {e!r}", flush=True)
+            with open(path, "w") as f:
+                json.dump(record, f, indent=1)
+            if record["status"] == "ok":
+                r = record["roofline"]
+                print(f"  ok: lower {record['lower_s']}s compile "
+                      f"{record['compile_s']}s | Tc {r['t_compute_s']:.4f} "
+                      f"Tm {r['t_memory_s']:.4f} Tcoll {r['t_collective_s']:.4f}"
+                      f" -> {r['bottleneck']}", flush=True)
+            results.append(record)
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every valid (arch, shape) cell")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    assert len(jax.devices()) == 512, (
+        "dry-run requires the 512 placeholder devices; do not import jax "
+        "before this module sets XLA_FLAGS")
+
+    if args.all:
+        cells = all_cells()
+        for arch, shape, reason in skipped_cells():
+            print(f"[principled-skip] {arch} x {shape}: {reason}")
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    results = run_cells(cells, meshes, args.out, force=args.force)
+    n_err = sum(r.get("status") != "ok" for r in results)
+    print(f"\ndone: {len(results)} cells, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

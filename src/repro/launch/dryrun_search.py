@@ -1,0 +1,150 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run for the PAPER-TECHNIQUE cell: the sharded bST similarity
+search lowered + compiled on the production mesh, one trie shard per
+chip (512 shards on the multi-pod mesh).
+
+The index arrays are passed as sharded *arguments* (shard axis split
+over every mesh axis), so under GSPMD each device traverses exactly its
+own trie; the only collective is the final result all-gather.  Records
+the same JSON schema as the LM cells into the dry-run results dir.
+
+    python -m repro.launch.dryrun_search [--mesh both] [--n 131072]
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import distributed_search as ds
+from ..launch import hlo_cost
+from ..launch.mesh import make_production_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--n", type=int, default=1 << 17)
+    ap.add_argument("--L", type=int, default=32)
+    ap.add_argument("--b", type=int, default=4)
+    ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--verify", default="scan", choices=["gather", "scan"])
+    ap.add_argument("--caps", default="worst", choices=["worst", "expected"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args(argv)
+
+    assert len(jax.devices()) == 512
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    rng = np.random.default_rng(0)
+    db = rng.integers(0, 1 << args.b, size=(args.n, args.L), dtype=np.uint8)
+
+    os.makedirs(args.out, exist_ok=True)
+    for mesh_name in meshes:
+        multi = mesh_name == "multi"
+        mesh = make_production_mesh(multi_pod=multi)
+        n_shards = mesh.devices.size
+        print(f"[search-cell] building {n_shards} trie shards ...", flush=True)
+        t0 = time.time()
+        index = ds.build_sharded_bst(db, args.b, n_shards)
+        t_build = time.time() - t0
+
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        axes = tuple(mesh.axis_names)
+        shard0 = NamedSharding(mesh, P(axes))     # dim0 over ALL mesh axes
+        repl = NamedSharding(mesh, P())
+
+        t_max = tuple(int(x) for x in np.asarray(index.t).max(axis=0))
+        caps = (ds.expected_caps(t_max, index.b, args.tau)
+                if args.caps == "expected"
+                else ds.frontier_capacities(t_max, index.b, args.tau, 1 << 14))
+
+        arrays = {
+            "levels": tuple(
+                (lv.words, lv.cum, lv.labels) if lv.kind == "list"
+                else (lv.words, lv.cum) if lv.kind == "table" else ()
+                for lv in index.levels),
+            "t": index.t, "pv": index.paths_vert,
+            "dw": index.d_words, "dc": index.d_cum,
+            "lr": index.leaf_root, "il": index.id_leaf, "nl": index.n_local,
+        }
+        arr_specs = jax.tree_util.tree_map(
+            lambda a: NamedSharding(
+                mesh, P(axes) if a.shape[0] == n_shards else P()), arrays)
+
+        def search(arr, queries):
+            def per_query(q):
+                masks, ov = jax.vmap(
+                    lambda levels, t_row, pv, dw, dc, lr, il, nl:
+                    ds._shard_search(index, levels, t_row, pv, dw, dc, lr,
+                                     il, nl, q, args.tau, caps,
+                                     verify=args.verify)
+                )(arr["levels"], arr["t"], arr["pv"], arr["dw"], arr["dc"],
+                  arr["lr"], arr["il"], arr["nl"])
+                return masks, ov.sum()
+            masks, ovs = jax.vmap(per_query)(queries)
+            return masks, ovs.sum()
+
+        q_abs = jax.ShapeDtypeStruct((args.queries, args.L), jnp.uint8)
+        arr_abs = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), arrays)
+
+        t0 = time.time()
+        with mesh:
+            jitted = jax.jit(search, in_shardings=(arr_specs, repl))
+            lowered = jitted.lower(arr_abs, q_abs)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        cost = hlo_cost.analyze_hlo(compiled.as_text())
+        try:
+            ma = compiled.memory_analysis()
+            mem = {"argument_bytes": int(ma.argument_size_in_bytes),
+                   "temp_bytes": int(ma.temp_size_in_bytes)}
+            mem["total_bytes"] = mem["argument_bytes"] + mem["temp_bytes"]
+        except Exception as e:
+            mem = {"error": repr(e)}
+        roof = {
+            "t_compute_s": cost.flops / 197e12,
+            "t_memory_s": cost.bytes / 819e9,
+            "t_collective_s": cost.total_coll_bytes / (4 * 50e9),
+        }
+        terms = {"compute": roof["t_compute_s"],
+                 "memory": roof["t_memory_s"],
+                 "collective": roof["t_collective_s"]}
+        roof["bottleneck"] = max(terms, key=terms.get)
+        record = {
+            "arch": "bst-sharded-search", "shape": f"n{args.n}_q{args.queries}_tau{args.tau}_{args.verify}_{args.caps}",
+            "mesh": "2x16x16" if multi else "16x16", "chips": n_shards,
+            "kind": "search", "status": "ok",
+            "build_s": round(t_build, 1), "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "hlo_cost": {"flops": cost.flops, "bytes": cost.bytes},
+            "collectives": {
+                "bytes_by_kind": {k: int(v) for k, v in cost.coll_bytes.items()},
+                "count_by_kind": {k: int(v) for k, v in cost.coll_count.items()},
+                "total_bytes": int(cost.total_coll_bytes)},
+            "memory": mem,
+            "roofline": roof,
+        }
+        tag = f"{record['mesh']}__bst-sharded-search__{record['shape']}"
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"  ok: build {t_build:.1f}s lower {t_lower:.1f}s compile "
+              f"{t_compile:.1f}s | Tm {roof['t_memory_s']:.5f} "
+              f"Tcoll {roof['t_collective_s']:.5f} | mem "
+              f"{mem.get('total_bytes', 0) / 1e6:.1f} MB", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,163 @@
+"""Post-SPMD HLO inspection: collective bytes, op census, roofline terms.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes-accessed but nothing
+about collectives, so we parse the optimized HLO text: build a table of
+every instruction's result shape, then sum *operand* sizes for each
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` (per the roofline spec).  Numbers are per-device —
+post-partitioning HLO shapes are already the per-device shards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# "%name = bf16[8,128,288]{2,1,0} op-name(...)" — also matches tuple-free
+# shapes like "f32[]" and named computations.
+_DEF_RE = re.compile(
+    r"%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}\s/]+?)\s+"
+    r"([\w\-]+)(\.\d+)?\(([^)]*)\)")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+    largest: List[Tuple[str, int, str]]   # (kind, operand bytes, result shape)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def parse_collectives(hlo_text: str, top_n: int = 10) -> CollectiveStats:
+    # pass 1: instruction name -> result bytes
+    result_bytes: Dict[str, int] = {}
+    op_info: List[Tuple[str, str, str, str]] = []  # (name, shape, op, args)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if not m:
+            continue
+        name, shape_str, op = m.group(1), m.group(2), m.group(3)
+        result_bytes[name] = _shape_bytes(shape_str)
+        base_op = op.rstrip("0123456789.")
+        if base_op.endswith("-start"):
+            base_op = base_op[:-len("-start")]
+        if base_op in COLLECTIVE_KINDS:
+            op_info.append((name, shape_str, base_op, m.group(5)))
+
+    bytes_by_kind = {k: 0 for k in COLLECTIVE_KINDS}
+    count_by_kind = {k: 0 for k in COLLECTIVE_KINDS}
+    largest: List[Tuple[str, int, str]] = []
+    arg_re = re.compile(r"%?([\w.\-]+)")
+    for name, shape_str, kind, args in op_info:
+        operand_bytes = 0
+        for token in args.split(","):
+            token = token.strip()
+            am = arg_re.match(token)
+            if am and am.group(1) in result_bytes:
+                operand_bytes += result_bytes[am.group(1)]
+        if operand_bytes == 0:
+            # operand not found (e.g. inlined constant) — fall back to the
+            # result size, which upper-bounds the operand for reduce-style
+            # ops and equals output for all-reduce.
+            operand_bytes = _shape_bytes(shape_str)
+        bytes_by_kind[kind] += operand_bytes
+        count_by_kind[kind] += 1
+        largest.append((kind, operand_bytes, shape_str.strip()))
+    largest.sort(key=lambda t: -t[1])
+    return CollectiveStats(bytes_by_kind=bytes_by_kind,
+                           count_by_kind=count_by_kind,
+                           largest=largest[:top_n])
+
+
+def op_census(hlo_text: str) -> Dict[str, int]:
+    """Instruction-kind histogram — used by §Perf to spot remat recompute
+    (duplicate fusions) and layout churn (transpose/reshape counts)."""
+    census: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if not m:
+            continue
+        op = m.group(3).rstrip("0123456789.")
+        census[op] = census.get(op, 0) + 1
+    return census
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (TPU v5e)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW_PER_LINK = 50e9          # bytes/s per link (~)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    n_links: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / (self.n_links * ICI_BW_PER_LINK)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "roofline_fraction": (self.t_compute / self.t_bound
+                                  if self.t_bound > 0 else 0.0),
+        }

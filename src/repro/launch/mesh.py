@@ -1,0 +1,31 @@
+"""Production meshes.  Defined as FUNCTIONS so importing this module never
+touches jax device state (jax locks the device count on first backend
+init — the dry-run must set XLA_FLAGS before that happens)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: 16x16 = 256 chips per pod; the multi-pod
+    variant prepends a pure-DP "pod" axis (2 pods = 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has (smoke tests, examples): all local
+    devices on a ("data",) axis."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def dp_shards(mesh) -> int:
+    """Number of data-parallel shards (pod x data axes)."""
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n

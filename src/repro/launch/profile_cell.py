@@ -1,0 +1,114 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Byte/FLOP profiler for one dry-run cell: recursive while-weighted
+breakdown of the biggest contributors (the §Perf 'profile' on a CPU-only
+container — reasoned from lowered IR, not wall-clock).
+
+    python -m repro.launch.profile_cell --arch command-r-35b --shape train_4k
+"""
+
+import argparse
+import sys
+
+import jax
+
+from ..launch import hlo_cost
+from ..launch.mesh import make_production_mesh
+
+
+def drill(mc: "hlo_cost.ModuleCost", comp_name: str, mult: float, depth: int,
+          min_bytes: float, max_depth: int):
+    comp = mc.comps[comp_name]
+    shapes = comp.instr_shapes()
+    rows = []
+    for i in comp.instrs:
+        b = f = 0.0
+        if i.op == "while":
+            body = hlo_cost._ATTR_BODY_RE.search(i.tail)
+            m = hlo_cost._TRIP_CFG_RE.search(i.tail)
+            trips = float(m.group(1)) if m else 1.0
+            c = mc.comp_cost(body.group(1))
+            b, f = trips * c.bytes, trips * c.flops
+        else:
+            # reuse the walker's per-instruction rules via a one-op pass
+            tmp = hlo_cost.Cost()
+            mc_shapes = shapes
+
+            def operand_bytes(ins):
+                return sum(hlo_cost._shape_bytes(mc_shapes.get(o, ""))
+                           for o in ins.operands)
+            if i.op == "fusion":
+                mm = hlo_cost._ATTR_CALLS_RE.search(i.tail)
+                if mm:
+                    f = mc._fused_flops(mm.group(1))
+                if "dynamic-update-slice" in i.name:
+                    ob = [hlo_cost._shape_bytes(mc_shapes.get(o, ""))
+                          for o in i.operands]
+                    b = 2 * (sum(ob) - max(ob)) if ob else 0
+                elif "dynamic-slice" in i.name and "dot" not in i.name:
+                    b = 2 * hlo_cost._shape_bytes(i.shape_str)
+                else:
+                    util = mc._fusion_param_util(mm.group(1)) if mm else {}
+                    b = sum(util.get(k, hlo_cost._shape_bytes(
+                        mc_shapes.get(o, ""))) for k, o in
+                        enumerate(i.operands)) + hlo_cost._shape_bytes(i.shape_str)
+            elif i.op in hlo_cost.COLLECTIVE_KINDS:
+                b = operand_bytes(i) or hlo_cost._shape_bytes(i.shape_str)
+            elif i.op == "dot":
+                f = hlo_cost._dot_flops(i, mc_shapes)
+                b = operand_bytes(i) + hlo_cost._shape_bytes(i.shape_str)
+            elif i.op in hlo_cost._SKIP_BYTES_OPS:
+                pass
+            elif i.op in ("dynamic-slice", "gather"):
+                b = 2 * hlo_cost._shape_bytes(i.shape_str)
+            elif i.op == "dynamic-update-slice":
+                b = (2 * hlo_cost._shape_bytes(
+                    mc_shapes.get(i.operands[1], ""))
+                    if len(i.operands) > 1 else 0)
+            else:
+                b = operand_bytes(i) + hlo_cost._shape_bytes(i.shape_str)
+                f = hlo_cost._shape_elems(i.shape_str)
+        rows.append((i, b * mult, f * mult))
+    rows.sort(key=lambda r: -r[1])
+    for i, b, f in rows[:10]:
+        if b < min_bytes:
+            continue
+        import re
+        meta = re.search(r'op_name="([^"]{0,90})"', i.tail)
+        print("  " * depth + f"{i.op}:{i.name} -> {b:.2e} B {f:.2e} F  "
+              f"[{i.shape_str[:48]}] {meta.group(1)[-60:] if meta else ''}")
+        if i.op == "while" and depth < max_depth:
+            body = hlo_cost._ATTR_BODY_RE.search(i.tail).group(1)
+            m = hlo_cost._TRIP_CFG_RE.search(i.tail)
+            trips = float(m.group(1)) if m else 1.0
+            drill(mc, body, mult * trips, depth + 1, min_bytes, max_depth)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--min-gb", type=float, default=0.2)
+    ap.add_argument("--depth", type=int, default=3)
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args(argv)
+
+    from ..launch import dryrun
+    mesh = make_production_mesh(multi_pod=args.multi)
+    rec, compiled = dryrun.lower_cell(args.arch, args.shape, mesh,
+                                      multi_pod=args.multi)
+    txt = compiled.as_text()
+    if args.save_hlo:
+        open(args.save_hlo, "w").write(txt)
+    mc = hlo_cost.ModuleCost(txt)
+    cost = mc.entry_cost()
+    print(f"{args.arch} x {args.shape}: flops {cost.flops:.3e} "
+          f"bytes {cost.bytes:.3e} coll {cost.total_coll_bytes:.3e}")
+    drill(mc, mc.entry, 1.0, 0, args.min_gb * 1e9, args.depth)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,77 @@
+"""Input stand-ins: ShapeDtypeStruct specs for every model entry point.
+
+The dry-run lowers against these — weak-type-correct, shardable, zero
+allocation.  The same functions double as *generators* of synthetic
+concrete batches for smoke tests and the end-to-end examples (seeded,
+deterministic in (arch, shape, step) — the straggler-mitigation story
+depends on any worker being able to regenerate any step's batch).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import SHAPES, ModelConfig, ShapeConfig
+from .model import init_cache
+
+PyTree = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs_for(cfg: ModelConfig, batch: int, seq: int,
+                    with_targets: bool) -> Dict[str, jax.ShapeDtypeStruct]:
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.inputs_embeds:
+        specs["embeds"] = _sds((batch, seq, cfg.d_model), jnp.float32)
+    else:
+        specs["tokens"] = _sds((batch, seq), jnp.int32)
+    if with_targets:
+        specs["targets"] = _sds((batch, seq), jnp.int32)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                cache_dtype=jnp.bfloat16) -> Dict[str, PyTree]:
+    """Stand-ins for one (arch x shape) cell, keyed by the step function's
+    kwargs:  train -> {batch};  prefill -> {batch};
+    decode -> {tokens, cache, cache_len}."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": batch_specs_for(cfg, B, S, with_targets=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs_for(cfg, B, S, with_targets=False)}
+    assert shape.kind == "decode", shape.kind
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, dtype=cache_dtype))
+    tok = (_sds((B, 1, cfg.d_model), jnp.float32) if cfg.inputs_embeds
+           else _sds((B, 1), jnp.int32))
+    return {"tokens": tok, "cache": cache,
+            "cache_len": _sds((), jnp.int32)}
+
+
+def synthetic_batch(cfg: ModelConfig, batch: int, seq: int, step: int,
+                    with_targets: bool = True) -> Dict[str, jnp.ndarray]:
+    """Deterministic synthetic batch for (cfg, step) — see module doc."""
+    rng = np.random.default_rng((hash(cfg.arch_id) & 0xFFFF, step))
+    out: Dict[str, jnp.ndarray] = {}
+    if cfg.inputs_embeds:
+        out["embeds"] = jnp.asarray(
+            rng.standard_normal((batch, seq, cfg.d_model), dtype=np.float32))
+    else:
+        toks = rng.integers(0, cfg.vocab, size=(batch, seq + 1), dtype=np.int64)
+        out["tokens"] = jnp.asarray(toks[:, :-1], jnp.int32)
+        if with_targets:
+            out["targets"] = jnp.asarray(toks[:, 1:], jnp.int32)
+        return out
+    if with_targets:
+        out["targets"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(batch, seq), dtype=np.int64),
+            jnp.int32)
+    return out

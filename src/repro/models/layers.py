@@ -1,0 +1,194 @@
+"""Core NN layers: RMSNorm, RoPE, GQA attention (global / sliding-window,
+softcap, blockwise-streaming), gated MLP.  Pure JAX, pytree params.
+
+Attention is *blockwise with online softmax* (flash-attention schedule in
+lax.scan form): the (S, S) score matrix is never materialized, which is
+what keeps the 32k-prefill dry-run cells inside per-chip HBM.  Logical
+sharding constraints are annotated at the model level (model.py) — these
+layers are sharding-agnostic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return (jnp.tanh(x / cap) * cap).astype(x.dtype) if cap else x
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                          # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool, window: int = 0, cap: float = 0.0,
+                        q_block: int = 1024, kv_block: int = 1024,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """Online-softmax attention.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    ``window`` > 0 restricts to a sliding window (gemma2 local layers).
+    ``q_offset``: absolute position of q[0] (decode with cache).
+    Returns (B, Sq, Hq, D).
+    """
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    n_rep = Hq // Hkv
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    # pad to block multiples
+    pq = (-Sq) % qb
+    pk = (-Skv) % kb
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = (Sq + pq) // qb, (Skv + pk) // kb
+
+    scale = 1.0 / np.sqrt(D)
+    q = (q * scale).astype(q.dtype)
+
+    # (nq, B, qb, H, D)
+    qs = q.reshape(B, nq, qb, Hq, D).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(B, nk, kb, Hq, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kb, Hq, D).transpose(1, 0, 2, 3, 4)
+
+    q_pos_base = jnp.arange(qb)
+    k_pos_base = jnp.arange(kb)
+
+    def q_step(_, qi):
+        qblk, qidx = qi
+        q_pos = q_offset + qidx * qb + q_pos_base           # (qb,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            k_pos = kidx * kb + k_pos_base                  # (kb,)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk,
+                           preferred_element_type=jnp.float32)
+            s = softcap(s, cap) if cap else s
+            mask = jnp.ones((qb, kb), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None], p, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hq, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hq, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hq, qb, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.transpose(0, 2, 1, 3)              # (B, qb, H, D)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * qb, Hq, D)
+    return out[:, :Sq].astype(v.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     cache_len: jnp.ndarray, *, cap: float = 0.0,
+                     window: int = 0) -> jnp.ndarray:
+    """Single-step attention against a (B, S_max, Hkv, D) cache.
+
+    q: (B, 1, Hq, D); ``cache_len``: scalar or (B,) valid prefix length
+    (the new token is already written at position cache_len-1).
+    ``window`` > 0 restricts to the trailing sliding window.
+    """
+    B, _, Hq, D = q.shape
+    Hkv = k_cache.shape[2]
+    n_rep = Hq // Hkv
+    scale = 1.0 / np.sqrt(D)
+    qh = (q[:, 0] * scale).reshape(B, Hkv, n_rep, D)
+    s = jnp.einsum("bgrd,bsgd->bgrs", qh.astype(jnp.float32),
+                   k_cache.astype(jnp.float32))
+    s = softcap(s, cap) if cap else s
+    pos = jnp.arange(k_cache.shape[1])
+    clen = jnp.reshape(cache_len, (-1, 1))
+    valid = pos[None, :] < clen
+    if window:
+        valid &= pos[None, :] >= (clen - window)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+# ---------------------------------------------------------------------------
+
+def mlp_apply(params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = act_fn(act)(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }

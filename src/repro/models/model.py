@@ -1,0 +1,462 @@
+"""Unified model: every assigned architecture is one ``ModelConfig``
+interpreted by the same apply functions.
+
+Structure: an embedding (or stub-frontend embeds), ``n_units`` repeating
+*units* executed under one ``lax.scan`` (compact HLO, bounded compile
+time at 512 devices), a final norm, and a (tied) LM head.  A unit is
+``period`` consecutive layers — attention (global or sliding-window) or
+Mamba2 SSD — each followed by a dense-MLP or MoE mixer; Zamba2-style
+hybrids additionally run a *shared* attention block (same params every
+invocation, captured as a scan constant) at the end of each unit.
+
+Three entry points per the assigned shape grid:
+  * ``loss_fn``        — train_* shapes (next-token CE, full sequence);
+  * ``prefill``        — prefill_* shapes (forward + emit KV/SSM caches);
+  * ``decode_step``    — decode_* / long_* shapes (1 token, cache update).
+
+Sharding: activations carry ``constrain`` annotations against the global
+mesh (no-ops on CPU smoke tests); parameters get their PartitionSpecs
+from ``repro.distributed.sharding`` at jit boundary — these functions are
+mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import constrain, get_global_mesh
+from .config import ModelConfig
+from .flash import flash_attention
+from .layers import (apply_rope, blockwise_attention, decode_attention,
+                     mlp_apply, mlp_init, rms_norm, softcap)
+from .moe import moe_apply, moe_init
+from .ssm import (SSMCache, SSMConfig, ssm_apply, ssm_cache_init,
+                  ssm_decode_step, ssm_init, ssm_prefill_cache)
+
+PyTree = Any
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def ssm_cfg(cfg: ModelConfig) -> SSMConfig:
+    return SSMConfig(d_model=cfg.d_model, d_inner=cfg.d_inner,
+                     d_state=cfg.d_state, head_dim=cfg.ssm_head_dim,
+                     d_conv=cfg.d_conv, chunk=cfg.chunk)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _attn_layer_init(key, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    d, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    s = 1.0 / np.sqrt(d)
+    so = 1.0 / np.sqrt(H * hd)
+    p = {
+        "ln1": jnp.zeros((d,), dtype),
+        "wq": (jax.random.normal(ks[0], (d, H, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, Kv, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, Kv, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H, hd, d)) * so).astype(dtype),
+        "ln2": jnp.zeros((d,), dtype),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_init(ks[4], d, cfg.n_experts, cfg.moe_d_ff,
+                            cfg.n_shared, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[4], d, cfg.d_ff, dtype)
+    if cfg.post_norms:
+        p["post_ln1"] = jnp.zeros((d,), dtype)
+        p["post_ln2"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _ssm_layer_init(key, cfg: ModelConfig, dtype) -> dict:
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+         "ssm": ssm_init(key, ssm_cfg(cfg), dtype)}
+    return p
+
+
+def _unit_init(key, cfg: ModelConfig, dtype) -> dict:
+    keys = jax.random.split(key, cfg.period)
+    unit = {}
+    for pos in range(cfg.period):
+        if cfg.ssm:
+            unit[f"l{pos}"] = _ssm_layer_init(keys[pos], cfg, dtype)
+        else:
+            unit[f"l{pos}"] = _attn_layer_init(keys[pos], cfg, dtype)
+    return unit
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    dtype = _dtype(cfg.param_dtype)
+    k_embed, k_units, k_shared, k_head = jax.random.split(key, 4)
+    params: Dict[str, PyTree] = {}
+    if not cfg.inputs_embeds:
+        params["embed"] = (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model))
+                           * 1.0).astype(dtype)
+    unit_keys = jax.random.split(k_units, cfg.n_units)
+    params["units"] = jax.vmap(
+        lambda k: _unit_init(k, cfg, dtype))(unit_keys)
+    if cfg.ssm and cfg.shared_attn_every:
+        params["shared"] = _attn_layer_init(k_shared, cfg, dtype)
+    params["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings or cfg.inputs_embeds:
+        params["lm_head"] = (jax.random.normal(k_head, (cfg.d_model, cfg.vocab))
+                             / np.sqrt(cfg.d_model)).astype(dtype)
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    """ShapeDtypeStruct pytree — what the dry-run lowers against (no
+    allocation; the full configs are never materialized on this host)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p: dict, h: jnp.ndarray):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    return (constrain(q, ("batch", None, "model", None)),
+            constrain(k, ("batch", None, "model", None)),
+            constrain(v, ("batch", None, "model", None)))
+
+
+def _moe_dispatch(moe_params: dict, h: jnp.ndarray, cfg: ModelConfig,
+                  moe_groups: int) -> jnp.ndarray:
+    """Pick the MoE path: explicit shard_map expert parallelism when a
+    "model" mesh axis exists (production), GSPMD-local dispatch otherwise
+    (single host / smoke tests)."""
+    mesh = get_global_mesh()
+    if mesh is not None and "model" in mesh.axis_names:
+        from .moe_sharded import moe_apply_sharded
+        return moe_apply_sharded(moe_params, h, mesh, top_k=cfg.top_k,
+                                 act=cfg.act,
+                                 capacity_factor=cfg.capacity_factor)
+    return moe_apply(moe_params, h, top_k=cfg.top_k, act=cfg.act,
+                     num_groups=moe_groups,
+                     capacity_factor=cfg.capacity_factor)
+
+
+def _attn_layer(p: dict, x: jnp.ndarray, cfg: ModelConfig, kind: str, *,
+                positions: jnp.ndarray, moe_groups: int,
+                emit_cache: bool = False):
+    window = cfg.window if kind == "local" else 0
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, h)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    attn_fn = (flash_attention if cfg.attn_impl == "flash"
+               else blockwise_attention)
+    attn = attn_fn(q, k, v, causal=cfg.causal, window=window,
+                   cap=cfg.softcap_attn)
+    out = jnp.einsum("bshk,hkd->bsd", attn, p["wo"])
+    if cfg.post_norms:
+        out = rms_norm(out, p["post_ln1"], cfg.norm_eps)
+    x = x + out
+    x = constrain(x, ("batch", None, None))
+
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        m = _moe_dispatch(p["moe"], h2, cfg, moe_groups)
+    else:
+        m = mlp_apply(p["mlp"], h2, cfg.act)
+    if cfg.post_norms:
+        m = rms_norm(m, p["post_ln2"], cfg.norm_eps)
+    x = x + m
+    x = constrain(x, ("batch", None, None))
+    cache = (k, v) if emit_cache else None
+    return x, cache
+
+
+def _attn_layer_decode(p: dict, x: jnp.ndarray, cfg: ModelConfig, kind: str, *,
+                       cache: Tuple[jnp.ndarray, jnp.ndarray],
+                       cache_len: jnp.ndarray, moe_groups: int):
+    """One-token attention layer against a (B, S_cache, Kv, hd) cache pair.
+
+    Sliding-window ("local") layers use a ROLLING cache of width
+    ``min(window, s_max)``: key at absolute position p lives in slot
+    p % W, so the buffer always holds exactly the attention window —
+    §Perf P4 (halves gemma2's decode_32k cache bytes).  Softmax is
+    permutation-invariant over keys, so slot order is irrelevant; RoPE
+    is applied at absolute positions before caching.
+    """
+    k_cache, v_cache = cache
+    W = k_cache.shape[1]
+    rolling = kind == "local" and W <= cfg.window
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, h)
+    pos = jnp.reshape(cache_len, (1,))              # position of the new token
+    q = apply_rope(q, pos[None, :], cfg.rope_theta)
+    k = apply_rope(k, pos[None, :], cfg.rope_theta)
+    mesh = get_global_mesh()
+    if (not rolling and cfg.decode_kv_shard == "seq" and mesh is not None
+            and "model" in mesh.axis_names):
+        from .decode_sp import decode_attention_seq_sharded
+        attn, k_cache, v_cache = decode_attention_seq_sharded(
+            q, k, v, k_cache, v_cache, cache_len, mesh,
+            cap=cfg.softcap_attn)
+        return _attn_decode_tail(p, x, cfg, attn, moe_groups), (k_cache,
+                                                                v_cache)
+    slot = cache_len % W if rolling else cache_len
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), slot, axis=1)
+    if rolling:
+        attn = decode_attention(q, k_cache, v_cache,
+                                jnp.minimum(cache_len + 1, W),
+                                cap=cfg.softcap_attn)
+    else:
+        attn = decode_attention(q, k_cache, v_cache, cache_len + 1,
+                                cap=cfg.softcap_attn,
+                                window=cfg.window if kind == "local" else 0)
+    return _attn_decode_tail(p, x, cfg, attn, moe_groups), (k_cache, v_cache)
+
+
+def _attn_decode_tail(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                      attn: jnp.ndarray, moe_groups: int) -> jnp.ndarray:
+    out = jnp.einsum("bshk,hkd->bsd", attn, p["wo"])
+    if cfg.post_norms:
+        out = rms_norm(out, p["post_ln1"], cfg.norm_eps)
+    x = x + out
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        m = _moe_dispatch(p["moe"], h2, cfg, moe_groups)
+    else:
+        m = mlp_apply(p["mlp"], h2, cfg.act)
+    if cfg.post_norms:
+        m = rms_norm(m, p["post_ln2"], cfg.norm_eps)
+    return x + m
+
+
+def _ssm_layer(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+               emit_cache: bool = False):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if emit_cache:
+        out, state = ssm_apply(p["ssm"], h, ssm_cfg(cfg),
+                               norm_eps=cfg.norm_eps, return_state=True)
+        x = x + out
+        return constrain(x, ("batch", None, None)), state
+    out = ssm_apply(p["ssm"], h, ssm_cfg(cfg), norm_eps=cfg.norm_eps)
+    x = x + out
+    return constrain(x, ("batch", None, None)), None
+
+
+def _ssm_layer_decode(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                      cache: SSMCache):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    out, new_cache = ssm_decode_step(p["ssm"], h, cache, ssm_cfg(cfg),
+                                     norm_eps=cfg.norm_eps)
+    return x + out, new_cache
+
+
+def _layer_kind(cfg: ModelConfig, pos: int) -> str:
+    if cfg.ssm:
+        return "ssm"
+    return cfg.attn_kinds[pos % len(cfg.attn_kinds)]
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _compute_dtype_of(params: PyTree):
+    """The residual-stream dtype follows the (possibly bf16-cast) params —
+    callers control precision via ``train.steps.cast_for_compute``."""
+    ref = params["embed"] if "embed" in params else params["lm_head"]
+    return ref.dtype
+
+
+def embed_inputs(params: PyTree, cfg: ModelConfig, batch: Dict) -> jnp.ndarray:
+    dtype = _compute_dtype_of(params)
+    if cfg.inputs_embeds:
+        x = batch["embeds"].astype(dtype)
+    else:
+        x = params["embed"][batch["tokens"]].astype(dtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return constrain(x, ("batch", None, None))
+
+
+def _lm_logits(params: PyTree, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if "lm_head" in params:
+        logits = x @ params["lm_head"]
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    logits = softcap(logits.astype(jnp.float32), cfg.softcap_final)
+    return constrain(logits, ("batch", None, "model"))
+
+
+def forward(params: PyTree, cfg: ModelConfig, batch: Dict, *,
+            moe_groups: int = 1, remat: bool = False) -> jnp.ndarray:
+    """Full-sequence forward -> (B, S, vocab) f32 logits."""
+    x = embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def unit_fn(h, unit):
+        for pos in range(cfg.period):
+            p = unit[f"l{pos}"]
+            kind = _layer_kind(cfg, pos)
+            if kind == "ssm":
+                h, _ = _ssm_layer(p, h, cfg)
+            else:
+                h, _ = _attn_layer(p, h, cfg, kind, positions=positions,
+                                   moe_groups=moe_groups)
+        if cfg.ssm and cfg.shared_attn_every:
+            h, _ = _attn_layer(params["shared"], h, cfg, "global",
+                               positions=positions, moe_groups=moe_groups)
+        return h, None
+
+    if remat:
+        unit_fn = jax.checkpoint(unit_fn, prevent_cse=False)
+    x, _ = jax.lax.scan(unit_fn, x, params["units"])
+    return _lm_logits(params, cfg, x)
+
+
+def loss_fn(params: PyTree, cfg: ModelConfig, batch: Dict, *,
+            moe_groups: int = 1, remat: bool = False) -> jnp.ndarray:
+    """Mean next-token (or frame-label) cross entropy.
+
+    LM batches: {"tokens" (B,S), "targets" (B,S)} — targets are the
+    pipeline-shifted next tokens; positions with target < 0 are masked.
+    Frontend-stub batches: {"embeds" (B,S,d), "targets" (B,S)}.
+    """
+    logits = forward(params, cfg, batch, moe_groups=moe_groups, remat=remat)
+    targets = batch["targets"]
+    mask = (targets >= 0).astype(jnp.float32)
+    t_safe = jnp.maximum(targets, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, t_safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16) -> PyTree:
+    """Empty per-unit cache pytree, stacked (n_units, ...) for the scan."""
+    def one_unit(_):
+        unit = {}
+        for pos in range(cfg.period):
+            if cfg.ssm:
+                unit[f"l{pos}"] = ssm_cache_init(batch, ssm_cfg(cfg), dtype)
+            else:
+                # local layers: rolling window cache (§Perf P4)
+                s_c = (min(cfg.window, s_max)
+                       if _layer_kind(cfg, pos) == "local" else s_max)
+                kv = jnp.zeros((batch, s_c, cfg.n_kv, cfg.head_dim), dtype)
+                unit[f"l{pos}"] = (kv, kv)
+        if cfg.ssm and cfg.shared_attn_every:
+            kv = jnp.zeros((batch, s_max, cfg.n_kv, cfg.head_dim), dtype)
+            unit["shared"] = (kv, kv)
+        return unit
+    return jax.vmap(one_unit)(jnp.arange(cfg.n_units))
+
+
+def prefill(params: PyTree, cfg: ModelConfig, batch: Dict, *,
+            s_max: Optional[int] = None, moe_groups: int = 1,
+            cache_dtype=jnp.bfloat16):
+    """Forward + emit caches.  Returns (last-position logits, cache,
+    cache_len)."""
+    x = embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    s_max = s_max or S
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def pad_kv(kv, kind="global"):
+        k, v = kv
+        if kind == "local" and min(cfg.window, s_max) < s_max:
+            # rolling cache: keep the last W keys, each at slot p % W
+            W = min(cfg.window, s_max)
+            lo = max(S - W, 0)
+            p = jnp.arange(lo, S)
+            buf_k = jnp.zeros((k.shape[0], W) + k.shape[2:], cache_dtype)
+            buf_v = jnp.zeros_like(buf_k)
+            buf_k = buf_k.at[:, p % W].set(k[:, lo:S].astype(cache_dtype))
+            buf_v = buf_v.at[:, p % W].set(v[:, lo:S].astype(cache_dtype))
+            return (buf_k, buf_v)
+        if s_max > S:
+            pad = [(0, 0), (0, s_max - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return (k.astype(cache_dtype), v.astype(cache_dtype))
+
+    def unit_fn(h, unit):
+        caches = {}
+        for pos in range(cfg.period):
+            p = unit[f"l{pos}"]
+            kind = _layer_kind(cfg, pos)
+            if kind == "ssm":
+                hp = rms_norm(h, p["ln1"], cfg.norm_eps)
+                out, state = ssm_apply(p["ssm"], hp, ssm_cfg(cfg),
+                                       norm_eps=cfg.norm_eps, return_state=True)
+                h = h + out
+                caches[f"l{pos}"] = ssm_prefill_cache(
+                    p["ssm"], hp, state, ssm_cfg(cfg), dtype=cache_dtype)
+            else:
+                h, kv = _attn_layer(p, h, cfg, kind, positions=positions,
+                                    moe_groups=moe_groups, emit_cache=True)
+                caches[f"l{pos}"] = pad_kv(kv, kind)
+        if cfg.ssm and cfg.shared_attn_every:
+            h, kv = _attn_layer(params["shared"], h, cfg, "global",
+                                positions=positions, moe_groups=moe_groups,
+                                emit_cache=True)
+            caches["shared"] = pad_kv(kv)
+        return h, caches
+
+    x, cache = jax.lax.scan(unit_fn, x, params["units"])
+    logits = _lm_logits(params, cfg, x[:, -1:])
+    return logits[:, 0], cache, jnp.int32(S)
+
+
+def decode_step(params: PyTree, cfg: ModelConfig, tokens: jnp.ndarray,
+                cache: PyTree, cache_len: jnp.ndarray, *,
+                moe_groups: int = 1):
+    """One decode step.  tokens: (B, 1) int32 (or embeds (B, 1, d)).
+    Returns (logits (B, vocab) f32, new_cache)."""
+    batch = {"tokens": tokens} if not cfg.inputs_embeds else {"embeds": tokens}
+    x = embed_inputs(params, cfg, batch)
+
+    def unit_fn(h, xs):
+        unit, ucache = xs
+        new_cache = {}
+        for pos in range(cfg.period):
+            p = unit[f"l{pos}"]
+            kind = _layer_kind(cfg, pos)
+            if kind == "ssm":
+                h, nc = _ssm_layer_decode(p, h, cfg, cache=ucache[f"l{pos}"])
+            else:
+                h, nc = _attn_layer_decode(p, h, cfg, kind,
+                                           cache=ucache[f"l{pos}"],
+                                           cache_len=cache_len,
+                                           moe_groups=moe_groups)
+            new_cache[f"l{pos}"] = nc
+        if cfg.ssm and cfg.shared_attn_every:
+            h, nc = _attn_layer_decode(params["shared"], h, cfg, "global",
+                                       cache=ucache["shared"],
+                                       cache_len=cache_len,
+                                       moe_groups=moe_groups)
+            new_cache["shared"] = nc
+        return h, new_cache
+
+    x, new_cache = jax.lax.scan(unit_fn, x, (params["units"], cache))
+    logits = _lm_logits(params, cfg, x)
+    return logits[:, 0], new_cache

@@ -1,0 +1,125 @@
+"""Expert-parallel MoE via shard_map — the production dispatch path.
+
+GSPMD partitions einsums beautifully but falls back to
+replicate+all-reduce for the data-dependent scatter/gather of MoE
+dispatch (measured: ~2.4 GB of collectives per layer on the
+granite-moe train cell).  This module sidesteps auto-sharding entirely
+for the MoE block with an explicit SPMD formulation:
+
+  * activations are REPLICATED over the "model" axis (Megatron
+    convention) and sharded over (pod, data) — so every model rank
+    already holds all tokens of its data shard;
+  * each model rank owns E/m contiguous experts (weights sharded over
+    "model" on E, FSDP over "data" on d — manually all-gathered, whose
+    transpose is the ZeRO reduce-scatter);
+  * dispatch = LOCAL scatter of the rank's own tokens to its own
+    experts — no collective at all;
+  * combine = local gather + gate-weighted sum, then ONE psum over
+    "model" (25 MB/layer on granite, vs 2.4 GB under auto-sharding) —
+    identical in shape and cost to a Megatron MLP's output reduction.
+
+Numerically identical to ``moe.moe_apply`` (same routing, same
+capacity-drop policy) — asserted in tests/test_moe_sharded.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .layers import act_fn
+from .moe import _route
+
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def moe_apply_sharded(params: dict, x: jnp.ndarray, mesh: Mesh, *,
+                      top_k: int, act: str,
+                      capacity_factor: float = 1.25) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d) under explicit expert parallelism."""
+    E = params["router"].shape[-1]
+    m_size = mesh.shape["model"]
+    assert E % m_size == 0, (E, m_size)
+    e_loc = E // m_size
+    has_shared = "shared" in params
+    batch = _batch_axes(mesh)
+
+    in_specs = [
+        P(batch, None, None),          # x  (replicated over model)
+        P("data", None),               # router (d, E)
+        P("model", "data", None),      # w_gate (E, d, ff)
+        P("model", "data", None),      # w_up
+        P("model", None, "data"),      # w_down (E, ff, d)
+    ]
+    args = [x, params["router"], params["w_gate"], params["w_up"],
+            params["w_down"]]
+    if has_shared:
+        in_specs += [P("data", "model"), P("data", "model"),
+                     P("model", "data")]
+        args += [params["shared"]["w_gate"], params["shared"]["w_up"],
+                 params["shared"]["w_down"]]
+
+    def body(x_loc, router_w, wg, wu, wd, *shared_w):
+        # undo FSDP: gather the d-dim shards (transpose = reduce-scatter)
+        router_full = jax.lax.all_gather(router_w, "data", axis=0, tiled=True)
+        wg_full = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+        wu_full = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+        wd_full = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+
+        b_loc, s, d = x_loc.shape
+        t = b_loc * s
+        xt = x_loc.reshape(t, d)
+        gates, idx = _route(router_full, xt, top_k)      # (t, k) f32/int
+
+        rank = jax.lax.axis_index("model")
+        lo = rank * e_loc
+        rel = idx - lo                                   # (t, k)
+        sel = (rel >= 0) & (rel < e_loc)
+        rel_c = jnp.clip(rel, 0, e_loc - 1).reshape(-1)  # (t*k,)
+        sel_f = sel.reshape(-1)
+
+        onehot = (jax.nn.one_hot(rel_c, e_loc, dtype=jnp.int32)
+                  * sel_f[:, None].astype(jnp.int32))
+        pos = jnp.cumsum(onehot, axis=0) - 1
+        pos_own = (pos * onehot).sum(-1)                 # (t*k,)
+        cap = max(int(np.ceil(t * top_k / E * capacity_factor)), top_k)
+        keep = sel_f & (pos_own < cap)
+        dest = jnp.where(keep, rel_c * cap + pos_own, e_loc * cap)
+
+        src = jnp.broadcast_to(xt[:, None, :], (t, top_k, d)).reshape(-1, d)
+        buf = jnp.zeros((e_loc * cap + 1, d), x_loc.dtype)
+        buf = buf.at[dest].set(src, mode="drop")
+        be = buf[:-1].reshape(e_loc, cap, d)
+
+        h = jnp.einsum("ecd,edf->ecf", be, wg_full)
+        u = jnp.einsum("ecd,edf->ecf", be, wu_full)
+        h = act_fn(act)(h) * u
+        o = jnp.einsum("ecf,efd->ecd", h, wd_full).reshape(e_loc * cap, d)
+        o = jnp.concatenate([o, jnp.zeros((1, d), o.dtype)], axis=0)
+
+        picked = o[dest]                                  # (t*k, d) local
+        w = (gates.reshape(-1) * keep).astype(x_loc.dtype)
+        y = (picked * w[:, None]).reshape(t, top_k, d).sum(axis=1)
+
+        if shared_w:
+            sg, su, sd = shared_w
+            sg_full = jax.lax.all_gather(sg, "data", axis=0, tiled=True)
+            su_full = jax.lax.all_gather(su, "data", axis=0, tiled=True)
+            sd_full = jax.lax.all_gather(sd, "data", axis=1, tiled=True)
+            hs = act_fn(act)(xt @ sg_full) * (xt @ su_full)
+            y = y + hs @ sd_full                          # partial over ff
+
+        y = jax.lax.psum(y, "model")
+        return y.reshape(b_loc, s, d)
+
+    fn = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                   out_specs=P(batch, None, None), check_rep=False)
+    return fn(*args)

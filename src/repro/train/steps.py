@@ -1,0 +1,115 @@
+"""Train / serve step factories — the functions the launcher jits.
+
+``make_train_step``: microbatched gradient accumulation under
+``lax.scan`` (donated carry), per-unit remat inside the model scan,
+bf16 compute with f32 master params and f32 gradient accumulation.
+
+Mixed-precision / gradient-compression contract (verified in the dry-run
+HLO, see EXPERIMENTS.md §Dry-run): parameters are cast to bf16 *inside*
+the differentiated function, so the FSDP all-gather (fwd) and its
+transpose reduce-scatter (bwd), plus the cross-pod gradient all-reduce,
+all carry bf16 — half the collective bytes of an f32 scheme — while the
+local accumulation and the AdamW update stay f32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from ..models import model as M
+from ..models.config import ModelConfig
+from ..optim.adamw import AdamWState, Hyper, adamw_update
+
+PyTree = Any
+
+
+def cast_for_compute(params: PyTree, dtype=jnp.bfloat16) -> PyTree:
+    """f32 master -> bf16 compute copies (matrices only; norms/scalars and
+    integer buffers keep their dtype)."""
+    def cast(p):
+        if p.dtype == jnp.float32 and p.ndim >= 2:
+            return p.astype(dtype)
+        return p
+    return jax.tree_util.tree_map(cast, params)
+
+
+def _split_microbatches(batch: Dict, num: int) -> Dict:
+    def split(x):
+        assert x.shape[0] % num == 0, (x.shape, num)
+        return x.reshape((num, x.shape[0] // num) + x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, hyper: Hyper, *,
+                    num_microbatches: int = 1, moe_groups: int = 1,
+                    remat: bool = True,
+                    compute_dtype=jnp.bfloat16) -> Callable:
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+
+    def loss_of(params_f32, mb):
+        params_c = cast_for_compute(params_f32, compute_dtype)
+        return M.loss_fn(params_c, cfg, mb, moe_groups=moe_groups,
+                         remat=remat)
+
+    def train_step(params: PyTree, opt_state: AdamWState, batch: Dict):
+        if num_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, num_microbatches)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_fn(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_of)(params, mb)
+                grad_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            (loss, grads), _ = jax.lax.scan(
+                acc_fn, (jnp.float32(0.0), zero), mbs)
+            inv = 1.0 / num_microbatches
+            loss = loss * inv
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+
+        new_params, new_state, metrics = adamw_update(
+            grads, opt_state, params, hyper)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, *, moe_groups: int = 1,
+                   compute_dtype=jnp.bfloat16) -> Callable:
+    def eval_step(params, batch):
+        params_c = cast_for_compute(params, compute_dtype)
+        return M.loss_fn(params_c, cfg, batch, moe_groups=moe_groups)
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, moe_groups: int = 1,
+                      s_max: Optional[int] = None,
+                      compute_dtype=jnp.bfloat16) -> Callable:
+    def prefill_step(params, batch):
+        params_c = cast_for_compute(params, compute_dtype)
+        return M.prefill(params_c, cfg, batch, s_max=s_max,
+                         moe_groups=moe_groups)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, moe_groups: int = 1,
+                     compute_dtype=jnp.bfloat16) -> Callable:
+    """serve_step for the decode_* / long_* cells: one new token against
+    a seq_len-deep cache."""
+    def decode_step(params, tokens, cache, cache_len):
+        params_c = cast_for_compute(params, compute_dtype)
+        return M.decode_step(params_c, cfg, tokens, cache, cache_len,
+                             moe_groups=moe_groups)
+    return decode_step

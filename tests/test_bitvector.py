@@ -1,0 +1,84 @@
+"""Unit + property tests for the succinct bitvector (rank/select)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitvector import BitVector, pack_bits_matrix
+
+
+def brute_rank(bits, i):
+    return int(np.sum(bits[:i]))
+
+
+def brute_select(bits, k):
+    ones = np.flatnonzero(bits)
+    if k < 1 or k > len(ones):
+        return len(bits)
+    return int(ones[k - 1])
+
+
+def test_paper_example():
+    # B = [01101011] -> rank(B,5)=3, select(B,4)=7 with the paper's
+    # 1-indexed inclusive rank; ours is exclusive 0-indexed: rank(5)=#1s in [0,5)
+    bits = np.array([0, 1, 1, 0, 1, 0, 1, 1])
+    bv = BitVector.from_bits(bits)
+    assert int(bv.rank(5)) == 3  # paper rank(B,5)=3
+    assert int(bv.select(4)) == 6  # paper select(B,4)=7 (1-indexed) -> 0-indexed 6
+    assert int(bv.select(99)) == 8  # out of range -> N
+
+
+def test_rank_select_small_dense():
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, size=257).astype(np.uint8)
+    bv = BitVector.from_bits(bits)
+    idx = np.arange(258)
+    got = np.asarray(bv.rank(jnp.asarray(idx)))
+    want = np.array([brute_rank(bits, i) for i in idx])
+    np.testing.assert_array_equal(got, want)
+    total = int(bits.sum())
+    ks = np.arange(1, total + 1)
+    got_s = np.asarray(bv.select(jnp.asarray(ks)))
+    want_s = np.array([brute_select(bits, k) for k in ks])
+    np.testing.assert_array_equal(got_s, want_s)
+
+
+def test_get():
+    bits = np.array([1, 0, 0, 1, 1] * 20, dtype=np.uint8)
+    bv = BitVector.from_bits(bits)
+    got = np.asarray(bv.get(jnp.arange(len(bits))))
+    np.testing.assert_array_equal(got, bits)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=300), st.data())
+def test_rank_select_property(bit_list, data):
+    bits = np.array(bit_list, dtype=np.uint8)
+    bv = BitVector.from_bits(bits)
+    i = data.draw(st.integers(0, len(bits)))
+    assert int(bv.rank(i)) == brute_rank(bits, i)
+    total = int(bits.sum())
+    if total:
+        k = data.draw(st.integers(1, total))
+        assert int(bv.select(k)) == brute_select(bits, k)
+    # rank/select inverse: rank(select(k)) == k-1 for valid k
+    if total:
+        k = data.draw(st.integers(1, total))
+        pos = int(bv.select(k))
+        assert int(bv.rank(pos)) == k - 1
+        assert int(bv.get(pos)) == 1
+
+
+def test_pack_bits_matrix():
+    rng = np.random.default_rng(1)
+    bits = rng.integers(0, 2, size=(5, 70)).astype(np.uint8)
+    words, pops = pack_bits_matrix(bits)
+    assert words.shape == (5, 3)
+    np.testing.assert_array_equal(pops, bits.sum(axis=1))
+    # unpack round-trip
+    for r in range(5):
+        unpacked = []
+        for w in words[r]:
+            unpacked.extend([(int(w) >> i) & 1 for i in range(32)])
+        np.testing.assert_array_equal(np.array(unpacked[:70], dtype=np.uint8), bits[r])

@@ -1,0 +1,175 @@
+"""End-to-end correctness of the trie indexes: every searcher must return
+exactly the brute-force Hamming-threshold solution set."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (build_bst, build_fst_style, build_louds, build_multi_index,
+                        make_batch_searcher, make_searcher, mi_search, search)
+from repro.core.trie_builder import build_trie_levels, pick_layers
+from repro.core.baselines import SIH, MIH, HmSearch, LinearScan
+
+
+def brute_mask(db, q, tau):
+    return (db != q[None, :]).sum(axis=1) <= tau
+
+
+def random_db(rng, n, L, b, dup_frac=0.3):
+    """Random DB with deliberate duplicates (leaves must aggregate ids)."""
+    n_uniq = max(1, int(n * (1 - dup_frac)))
+    base = rng.integers(0, 1 << b, size=(n_uniq, L)).astype(np.uint8)
+    extra = base[rng.integers(0, n_uniq, size=n - n_uniq)]
+    db = np.concatenate([base, extra], axis=0)
+    rng.shuffle(db)
+    return db
+
+
+def clustered_db(rng, n, L, b):
+    """Clustered DB (realistic: sketches of similar items share prefixes)."""
+    n_centers = max(1, n // 20)
+    centers = rng.integers(0, 1 << b, size=(n_centers, L)).astype(np.uint8)
+    which = rng.integers(0, n_centers, size=n)
+    db = centers[which]
+    flips = rng.random((n, L)) < 0.1
+    noise = rng.integers(0, 1 << b, size=(n, L)).astype(np.uint8)
+    return np.where(flips, noise, db).astype(np.uint8)
+
+
+PAPER_SETTINGS = [(16, 2), (32, 2), (32, 4), (64, 8)]  # (L, b) of the 4 datasets
+
+
+@pytest.mark.parametrize("L,b", PAPER_SETTINGS)
+@pytest.mark.parametrize("tau", [0, 1, 3])
+def test_bst_exact_vs_bruteforce(L, b, tau):
+    rng = np.random.default_rng(L * 10 + b + tau)
+    db = random_db(rng, 300, L, b)
+    idx = build_bst(db, b)
+    for qi in range(4):
+        q = db[rng.integers(0, len(db))] if qi % 2 == 0 else \
+            rng.integers(0, 1 << b, size=L).astype(np.uint8)
+        res = search(idx, q, tau)
+        assert int(res.overflow) == 0
+        np.testing.assert_array_equal(np.asarray(res.mask), brute_mask(db, q, tau))
+
+
+@pytest.mark.parametrize("builder", [build_bst, build_louds, build_fst_style])
+def test_all_structures_agree(builder):
+    rng = np.random.default_rng(0)
+    db = clustered_db(rng, 400, 16, 2)
+    idx = builder(db, 2)
+    for tau in [1, 2, 4]:
+        q = db[5]
+        res = search(idx, q, tau)
+        assert int(res.overflow) == 0
+        np.testing.assert_array_equal(np.asarray(res.mask), brute_mask(db, q, tau))
+
+
+def test_layer_structure_sane():
+    rng = np.random.default_rng(1)
+    # uniform random sketches over a small alphabet -> nontrivial dense layer
+    db = rng.integers(0, 4, size=(4096, 16)).astype(np.uint8)
+    trie = build_trie_levels(db, 2)
+    lm, ls = pick_layers(trie)
+    assert 0 <= lm <= ls <= 16
+    assert trie.t[16] == len(np.unique(db.view(f"V16").reshape(-1)))
+    # dense layer really is complete
+    for lev in range(1, lm + 1):
+        assert trie.t[lev] == 4 ** lev
+    idx = build_bst(db, 2, trie=trie)
+    assert idx.lm == lm and idx.ls == ls
+    # space accounting is positive and the model is below pointer-trie scale
+    t_total = sum(trie.t[1:])
+    assert 0 < idx.model_bits() < 64 * t_total
+
+
+def test_batched_searcher():
+    rng = np.random.default_rng(2)
+    db = random_db(rng, 200, 16, 2)
+    idx = build_bst(db, 2)
+    qs = np.stack([db[3], db[7], rng.integers(0, 4, size=16).astype(np.uint8)])
+    run = make_batch_searcher(idx, tau=2)
+    res = run(jnp.asarray(qs))
+    assert res.mask.shape == (3, 200)
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(res.mask[i]), brute_mask(db, qs[i], 2))
+
+
+def test_multi_index_exact():
+    rng = np.random.default_rng(3)
+    db = clustered_db(rng, 500, 32, 2)
+    for m in [2, 3, 4]:
+        mi = build_multi_index(db, 2, m)
+        for tau in [2, 5]:
+            q = db[11]
+            res = mi_search(mi, q, tau)
+            assert int(res.overflow) == 0
+            np.testing.assert_array_equal(np.asarray(res.mask), brute_mask(db, q, tau))
+            # filtering really filters: candidates < n (clustered DB)
+            assert int(res.candidates) <= 500
+
+
+def test_baselines_exact():
+    rng = np.random.default_rng(4)
+    db = random_db(rng, 250, 16, 2)
+    q = db[0]
+    tau = 2
+    want = brute_mask(db, q, tau)
+    sih = SIH.build(db, 2)
+    got, truncated = sih.search(q, tau)
+    assert not truncated
+    np.testing.assert_array_equal(got, want)
+    mih = MIH.build(db, 2, m=2)
+    got, truncated, ncand = mih.search(q, tau)
+    assert not truncated
+    np.testing.assert_array_equal(got, want)
+    hm = HmSearch.build(db, 2, tau)
+    got, ncand = hm.search(q, tau)
+    np.testing.assert_array_equal(got, want)
+    lin = LinearScan.build(db, 2)
+    np.testing.assert_array_equal(lin.search(q, tau), want)
+
+
+def test_hmsearch_b8_no_wildcard_collision():
+    rng = np.random.default_rng(5)
+    db = rng.integers(250, 256, size=(100, 8)).astype(np.uint8)  # chars near 255
+    q = db[1]
+    hm = HmSearch.build(db, 8, tau=2)
+    got, _ = hm.search(q, 2)
+    np.testing.assert_array_equal(got, brute_mask(db, q, 2))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 4), st.integers(4, 20), st.integers(20, 120),
+       st.integers(0, 4), st.randoms())
+def test_bst_property(b, L, n, tau, rnd):
+    rng = np.random.default_rng(rnd.randint(0, 2**31))
+    db = random_db(rng, n, L, b)
+    idx = build_bst(db, b)
+    q = rng.integers(0, 1 << b, size=L).astype(np.uint8)
+    res = search(idx, q, tau)
+    assert int(res.overflow) == 0
+    np.testing.assert_array_equal(np.asarray(res.mask), brute_mask(db, q, tau))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 3), st.integers(2, 4), st.integers(1, 5), st.randoms())
+def test_multi_index_property(b, m, tau, rnd):
+    rng = np.random.default_rng(rnd.randint(0, 2**31))
+    L = 4 * m
+    db = random_db(rng, 80, L, b)
+    mi = build_multi_index(db, b, m)
+    q = rng.integers(0, 1 << b, size=L).astype(np.uint8)
+    res = mi_search(mi, q, tau)
+    np.testing.assert_array_equal(np.asarray(res.mask), brute_mask(db, q, tau))
+
+
+def test_overflow_ladder_recovers():
+    """Force a tiny capacity; the ladder must still deliver exact results."""
+    rng = np.random.default_rng(6)
+    db = random_db(rng, 300, 16, 2, dup_frac=0.0)
+    idx = build_bst(db, 2)
+    q = db[0]
+    res = search(idx, q, tau=4, cap_max=4)  # absurdly small start
+    np.testing.assert_array_equal(np.asarray(res.mask), brute_mask(db, q, 4))

@@ -1,0 +1,67 @@
+"""Data pipeline: determinism (straggler/elasticity contract) and bST
+near-duplicate filtering (the paper's technique inside the data plane)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hamming import hamming_pairwise_naive
+from repro.data.pipeline import DataConfig, SketchDedupPipeline
+
+
+def test_determinism_across_instances():
+    cfg = DataConfig(vocab=1000, batch=4, seq=32, seed=7)
+    a = SketchDedupPipeline(cfg)
+    b = SketchDedupPipeline(cfg)
+    for step in (0, 3, 11):
+        ba, bb = a.batch_for_step(step), b.batch_for_step(step)
+        np.testing.assert_array_equal(np.asarray(ba["tokens"]),
+                                      np.asarray(bb["tokens"]))
+        np.testing.assert_array_equal(np.asarray(ba["targets"]),
+                                      np.asarray(bb["targets"]))
+
+
+def test_targets_are_shifted_tokens():
+    cfg = DataConfig(vocab=1000, batch=2, seq=16, seed=0)
+    p = SketchDedupPipeline(cfg)
+    b = p.batch_for_step(0)
+    assert b["tokens"].shape == (2, 16) and b["targets"].shape == (2, 16)
+    # targets[t] == continuation of tokens: both views of one (seq+1) draw
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["targets"][:, :-1]))
+
+
+def test_dedup_rejects_near_duplicates():
+    cfg = DataConfig(vocab=500, batch=8, seq=64, seed=1, dedup=True,
+                     oversample=2, dup_frac=0.5, dedup_tau=2)
+    p = SketchDedupPipeline(cfg)
+    for step in range(5):
+        p.batch_for_step(step)
+    assert p.stats["rejected_in_batch"] > 0, p.stats
+    # history index kicks in after the first batch
+    assert p.stats["rejected_history"] >= 0
+    assert p.stats["candidates"] == 5 * 16
+
+
+def test_dedup_batch_internally_distant():
+    """Within a kept batch, no two documents' sketches are within tau —
+    unless the fallback refill had to pad with rejected docs."""
+    from repro.core.sketch import sketch_tokens
+    import jax
+    cfg = DataConfig(vocab=500, batch=4, seq=64, seed=2, dedup=True,
+                     oversample=4, dup_frac=0.3, dedup_tau=1)
+    p = SketchDedupPipeline(cfg)
+    b = p.batch_for_step(0)
+    sk = sketch_tokens(jax.random.PRNGKey(cfg.seed ^ 0x5E7C),
+                       b["tokens"], L=cfg.dedup_L, b=cfg.dedup_b)
+    d = np.array(hamming_pairwise_naive(sk, sk))  # writable copy
+    np.fill_diagonal(d, 99)
+    assert d.min() > cfg.dedup_tau, d
+
+
+def test_embeds_pipeline():
+    cfg = DataConfig(vocab=64, batch=2, seq=8, embeds_dim=16)
+    p = SketchDedupPipeline(cfg)
+    b = p.batch_for_step(0)
+    assert b["embeds"].shape == (2, 8, 16)
+    assert b["targets"].shape == (2, 8)
+    assert int(b["targets"].max()) < 64

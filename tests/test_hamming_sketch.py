@@ -1,0 +1,94 @@
+"""Tests for vertical-format Hamming distance and similarity-preserving hashing."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hamming as H
+from repro.core import sketch as S
+
+
+@pytest.mark.parametrize("b,L,n", [(2, 16, 33), (4, 32, 17), (8, 64, 9), (2, 5, 11), (4, 33, 8)])
+def test_vertical_matches_naive(b, L, n):
+    rng = np.random.default_rng(b * 100 + L)
+    db = rng.integers(0, 1 << b, size=(n, L)).astype(np.uint8)
+    q = rng.integers(0, 1 << b, size=(L,)).astype(np.uint8)
+    planes = H.pack_vertical(db, b)
+    qp = H.pack_vertical(q[None], b)[0]
+    got = np.asarray(H.hamming_vertical(jnp.asarray(planes), jnp.asarray(qp)))
+    want = np.asarray(H.hamming_naive(jnp.asarray(db), jnp.asarray(q)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pack_vertical_jax_matches_host():
+    rng = np.random.default_rng(7)
+    for b, L in [(2, 16), (4, 32), (3, 40)]:
+        db = rng.integers(0, 1 << b, size=(6, L)).astype(np.uint8)
+        host = H.pack_vertical(db, b)
+        dev = np.asarray(H.pack_vertical_jax(jnp.asarray(db), b))
+        np.testing.assert_array_equal(host, dev)
+
+
+def test_paper_figure6_example():
+    # s = abd, q = acd with a=00,b=01,c=10,d=11 -> ham = 1
+    to_c = {"a": 0, "b": 1, "c": 2, "d": 3}
+    s = np.array([to_c[ch] for ch in "abd"], dtype=np.uint8)
+    q = np.array([to_c[ch] for ch in "acd"], dtype=np.uint8)
+    sp = H.pack_vertical(s[None], 2)[0]
+    qp = H.pack_vertical(q[None], 2)[0]
+    assert int(H.hamming_vertical(jnp.asarray(sp[None]), jnp.asarray(qp))[0]) == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 80), st.integers(1, 12), st.randoms())
+def test_vertical_property(b, L, n, rnd):
+    rng = np.random.default_rng(rnd.randint(0, 2**31))
+    db = rng.integers(0, 1 << b, size=(n, L)).astype(np.uint8)
+    q = rng.integers(0, 1 << b, size=(L,)).astype(np.uint8)
+    planes = H.pack_vertical(db, b)
+    qp = H.pack_vertical(q[None], b)[0]
+    got = np.asarray(H.hamming_vertical(jnp.asarray(planes), jnp.asarray(qp)))
+    want = (db != q[None]).sum(axis=1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_minhash_approximates_jaccard():
+    key = jax.random.PRNGKey(0)
+    # two sets with known overlap: |A|=|B|=60, |A∩B|=40 -> J = 40/80 = 0.5
+    a = np.arange(60)
+    bset = np.arange(20, 80)
+    items = jnp.asarray(np.stack([a, bset]).astype(np.int32))
+    mask = jnp.ones_like(items, dtype=bool)
+    L, b = 512, 8  # large alphabet -> collision correction negligible
+    sk = S.bbit_minhash(key, items, mask, L=L, b=b)
+    match = float((sk[0] == sk[1]).mean())
+    assert abs(match - 0.5) < 0.08, match
+    j = float(S.jaccard(items[:1], mask[:1], items[1:], mask[1:])[0])
+    assert abs(j - 0.5) < 1e-6
+
+
+def test_zbit_cws_approximates_minmax():
+    key = jax.random.PRNGKey(1)
+    rng = np.random.default_rng(3)
+    w1 = rng.uniform(0, 1, size=64).astype(np.float32)
+    w2 = w1.copy()
+    w2[:16] = rng.uniform(0, 1, size=16)  # perturb a quarter
+    w = jnp.asarray(np.stack([w1, w2]))
+    L, b = 512, 8
+    sk = S.zbit_cws(key, w, L=L, b=b)
+    match = float((sk[0] == sk[1]).mean())
+    k = float(S.minmax_kernel(w[0], w[1]))
+    # 0-bit CWS collision prob ~ minmax kernel (upward bias from b-bit truncation is tiny at b=8)
+    assert abs(match - k) < 0.1, (match, k)
+
+
+def test_sketch_determinism_and_range():
+    key = jax.random.PRNGKey(2)
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 1000, size=(4, 50)), dtype=jnp.int32)
+    s1 = S.sketch_tokens(key, toks, L=16, b=2)
+    s2 = S.sketch_tokens(key, toks, L=16, b=2)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    assert s1.shape == (4, 16)
+    assert int(jnp.max(s1)) < 4

@@ -1,0 +1,79 @@
+"""Per-kernel validation: Pallas body (interpret mode on CPU) vs pure-jnp
+oracle, swept over shapes / b / L / block sizes, plus hypothesis properties."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hamming as H
+from repro.kernels import ops, ref
+from repro.kernels.hamming_kernel import hamming_distances_pallas, sparse_verify_pallas
+
+
+def make_db(rng, n, L, b):
+    db = rng.integers(0, 1 << b, size=(n, L)).astype(np.uint8)
+    planes = H.pack_vertical(db, b)  # (n, b, W)
+    vert = np.transpose(planes, (1, 2, 0))  # (b, W, n)
+    return db, jnp.asarray(vert)
+
+
+@pytest.mark.parametrize("b,L", [(2, 16), (2, 32), (4, 32), (8, 64), (1, 8), (4, 100)])
+@pytest.mark.parametrize("n,m,block_n", [(256, 3, 128), (512, 1, 512), (130, 2, 128)])
+def test_hamming_kernel_matches_oracle(b, L, n, m, block_n):
+    rng = np.random.default_rng(b * 1000 + L + n)
+    db, db_vert = make_db(rng, n, L, b)
+    q, q_vert = make_db(rng, m, L, b)
+    got = np.asarray(ops.hamming_distances(db_vert, q_vert, block_n=block_n, use_kernel=True))
+    want = np.asarray(ref.hamming_distances_ref(db_vert, q_vert))
+    np.testing.assert_array_equal(got, want)
+    brute = (q[:, None, :] != db[None, :, :]).sum(axis=2)
+    np.testing.assert_array_equal(got, brute)
+
+
+@pytest.mark.parametrize("b,L,tau", [(2, 16, 2), (4, 32, 5), (8, 64, 3), (2, 16, 0)])
+def test_sparse_verify_matches_oracle(b, L, tau):
+    rng = np.random.default_rng(b + L + tau)
+    n = 384
+    _, paths_vert = make_db(rng, n, L, b)
+    _, q_vert = make_db(rng, 1, L, b)
+    q_vert = q_vert[..., 0]
+    base = rng.integers(0, tau + 2, size=n).astype(np.int32)
+    got = np.asarray(ops.sparse_verify(paths_vert, q_vert, jnp.asarray(base),
+                                       tau=tau, block_n=128, use_kernel=True))
+    want = np.asarray(ref.sparse_verify_ref(paths_vert, q_vert, jnp.asarray(base), tau)).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kernel_direct_no_padding():
+    """Exercise the raw pallas_call (n an exact multiple of block_n)."""
+    rng = np.random.default_rng(0)
+    b, L, n, m = 4, 32, 1024, 4
+    _, db_vert = make_db(rng, n, L, b)
+    _, q_vert = make_db(rng, m, L, b)
+    got = np.asarray(hamming_distances_pallas(db_vert, q_vert, block_n=256, interpret=True))
+    want = np.asarray(ref.hamming_distances_ref(db_vert, q_vert))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_small_path_uses_oracle():
+    rng = np.random.default_rng(1)
+    _, db_vert = make_db(rng, 10, 16, 2)
+    _, q_vert = make_db(rng, 2, 16, 2)
+    got = np.asarray(ops.hamming_distances(db_vert, q_vert))  # n < block -> oracle
+    want = np.asarray(ref.hamming_distances_ref(db_vert, q_vert))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 70), st.integers(1, 300), st.integers(0, 6), st.randoms())
+def test_verify_property(b, L, n, tau, rnd):
+    rng = np.random.default_rng(rnd.randint(0, 2**31))
+    db, paths_vert = make_db(rng, n, L, b)
+    q, q_vert = make_db(rng, 1, L, b)
+    base = rng.integers(0, 4, size=n).astype(np.int32)
+    got = np.asarray(ops.sparse_verify(paths_vert, q_vert[..., 0], jnp.asarray(base),
+                                       tau=tau, block_n=128))
+    suffix = (db != q[0][None]).sum(axis=1)
+    want = ((base + suffix) <= tau).astype(np.int32)
+    np.testing.assert_array_equal(got, want)

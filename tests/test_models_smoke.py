@@ -1,0 +1,101 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family runs
+one forward + one train step (and, where the shape grid includes them,
+prefill + decode) on CPU — asserting output shapes and no NaNs.
+
+The full assigned configs are exercised only via the dry-run
+(ShapeDtypeStruct, no allocation) — see launch/dryrun.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, valid_shapes
+from repro.models import model as M
+from repro.models.io import synthetic_batch
+from repro.optim.adamw import Hyper, abstract_opt_state, adamw_init
+from repro.train.steps import make_decode_step, make_prefill_step, make_train_step
+
+BATCH, SEQ = 2, 32
+
+
+def _smoke_setup(arch):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = synthetic_batch(cfg, BATCH, SEQ, step=0)
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_finite(arch):
+    cfg, params, batch = _smoke_setup(arch)
+    logits = M.forward(params, cfg, batch)
+    assert logits.shape == (BATCH, SEQ, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step(arch):
+    cfg, params, batch = _smoke_setup(arch)
+    step = make_train_step(cfg, Hyper(total_steps=10, warmup_steps=2),
+                           num_microbatches=2, compute_dtype=jnp.float32)
+    opt = adamw_init(params)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(new_opt.step) == 1
+    # params actually moved
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        params, new_params)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCH_IDS if "decode_32k" in valid_shapes(a)
+             or "long_500k" in valid_shapes(a)])
+def test_prefill_decode_consistency(arch):
+    """Prefill then one decode step must match the full-sequence forward
+    logits at the next position (same params, same tokens)."""
+    cfg, params, _ = _smoke_setup(arch)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (BATCH, SEQ)), jnp.int32)
+
+    prefill = make_prefill_step(cfg, s_max=SEQ + 4, compute_dtype=jnp.float32)
+    decode = make_decode_step(cfg, compute_dtype=jnp.float32)
+
+    logits_last, cache, cache_len = prefill(params, {"tokens": toks[:, :-1]})
+    dec_logits, _ = decode(params, toks[:, -1:], cache, cache_len)
+
+    full = M.forward(params, cfg, {"tokens": toks})
+    ref = full[:, -1]
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_abstract_params_match_concrete(arch):
+    cfg = get_config(arch, smoke=True)
+    abstract = M.abstract_params(cfg)
+    concrete = M.init_params(jax.random.PRNGKey(0), cfg)
+    a_leaves = jax.tree_util.tree_leaves_with_path(abstract)
+    c_leaves = jax.tree_util.tree_leaves_with_path(concrete)
+    assert len(a_leaves) == len(c_leaves)
+    for (pa, la), (pc, lc) in zip(a_leaves, c_leaves):
+        assert la.shape == lc.shape and la.dtype == lc.dtype, (pa, la, lc)
+
+
+def test_full_config_param_counts():
+    """6·N·D bookkeeping: full (unpadded) configs land near the published
+    parameter counts."""
+    expected = {
+        "gemma2-27b": 27e9, "command-r-35b": 35e9, "smollm-135m": 135e6,
+        "yi-9b": 8.8e9, "deepseek-moe-16b": 16e9, "chameleon-34b": 34e9,
+        "zamba2-2.7b": 2.7e9, "mamba2-1.3b": 1.3e9, "hubert-xlarge": 1e9,
+        "granite-moe-3b-a800m": 3.3e9,
+    }
+    for arch, target in expected.items():
+        n = get_config(arch).param_count()
+        assert 0.5 * target < n < 1.6 * target, (arch, n, target)

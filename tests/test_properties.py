@@ -1,0 +1,113 @@
+"""Hypothesis property tests on SYSTEM invariants (end-to-end, not
+per-module): search exactness over arbitrary databases, monotonicity in
+τ, shard-count invariance, optimizer descent, checkpoint round-trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bst import build_bst
+from repro.core.distributed_search import (build_sharded_bst, gather_ids,
+                                           make_sharded_searcher)
+from repro.core.hamming import hamming_pairwise_naive
+from repro.core.search import make_batch_searcher
+from repro.optim.adamw import Hyper, adamw_init, adamw_update
+
+
+@st.composite
+def sketch_db(draw):
+    b = draw(st.integers(1, 4))
+    L = draw(st.integers(2, 10))
+    n = draw(st.integers(1, 120))
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << b, size=(n, L), dtype=np.uint8), b
+
+
+@settings(max_examples=15, deadline=None)
+@given(sketch_db(), st.integers(0, 4))
+def test_search_exactness(db_b, tau):
+    """For ANY database and query drawn from it or not, bST search equals
+    brute force — the core correctness invariant."""
+    db, b = db_b
+    index = build_bst(db, b)
+    q = np.concatenate([db[:2], (db[:1] + 1) % (1 << b)])
+    res = make_batch_searcher(index, tau)(jnp.asarray(q))
+    got = np.asarray(res.mask)
+    want = np.asarray(hamming_pairwise_naive(
+        jnp.asarray(q), jnp.asarray(db))) <= tau
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sketch_db())
+def test_tau_monotonicity(db_b):
+    """Solution sets are nested in τ: I(τ) ⊆ I(τ+1)."""
+    db, b = db_b
+    index = build_bst(db, b)
+    q = jnp.asarray(db[:1])
+    prev = None
+    for tau in range(0, 4):
+        mask = np.asarray(make_batch_searcher(index, tau)(q).mask)[0]
+        if prev is not None:
+            assert (prev <= mask).all(), tau
+        prev = mask
+
+
+@settings(max_examples=8, deadline=None)
+@given(sketch_db(), st.integers(1, 4), st.integers(0, 2))
+def test_shard_count_invariance(db_b, n_shards, tau):
+    """The sharded search result set is independent of the shard count
+    (elastic-scaling invariant for the retrieval plane)."""
+    db, b = db_b
+    if db.shape[0] < n_shards:
+        return
+    q = jnp.asarray(db[:2])
+    ref = build_sharded_bst(db, b, 1)
+    got1 = gather_ids(ref, np.asarray(make_sharded_searcher(ref, tau)(q)[0]))
+    idx = build_sharded_bst(db, b, n_shards)
+    gotN = gather_ids(idx, np.asarray(make_sharded_searcher(idx, tau)(q)[0]))
+    for a, c in zip(got1, gotN):
+        np.testing.assert_array_equal(np.sort(a), np.sort(c))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**16))
+def test_adamw_descends_quadratic(seed):
+    """AdamW reduces a convex quadratic from any start."""
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.standard_normal(8), jnp.float32)}
+    target = jnp.asarray(rng.standard_normal(8), jnp.float32)
+    h = Hyper(base_lr=5e-2, warmup_steps=1, total_steps=100,
+              weight_decay=0.0)
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        grads = jax.grad(loss)(params)
+        params, state, _ = adamw_update(grads, state, params, h)
+    assert float(loss(params)) < l0 * 0.5
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**16))
+def test_checkpoint_roundtrip_any_tree(seed):
+    import tempfile
+    from repro.distributed.checkpoint import (restore_checkpoint,
+                                              save_checkpoint)
+    rng = np.random.default_rng(seed)
+    tree = {"a": {"x": jnp.asarray(rng.standard_normal((3, 5)), jnp.float32)},
+            "b": [jnp.asarray(rng.integers(0, 9, 4), jnp.int32),
+                  jnp.asarray(rng.standard_normal(2), jnp.float32)]}
+    d = tempfile.mkdtemp(prefix="ck_prop_")
+    save_checkpoint(d, 1, tree)
+    abstract = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    back = restore_checkpoint(d, 1, abstract)
+    for a, c in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))

@@ -1,0 +1,86 @@
+"""Training-step invariants: gradient accumulation is microbatch-count
+invariant, remat does not change values, and the bf16 compute cast is
+confined to matrices."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import model as M
+from repro.models.io import synthetic_batch
+from repro.optim.adamw import Hyper, adamw_init
+from repro.train.steps import cast_for_compute, make_train_step
+
+ARCH = "smollm-135m"
+
+
+def _setup():
+    cfg = get_config(ARCH, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = synthetic_batch(cfg, 4, 32, step=0)
+    return cfg, params, batch
+
+
+def test_microbatch_invariance():
+    """mb=1, 2, 4 produce the same updated params (mean-of-means holds
+    because microbatches are equal-sized)."""
+    cfg, params, batch = _setup()
+    hyper = Hyper(total_steps=10, warmup_steps=1)
+    results = []
+    for mb in (1, 2, 4):
+        step = make_train_step(cfg, hyper, num_microbatches=mb,
+                               compute_dtype=jnp.float32)
+        opt = adamw_init(params)
+        new_p, _, metrics = jax.jit(step)(params, opt, batch)
+        results.append((mb, new_p, float(metrics["loss"])))
+    _, p1, l1 = results[0]
+    for mb, pn, ln in results[1:]:
+        assert abs(l1 - ln) < 1e-4, (mb, l1, ln)
+        for a, b in zip(jax.tree_util.tree_leaves(p1),
+                        jax.tree_util.tree_leaves(pn)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-5,
+                                       err_msg=f"mb={mb}")
+
+
+def test_remat_value_invariance():
+    """remat=True/False give identical losses (recompute, same math)."""
+    cfg, params, batch = _setup()
+    l_no = M.loss_fn(params, cfg, batch, remat=False)
+    l_yes = M.loss_fn(params, cfg, batch, remat=True)
+    np.testing.assert_allclose(float(l_no), float(l_yes), rtol=1e-6)
+    g_no = jax.grad(lambda p: M.loss_fn(p, cfg, batch, remat=False))(params)
+    g_yes = jax.grad(lambda p: M.loss_fn(p, cfg, batch, remat=True))(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g_no),
+                    jax.tree_util.tree_leaves(g_yes)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_cast_for_compute_scope():
+    """Only float32 matrices are cast; norms/scalars/int buffers keep
+    their dtype (f32 master-weight contract)."""
+    cfg, params, _ = _setup()
+    cast = cast_for_compute(params, jnp.bfloat16)
+    for (path, orig), (_, new) in zip(
+            jax.tree_util.tree_leaves_with_path(params),
+            jax.tree_util.tree_leaves_with_path(cast)):
+        if orig.dtype == jnp.float32 and orig.ndim >= 2:
+            assert new.dtype == jnp.bfloat16, path
+        else:
+            assert new.dtype == orig.dtype, path
+
+
+def test_loss_masking():
+    """targets < 0 are excluded from the loss."""
+    cfg, params, batch = _setup()
+    full = float(M.loss_fn(params, cfg, batch))
+    masked_batch = dict(batch)
+    masked_batch["targets"] = batch["targets"].at[:, ::2].set(-1)
+    masked = float(M.loss_fn(params, cfg, masked_batch))
+    assert np.isfinite(masked) and masked != full
+    all_masked = dict(batch)
+    all_masked["targets"] = jnp.full_like(batch["targets"], -1)
+    assert float(M.loss_fn(params, cfg, all_masked)) == 0.0
