@@ -1,0 +1,20 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench-quick bench dev-deps
+
+test:
+	$(PYTHON) -m pytest -q
+
+test-fast:
+	$(PYTHON) -m pytest -x -q tests/test_bitvector.py tests/test_bst.py \
+		tests/test_hamming_sketch.py tests/test_kernels.py tests/test_topk.py
+
+bench-quick:
+	$(PYTHON) -m benchmarks.run --quick
+
+bench:
+	$(PYTHON) -m benchmarks.run
+
+dev-deps:
+	$(PYTHON) -m pip install -r requirements-dev.txt

@@ -1,0 +1,71 @@
+"""Top-k kNN serving benchmark: the τ-escalation ladder + compiled-searcher
+cache vs. a brute-force full-scan baseline (Pallas Hamming kernel over the
+whole database + ``lax.top_k``).
+
+Rows:
+  * ``topk/<ds>/k<k>/cold``  — first batched call (jit + ladder search)
+  * ``topk/<ds>/k<k>/warm``  — steady-state serving call (cache hit)
+  * ``topk/<ds>/k<k>/scan``  — full-scan baseline, warm
+plus a correctness cross-check of the two on every run.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hamming import pack_vertical
+from repro.core.bst import build_bst
+from repro.core.search import clear_searcher_cache, topk_batch
+from repro.kernels import ops
+
+from .common import Csv, make_dataset, timeit
+
+
+def _scan_topk(db_vert, q_vert, k):
+    """Brute-force baseline: full distance matrix + top_k."""
+    @jax.jit
+    def run(qv):
+        d = ops.hamming_distances(db_vert, qv)        # (m, n)
+        neg, idx = jax.lax.top_k(-d, k)
+        return -neg, idx
+    return run
+
+
+def run(csv: Csv, datasets=("review",), ks=(1, 10, 100)) -> None:
+    for name in datasets:
+        cfg, db, queries = make_dataset(name, n=1 << 16)
+        index = build_bst(db, cfg.b)
+        planes = pack_vertical(db, cfg.b)
+        db_vert = jnp.asarray(np.transpose(planes, (1, 2, 0)).copy())
+        q_planes = pack_vertical(queries, cfg.b)
+        q_vert = jnp.asarray(np.transpose(q_planes, (1, 2, 0)).copy())
+        m = len(queries)
+        for k in ks:
+            clear_searcher_cache()
+            t0 = time.perf_counter()
+            res = topk_batch(index, queries, k)
+            cold = time.perf_counter() - t0
+            csv.add(f"topk/{name}/k{k}/cold", cold * 1e6 / m,
+                    f"tau_star={res.tau}")
+            warm = timeit(lambda: topk_batch(index, queries, k))
+            csv.add(f"topk/{name}/k{k}/warm", warm * 1e6 / m, "")
+
+            scan = _scan_topk(db_vert, q_vert, k)
+            scan_t = timeit(lambda: scan(q_vert))
+            csv.add(f"topk/{name}/k{k}/scan", scan_t * 1e6 / m, "")
+
+            # exactness cross-check vs. the scan baseline
+            sd, sid = scan(q_vert)
+            sd, sid = np.asarray(sd), np.asarray(sid)
+            np.testing.assert_array_equal(np.asarray(res.dists), sd)
+            np.testing.assert_array_equal(np.asarray(res.ids), sid)
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

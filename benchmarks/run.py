@@ -11,7 +11,7 @@ import sys
 import traceback
 
 from . import (bench_fig7, bench_fig8, bench_table2, bench_table3,
-               bench_table4, bench_vertical, roofline)
+               bench_table4, bench_topk, bench_vertical, roofline)
 from .common import Csv
 
 
@@ -34,6 +34,9 @@ def main(argv=None) -> int:
             c, datasets=("review",) if args.quick else ("review", "sift")),
         "fig7": lambda c: bench_fig7.run(
             c, datasets=("review",) if args.quick else ("review", "sift")),
+        "topk": lambda c: bench_topk.run(
+            c, datasets=("review",) if args.quick else ("review", "sift"),
+            ks=(1, 10) if args.quick else (1, 10, 100)),
         "roofline": lambda c: roofline.run(c),
     }
     if args.only:

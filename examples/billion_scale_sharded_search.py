@@ -15,7 +15,7 @@ import numpy as np
 from repro.configs.registry import PAPER_DATASETS
 from repro.core.bst import build_bst
 from repro.core.distributed_search import (build_sharded_bst, gather_ids,
-                                           make_sharded_searcher)
+                                           gather_topk, make_sharded_searcher)
 from repro.core.hamming import hamming_pairwise_naive
 
 
@@ -35,12 +35,17 @@ def main():
 
     searcher = make_sharded_searcher(index, tau)
     t0 = time.time()
-    masks, _ = searcher(queries)
+    masks, shard_dists, _ = searcher(queries)
     masks = np.asarray(masks)
     dt = time.time() - t0
     ids = gather_ids(index, masks)
     print(f"searched {m} queries in {dt:.2f}s (incl. compile); "
           f"hits: {[len(i) for i in ids]}")
+
+    # distance planes merge into global top-k with no second pass
+    # (exact within tau; -1 pads where a query has < k hits in the ball)
+    top_ids, top_d = gather_topk(index, np.asarray(shard_dists), k=3)
+    print(f"top-3 of query 0: ids={top_ids[0]} dists={top_d[0]}")
 
     # correctness vs brute force
     dists = np.asarray(hamming_pairwise_naive(queries, jnp.asarray(db)))

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.core.bst import build_bst, build_louds
 from repro.core.hamming import hamming_pairwise_naive
-from repro.core.search import make_batch_searcher
+from repro.core.search import make_batch_searcher, topk_batch
 from repro.core.sketch import bbit_minhash, jaccard
 
 
@@ -49,11 +49,18 @@ def main():
               f"(traversed ~{int(np.asarray(res.traversed).mean())} nodes "
               f"of {index.t[-1]} leaves)")
 
-    # 5. verify against brute force
+    # 5. top-k nearest neighbors (τ-escalation ladder + exact distances)
+    nn = topk_batch(index, queries, k=3)
+    print(f"top-3 of query 0: ids={np.asarray(nn.ids[0])} "
+          f"dists={np.asarray(nn.dists[0])} (tau*={nn.tau})")
+
+    # 6. verify against brute force
     dists = np.asarray(hamming_pairwise_naive(queries, jnp.asarray(sketches)))
     want = (dists <= 2).sum(axis=1)
     got = np.asarray(make_batch_searcher(index, 2)(queries).mask).sum(axis=1)
     assert (want == got).all(), (want, got)
+    np.testing.assert_array_equal(
+        np.asarray(nn.dists), np.sort(dists, axis=1)[:, :3])
     print("brute-force check: OK")
 
 

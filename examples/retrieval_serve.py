@@ -1,5 +1,6 @@
 """Serving example: batched autoregressive generation + the paper's
-sketch-retrieval plane (0-bit CWS of request states -> MI-bST lookup).
+sketch-retrieval plane (0-bit CWS of request states -> bST lookup), now
+returning the top-k nearest documents per request with exact distances.
 
     PYTHONPATH=src python examples/retrieval_serve.py
 """
@@ -12,7 +13,8 @@ from repro.launch.serve import main as serve_main
 def main():
     return serve_main(["--arch", "smollm-135m", "--smoke", "--batch", "4",
                        "--prompt-len", "24", "--gen-len", "12",
-                       "--retrieval", "--index-size", "2048", "--tau", "3"])
+                       "--retrieval", "--index-size", "2048", "--tau", "3",
+                       "--topk", "3"])
 
 
 if __name__ == "__main__":

@@ -39,6 +39,7 @@ from .bitvector import BitVector
 from .bst import BIG
 from .cost_model import frontier_capacities
 from .hamming import pack_vertical, pack_vertical_jax
+from .search import _compact
 from .trie_builder import TrieLevels, build_trie_levels, pick_layers, table_or_list
 
 WORD_SHIFT = 5
@@ -272,25 +273,12 @@ def _children_list(words, cum, labels, u, t_prev, t_cur, b):
     return ids, lab, exists
 
 
-def _compact(ids, dists, valid, capacity):
-    pos = jnp.cumsum(valid) - 1
-    slot = jnp.where(valid & (pos < capacity), pos, capacity)
-    out_ids = jnp.zeros((capacity + 1,), jnp.int32).at[slot].set(
-        ids, mode="drop")
-    out_dists = jnp.full((capacity + 1,), BIG, jnp.int32).at[slot].set(
-        dists, mode="drop")
-    total = jnp.where(valid.shape[0] > 0, pos[-1] + 1, 0).astype(jnp.int32)
-    kept = jnp.minimum(total, capacity)
-    out_valid = jnp.arange(capacity + 1, dtype=jnp.int32) < kept
-    overflow = jnp.maximum(total - capacity, 0)
-    return out_ids[:capacity], out_dists[:capacity], out_valid[:capacity], overflow
-
-
 def _shard_search(index: ShardedBST, shard_levels, shard_t, paths_vert,
                   d_words, d_cum, leaf_root, id_leaf, n_local,
                   q: jnp.ndarray, tau: int, caps,
                   verify: str = "scan"):
-    """One shard, one query -> (n_max,) bool local mask.
+    """One shard, one query -> ((n_max,) bool local mask, (n_max,) int32
+    exact local distances — BIG off-mask and on pad lanes, overflow).
 
     ``verify``: "scan" streams EVERY collapsed suffix path past the query
     (pruning = masking — the original TPU adaptation);  "gather" (§Perf
@@ -349,13 +337,17 @@ def _shard_search(index: ShardedBST, shard_levels, shard_t, paths_vert,
         base = jnp.where(ok, dists[root_idx], BIG)
         if sfx > 0:
             cand = paths_vert[:, :, leaf_safe]               # (b, W, cap_v)
-            hit = ops.sparse_verify(cand, q_sfx, base, tau=tau,
-                                    use_kernel=False) > 0
+            hm, cand_dist = ops.sparse_verify(cand, q_sfx, base, tau=tau,
+                                              use_kernel=False)
+            hit = hm > 0
         else:
             hit = base <= tau
+            cand_dist = base
+        slot = jnp.where(ok, leaf_safe, t_Lmax)
         survive = jnp.zeros((t_Lmax,), bool)
-        survive = survive.at[jnp.where(ok, leaf_safe, t_Lmax)].max(
-            hit & ok, mode="drop")
+        survive = survive.at[slot].max(hit & ok, mode="drop")
+        leaf_dist = jnp.full((t_Lmax,), BIG, jnp.int32).at[slot].min(
+            jnp.where(hit & ok, cand_dist, BIG), mode="drop")
     else:
         base_root = jnp.full((t_Lmax + 1,), BIG, jnp.int32)
         safe = jnp.where(valid, ids, 0)
@@ -365,12 +357,16 @@ def _shard_search(index: ShardedBST, shard_levels, shard_t, paths_vert,
         lanes = jnp.arange(t_Lmax)
         base_leaf = jnp.where(lanes < t_L, base_leaf, BIG)
         if sfx > 0:
-            survive = ops.sparse_verify(paths_vert, q_sfx, base_leaf,
-                                        tau=tau, use_kernel=False) > 0
+            hm, leaf_dist = ops.sparse_verify(paths_vert, q_sfx, base_leaf,
+                                              tau=tau, use_kernel=False)
+            survive = hm > 0
         else:
             survive = base_leaf <= tau
-    mask = survive[jnp.clip(id_leaf, 0, survive.shape[0] - 1)]
-    return mask & (jnp.arange(index.n_max) < n_local), overflow
+            leaf_dist = base_leaf
+    leaf_of_id = jnp.clip(id_leaf, 0, survive.shape[0] - 1)
+    mask = survive[leaf_of_id] & (jnp.arange(index.n_max) < n_local)
+    dist = jnp.where(mask, leaf_dist[leaf_of_id], BIG)
+    return mask, dist, overflow
 
 
 def expected_caps(t: Tuple[int, ...], b: int, tau: int,
@@ -394,9 +390,10 @@ def expected_caps(t: Tuple[int, ...], b: int, tau: int,
 def make_sharded_searcher(index: ShardedBST, tau: int,
                           cap_max: int = 1 << 14, verify: str = "scan",
                           caps_mode: str = "worst"):
-    """Returns jitted f(queries (m, L)) -> (m, S, n_max) bool masks.
-    The shard axis vmaps — under jit-with-shardings it partitions over
-    the mesh data axes (each device runs only its own shard's trie)."""
+    """Returns jitted f(queries (m, L)) -> ((m, S, n_max) bool masks,
+    (m, S, n_max) int32 exact distances, int32 overflow).  The shard axis
+    vmaps — under jit-with-shardings it partitions over the mesh data
+    axes (each device runs only its own shard's trie)."""
     t_max = tuple(int(x) for x in np.asarray(index.t).max(axis=0))
     if caps_mode == "expected":
         caps = expected_caps(t_max, index.b, tau)
@@ -418,8 +415,8 @@ def make_sharded_searcher(index: ShardedBST, tau: int,
                     levels, t_row, pv, dw, dc, lr, il, nl, q)
             )(level_arrays, index.t, index.paths_vert, index.d_words,
               index.d_cum, index.leaf_root, index.id_leaf, index.n_local)
-        masks, overflows = jax.vmap(per_query)(queries)
-        return masks, overflows.sum()
+        masks, dists, overflows = jax.vmap(per_query)(queries)
+        return masks, dists, overflows.sum()
 
     return jax.jit(search)
 
@@ -433,3 +430,37 @@ def gather_ids(index: ShardedBST, masks: np.ndarray) -> List[np.ndarray]:
         hit = qmask[index.shard_of, index.pos_of]
         out.append(np.flatnonzero(hit))
     return out
+
+
+def gather_topk(index: ShardedBST, dists: np.ndarray,
+                k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge per-shard distance planes into global per-query top-k.
+
+    dists: (m, S, n_max) int32 from the sharded searcher (BIG off-mask).
+    Returns ((m, k) ids, (m, k) dists), each row sorted ascending by
+    (distance, id): the sharded analogue of ``core.topk``'s final
+    selection, run host-side after the result all-gather.  Slots beyond a
+    query's within-τ survivors are (-1, BIG) pads — unlike ``core.topk``
+    there is no τ-escalation here, so fewer than k real neighbors can
+    come back; re-search at a larger τ to fill them.
+    """
+    m = dists.shape[0]
+    n = index.shard_of.shape[0]
+    kk = min(k, n)
+    ids = np.full((m, k), -1, np.int32)
+    out_d = np.full((m, k), int(BIG), np.int32)
+    for qi in range(m):
+        d = np.asarray(dists[qi])[index.shard_of, index.pos_of]  # (n,)
+        # partial selection, then a full (distance, id) sort over every
+        # candidate at or below the k-th distance — a bare argpartition
+        # would pick arbitrarily among ties at the boundary
+        if kk < n:
+            thresh = d[np.argpartition(d, kk - 1)[:kk]].max()
+            cand = np.flatnonzero(d <= thresh)
+        else:
+            cand = np.arange(n)
+        order = cand[np.lexsort((cand, d[cand]))][:kk]
+        real = d[order] < int(BIG)
+        ids[qi, :kk] = np.where(real, order, -1)
+        out_d[qi, :kk] = d[order]
+    return ids, out_d

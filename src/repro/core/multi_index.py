@@ -22,12 +22,13 @@ import numpy as np
 from . import cost_model
 from .bst import BIG, SketchIndex, build_bst
 from .hamming import pack_vertical, pack_vertical_jax
-from .search import _compact, _search_trace
+from .search import _compact, _pin_cache_get, _search_trace
 from ..kernels import ops
 
 
 class MultiSearchResult(NamedTuple):
     mask: jnp.ndarray        # (n,) bool final solutions
+    dist: jnp.ndarray        # (n,) int32 — exact distance where mask, BIG off
     candidates: jnp.ndarray  # int32 — |∪ C^j| before verification
     overflow: jnp.ndarray    # int32 — frontier + candidate-capacity drops
 
@@ -105,12 +106,28 @@ def _mi_search_trace(mi: MultiIndex, q: jnp.ndarray, *, tau: int,
                                   jnp.zeros((mi.n,), jnp.int32),
                                   cand_mask, cand_cap)
     overflow = overflow + ov
-    cand_vert = mi.full_vert[:, :, jnp.where(cvalid, ids, 0)]   # (b, W, C)
+    safe_ids = jnp.where(cvalid, ids, 0)
+    cand_vert = mi.full_vert[:, :, safe_ids]                     # (b, W, C)
     q_vert = pack_vertical_jax(q[None], mi.b)[0]                 # (b, W)
     dist = ops.hamming_distances(cand_vert, q_vert[..., None])[0]  # (C,)
     ok = cvalid & (dist <= tau)
-    mask = jnp.zeros((mi.n,), bool).at[jnp.where(cvalid, ids, 0)].max(ok, mode="drop")
-    return MultiSearchResult(mask=mask, candidates=n_cand, overflow=overflow)
+    mask = jnp.zeros((mi.n,), bool).at[safe_ids].max(ok, mode="drop")
+    dvec = jnp.full((mi.n,), BIG, jnp.int32).at[safe_ids].min(
+        jnp.where(ok, dist, BIG), mode="drop")
+    return MultiSearchResult(mask=mask, dist=dvec, candidates=n_cand,
+                             overflow=overflow)
+
+
+# same discipline as search._SEARCHER_CACHE: the MultiIndex is pinned in
+# the value so the id key can never be recycled while the entry lives;
+# FIFO-bounded against benchmark sweeps.
+_MI_SEARCHER_CACHE: dict = {}
+_MI_SEARCHER_CACHE_CAP = 128
+
+
+def clear_mi_searcher_cache() -> None:
+    """Drop every cached MI searcher (and the MultiIndex pins with them)."""
+    _MI_SEARCHER_CACHE.clear()
 
 
 def make_mi_searcher(mi: MultiIndex, tau: int, cap_max: int = 1 << 17,
@@ -121,24 +138,31 @@ def make_mi_searcher(mi: MultiIndex, tau: int, cap_max: int = 1 << 17,
         for blk, tj in zip(mi.blocks, taus))
     cc = cand_cap if cand_cap is not None else candidate_capacity(mi, tau)
 
-    @jax.jit
-    def run(q):
-        return _mi_search_trace(mi, q, tau=tau, caps_per_block=caps_per_block,
-                                cand_cap=cc)
+    key = (id(mi), tau, caps_per_block, cc)
 
-    return run
+    def build():
+        @jax.jit
+        def run(q):
+            return _mi_search_trace(mi, q, tau=tau,
+                                    caps_per_block=caps_per_block,
+                                    cand_cap=cc)
+        return run
+
+    fn, _ = _pin_cache_get(_MI_SEARCHER_CACHE, _MI_SEARCHER_CACHE_CAP, key,
+                           mi, build)
+    return fn
 
 
 def mi_search(mi: MultiIndex, q: np.ndarray, tau: int) -> MultiSearchResult:
-    """Host wrapper with the overflow ladder."""
+    """Host wrapper with the doubled overflow ladder (cached searchers)."""
     q = jnp.asarray(q)
     cap_max, cand_cap = 1 << 15, candidate_capacity(mi, tau)
     while True:
         res = make_mi_searcher(mi, tau, cap_max, cand_cap)(q)
         if int(res.overflow) == 0 or (cap_max >= 1 << 22 and cand_cap >= mi.n):
             return res
-        cap_max *= 4
-        cand_cap = min(cand_cap * 4, mi.n)
+        cap_max *= 2
+        cand_cap = min(cand_cap * 2, mi.n)
 
 
 def choose_plan(b: int, L: int, tau: int, n: int,

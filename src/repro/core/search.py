@@ -11,38 +11,58 @@ traversed: pruned ℓ_s-subtries get a +∞ base distance and the Pallas
 verify kernel streams every collapsed suffix path in one masked scan —
 pruning becomes masking, pointer work becomes bandwidth.
 
+Exact distances are first-class: the traversal accumulates per-node
+Hamming distances anyway, and the verify kernel computes the exact total
+before thresholding, so ``SearchResult.dist`` carries the exact distance
+of every id inside the τ-ball (BIG elsewhere) at zero extra passes.
+``topk`` builds k-nearest-neighbor search on top: a τ-escalation ladder
+seeded from the cost model's expected-candidate estimate, followed by a
+``jax.lax.top_k`` selection over the distance vector.
+
 Static shapes: frontier capacities come from the cost model
 (min(t_ℓ, sigs(b,ℓ,τ), cap_max)).  Exceeding ``cap_max`` is detected and
-reported; the host wrapper retries on a doubled ladder (production: one
-compiled searcher per (index, τ) pair, the common case never overflows).
+reported; the host wrapper retries on a doubled ladder.  Compiled
+searchers live in a process-level cache keyed on (index, τ, caps) so the
+ladder and repeated serving calls never re-jit the common case.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .bst import BIG, SketchIndex
-from .cost_model import frontier_capacities
+from .cost_model import frontier_capacities, sigs
 from .hamming import pack_vertical_jax
 from ..kernels import ops
+
+CAP_MAX_DEFAULT = 1 << 17
+LADDER_CAP_MAX = 1 << 22
 
 
 class SearchResult(NamedTuple):
     mask: jnp.ndarray        # (n,) bool — ids within τ of the query
+    dist: jnp.ndarray        # (n,) int32 — exact distance where mask, BIG off
     overflow: jnp.ndarray    # int32 — dropped frontier entries (0 = exact)
     traversed: jnp.ndarray   # int32 — Σ frontier sizes (paper's t_tra)
+
+
+class TopKResult(NamedTuple):
+    ids: jnp.ndarray         # (k,) int32 — ascending (distance, id); -1 pad
+    dists: jnp.ndarray       # (k,) int32 — exact distances; BIG on pad
+    tau: int                 # final rung of the τ-escalation ladder
+    overflow: int            # dropped frontier entries (0 = provably exact)
 
 
 def _compact(ids: jnp.ndarray, dists: jnp.ndarray, valid: jnp.ndarray,
              capacity: int):
     """Stable masked compaction into a fixed-size frontier."""
+    total = valid.sum(dtype=jnp.int32)      # 0 for an empty frontier
     pos = jnp.cumsum(valid) - 1
-    total = jnp.where(valid.shape[0] > 0, pos[-1] + 1, 0).astype(jnp.int32)
     slot = jnp.where(valid & (pos < capacity), pos, capacity)
     out_ids = jnp.zeros((capacity + 1,), jnp.int32).at[slot].set(ids, mode="drop")
     out_dists = jnp.full((capacity + 1,), BIG, jnp.int32).at[slot].set(dists, mode="drop")
@@ -84,51 +104,205 @@ def _search_trace(index: SketchIndex, q: jnp.ndarray, *, tau: int,
         base_leaf = base_root[tail.leaf_root]                     # (t_L,)
         if tail.suffix_len > 0:
             q_sfx = pack_vertical_jax(q[index.ls:][None], index.b)[0]  # (b, W)
-            survive = ops.sparse_verify(tail.paths_vert, q_sfx, base_leaf,
-                                        tau=tau) > 0
+            hit, leaf_dist = ops.sparse_verify(tail.paths_vert, q_sfx,
+                                               base_leaf, tau=tau)
+            survive = hit > 0
         else:
             survive = base_leaf <= tau
+            leaf_dist = base_leaf
     else:
-        # no collapsed tail (LOUDS/FST baselines): frontier is at level L
+        # no collapsed tail (LOUDS/FST baselines): frontier is at level L;
+        # scatter-min the frontier distances straight onto the leaves
         t_L = index.t[index.L]
-        survive = jnp.zeros((t_L,), bool)
         safe_ids = jnp.where(valid, ids, 0)
-        survive = survive.at[safe_ids].max(valid, mode="drop")
+        leaf_dist = jnp.full((t_L,), BIG, jnp.int32).at[safe_ids].min(
+            jnp.where(valid, dists, BIG), mode="drop")
+        survive = leaf_dist <= tau
 
     mask = survive[index.id_leaf]
-    return SearchResult(mask=mask, overflow=overflow, traversed=traversed)
+    dist = jnp.where(mask, leaf_dist[index.id_leaf], BIG)
+    return SearchResult(mask=mask, dist=dist, overflow=overflow,
+                        traversed=traversed)
 
 
-def make_searcher(index: SketchIndex, tau: int, cap_max: int = 1 << 17):
-    """Compile a single-query searcher for this (index, τ).  Returns
-    ``fn(q) -> SearchResult`` (jitted, index closed over as constant)."""
+# ---------------------------------------------------------------------------
+# compiled-searcher cache
+# ---------------------------------------------------------------------------
+
+# key: (id(index), tau, caps, batch) -> (index, jitted fn).  The index is
+# held strongly in the value so its id can never be recycled while the
+# entry lives; serving processes hold few indexes, so this pins O(1) of
+# extra memory per cached rung.  FIFO-bounded so sweeps over many
+# (index, τ, cap) combinations (benchmarks) cannot grow without limit.
+_SEARCHER_CACHE: Dict[tuple, tuple] = {}
+_SEARCHER_CACHE_CAP = 128
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _pin_cache_get(cache: dict, cap: int, key: tuple, obj, build):
+    """id-keyed bounded cache shared by the single- and multi-index
+    searchers: the value pins ``obj`` so its id can never be recycled
+    while the entry lives; FIFO-evicts beyond ``cap``.  Returns
+    (cached_value, hit)."""
+    entry = cache.get(key)
+    if entry is not None and entry[0] is obj:
+        return entry[1], True
+    value = build()
+    while len(cache) >= cap:
+        cache.pop(next(iter(cache)))  # FIFO evict
+    cache[key] = (obj, value)
+    return value, False
+
+
+def searcher_cache_info() -> Dict[str, int]:
+    """Process-level cache counters (a miss == one fresh jit trace)."""
+    return {"hits": _CACHE_STATS["hits"], "misses": _CACHE_STATS["misses"],
+            "size": len(_SEARCHER_CACHE)}
+
+
+def clear_searcher_cache() -> None:
+    _SEARCHER_CACHE.clear()
+    _CACHE_STATS["hits"] = 0
+    _CACHE_STATS["misses"] = 0
+
+
+def get_searcher(index: SketchIndex, tau: int,
+                 cap_max: int = CAP_MAX_DEFAULT, *, batch: bool = False):
+    """Cached compiled searcher for this (index, τ, caps).  ``batch=False``
+    returns ``fn(q: (L,)) -> SearchResult``; ``batch=True`` the vmapped
+    ``fn(qs: (m, L)) -> SearchResult`` with a leading query axis."""
     caps = frontier_capacities(index.t, index.b, tau, cap_max)
+    key = (id(index), tau, caps, batch)
 
-    @jax.jit
-    def run(q):
-        return _search_trace(index, q, tau=tau, caps=caps)
+    def build():
+        if batch:
+            @jax.jit
+            def run(qs):
+                return jax.vmap(
+                    lambda q: _search_trace(index, q, tau=tau, caps=caps))(qs)
+        else:
+            @jax.jit
+            def run(q):
+                return _search_trace(index, q, tau=tau, caps=caps)
+        return run
 
-    return run
+    fn, hit = _pin_cache_get(_SEARCHER_CACHE, _SEARCHER_CACHE_CAP, key,
+                             index, build)
+    _CACHE_STATS["hits" if hit else "misses"] += 1
+    return fn
 
 
-def make_batch_searcher(index: SketchIndex, tau: int, cap_max: int = 1 << 17):
+def make_searcher(index: SketchIndex, tau: int,
+                  cap_max: int = CAP_MAX_DEFAULT):
+    """Compile (or fetch from the process cache) a single-query searcher
+    for this (index, τ).  Returns ``fn(q) -> SearchResult``."""
+    return get_searcher(index, tau, cap_max, batch=False)
+
+
+def make_batch_searcher(index: SketchIndex, tau: int,
+                        cap_max: int = CAP_MAX_DEFAULT):
     """vmapped searcher: (m, L) queries -> SearchResult with leading axis."""
-    caps = frontier_capacities(index.t, index.b, tau, cap_max)
+    return get_searcher(index, tau, cap_max, batch=True)
 
-    @jax.jit
-    def run(qs):
-        return jax.vmap(lambda q: _search_trace(index, q, tau=tau, caps=caps))(qs)
 
-    return run
-
+# ---------------------------------------------------------------------------
+# host wrappers: overflow ladder + top-k engine
+# ---------------------------------------------------------------------------
 
 def search(index: SketchIndex, q: np.ndarray, tau: int,
-           cap_max: int = 1 << 15, max_cap: int = 1 << 22) -> SearchResult:
+           cap_max: int = CAP_MAX_DEFAULT,
+           max_cap: int = LADDER_CAP_MAX) -> SearchResult:
     """Host convenience wrapper with the overflow ladder: retries with a
-    doubled capacity until the traversal is exact."""
+    doubled capacity until the traversal is exact (or ``max_cap`` is hit).
+    Every rung comes from the process-level searcher cache, so a repeated
+    (index, τ) call never re-jits."""
     q = jnp.asarray(q)
     while True:
-        res = make_searcher(index, tau, cap_max)(q)
+        res = get_searcher(index, tau, cap_max)(q)
         if int(res.overflow) == 0 or cap_max >= max_cap:
             return res
-        cap_max *= 4
+        cap_max *= 2
+
+
+def _tau_for_k(index: SketchIndex, k: int) -> int:
+    """Smallest τ whose expected candidate count reaches k, from the cost
+    model's uniform-DB estimate |I(τ)| ≈ n·sigs(b, L, τ)/(2^b)^L."""
+    A = float(1 << index.b)
+    denom = A ** min(index.L, 64)
+    for tau in range(index.L + 1):
+        if sigs(index.b, index.L, tau) * index.n / denom >= k:
+            return tau
+    return index.L
+
+
+@functools.lru_cache(maxsize=None)
+def _topk_select(n: int, k: int):
+    """Jitted batched (dist (m, n) -> (dists, ids) (m, k)) k-smallest
+    selection.  ``lax.top_k`` breaks ties toward the lower index, so equal
+    distances order by id."""
+    def sel(dist):
+        neg, idx = jax.lax.top_k(-dist, k)
+        return -neg, idx.astype(jnp.int32)
+
+    return jax.jit(jax.vmap(sel))
+
+
+def _pad_topk(dists: np.ndarray, ids: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    kk = ids.shape[-1]
+    if kk == k:
+        return dists, ids
+    pad = [(0, 0)] * (ids.ndim - 1) + [(0, k - kk)]
+    return (np.pad(dists, pad, constant_values=int(BIG)),
+            np.pad(ids, pad, constant_values=-1))
+
+
+def topk(index: SketchIndex, q: np.ndarray, k: int,
+         tau0: int | None = None, cap_max: int = CAP_MAX_DEFAULT,
+         max_cap: int = LADDER_CAP_MAX) -> TopKResult:
+    """Exact k-nearest-neighbor search: run the compiled range searcher on
+    a τ-escalation ladder until ≥ k ids survive, then select the k smallest
+    exact distances (ties broken by id).
+
+    Correctness: once ``mask.sum() >= k`` at threshold τ with zero frontier
+    overflow, every excluded id has distance > τ ≥ the k-th smallest — so
+    the selection over ``dist`` (exact inside the ball, BIG outside) is
+    globally exact.  A nonzero ``TopKResult.overflow`` (only possible once
+    the capacity ladder saturates ``max_cap``) marks a potentially partial
+    result.  If ``k > n`` the result is padded with (-1, BIG).
+    """
+    res = topk_batch(index, jnp.asarray(q)[None], k, tau0=tau0,
+                     cap_max=cap_max, max_cap=max_cap)
+    return TopKResult(ids=res.ids[0], dists=res.dists[0], tau=res.tau,
+                      overflow=res.overflow)
+
+
+def topk_batch(index: SketchIndex, qs: np.ndarray, k: int,
+               tau0: int | None = None, cap_max: int = CAP_MAX_DEFAULT,
+               max_cap: int = LADDER_CAP_MAX) -> TopKResult:
+    """Batched ``topk``: (m, L) queries -> (m, k) ids/dists.  One ladder
+    for the whole batch — τ escalates until every query has ≥ k survivors,
+    so all queries share the same compiled searcher."""
+    qs = jnp.asarray(qs)
+    kk = min(k, index.n)
+    tau = tau0 if tau0 is not None else _tau_for_k(index, kk)
+    tau = min(max(tau, 0), index.L)
+    # the escalated capacity carries across tau rungs: a larger tau-ball
+    # can only need at least as much frontier as the one that overflowed
+    cap = cap_max
+    while True:
+        while True:
+            res = get_searcher(index, tau, cap, batch=True)(qs)
+            overflow = int(res.overflow.sum())
+            if overflow == 0 or cap >= max_cap:
+                break
+            cap *= 2
+        if int(res.mask.sum(axis=1).min()) >= kk or tau >= index.L:
+            break
+        tau = min(index.L, max(tau + 1, 2 * tau))
+    dists, ids = _topk_select(index.n, kk)(res.dist)
+    dists, ids = _pad_topk(np.asarray(dists), np.asarray(ids), k)
+    # BIG lanes are non-results (possible when the capacity ladder
+    # saturated with overflow): mask their arbitrary ids to the pad value
+    ids = np.where(dists >= int(BIG), -1, ids)
+    return TopKResult(ids=jnp.asarray(ids), dists=jnp.asarray(dists),
+                      tau=tau, overflow=overflow)

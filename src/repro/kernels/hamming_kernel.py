@@ -30,6 +30,10 @@ from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK_N = 2048
 
+# Distance sentinel for pruned lanes.  Matches core.bst.BIG (kernels must
+# not import core); verified equal in tests/test_kernels.py.
+BIG = 1 << 20
+
 
 def _hamming_kernel(db_ref, q_ref, out_ref, *, b: int, W: int):
     """One (query j, db block i) cell: distances for BLOCK_N sketches."""
@@ -74,9 +78,11 @@ def hamming_distances_pallas(db_vert: jnp.ndarray, q_vert: jnp.ndarray,
     )(db_vert, q_vert)
 
 
-def _verify_kernel(db_ref, q_ref, base_ref, out_ref, *, b: int, W: int, tau: int):
+def _verify_kernel(db_ref, q_ref, base_ref, mask_ref, dist_ref,
+                   *, b: int, W: int, tau: int):
     """Fused sparse-layer verify: suffix distance + accumulated prefix
-    distance, thresholded — emits an int32 0/1 survival mask."""
+    distance, thresholded — emits an int32 0/1 survival mask plus the
+    exact int32 total distance (clamped to BIG on pruned lanes)."""
     db = db_ref[...]
     q = q_ref[...]
     diff = db ^ q
@@ -88,21 +94,24 @@ def _verify_kernel(db_ref, q_ref, base_ref, out_ref, *, b: int, W: int, tau: int
     for w in range(1, W):
         dist = dist + pops[w]
     total = dist + base_ref[0, :]
-    out_ref[...] = (total <= tau).astype(jnp.int32)[None, :]
+    mask_ref[...] = (total <= tau).astype(jnp.int32)[None, :]
+    dist_ref[...] = jnp.minimum(total, BIG)[None, :]
 
 
 @functools.partial(jax.jit, static_argnames=("tau", "block_n", "interpret"))
 def sparse_verify_pallas(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
                          base_dist: jnp.ndarray, *, tau: int,
                          block_n: int = DEFAULT_BLOCK_N,
-                         interpret: bool = False) -> jnp.ndarray:
+                         interpret: bool = False):
     """(b, W, n) suffix paths + (b, W) query suffix + (n,) prefix distances
-    -> (n,) int32 survival mask (1 = leaf within tau)."""
+    -> ((n,) int32 survival mask, (n,) int32 total distance).  Distances
+    are exact (prefix + suffix) for every non-pruned lane and clamped to
+    BIG where the prefix was pruned (base >= BIG)."""
     b, W, n = paths_vert.shape
     assert n % block_n == 0, (n, block_n)
     grid = (n // block_n,)
     kernel = functools.partial(_verify_kernel, b=b, W=W, tau=tau)
-    out = pl.pallas_call(
+    mask, dist = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -110,8 +119,14 @@ def sparse_verify_pallas(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
             pl.BlockSpec((b, W, 1), lambda i: (0, 0, 0)),
             pl.BlockSpec((1, block_n), lambda i: (0, i)),
         ],
-        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, n), jnp.int32),
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+        ],
         interpret=interpret,
     )(paths_vert, q_vert[..., None], base_dist[None, :].astype(jnp.int32))
-    return out[0]
+    return mask[0], dist[0]

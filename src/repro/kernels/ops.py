@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .hamming_kernel import (DEFAULT_BLOCK_N, hamming_distances_pallas,
+from .hamming_kernel import (BIG, DEFAULT_BLOCK_N, hamming_distances_pallas,
                              sparse_verify_pallas)
 
 
@@ -55,17 +55,19 @@ def hamming_distances(db_vert: jnp.ndarray, q_vert: jnp.ndarray,
 def sparse_verify(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
                   base_dist: jnp.ndarray, *, tau: int,
                   block_n: int = DEFAULT_BLOCK_N,
-                  use_kernel: bool | None = None) -> jnp.ndarray:
-    """Fused verify: (n,) int32 mask of leaves with prefix+suffix dist <= tau."""
+                  use_kernel: bool | None = None):
+    """Fused verify: ((n,) int32 mask of leaves with prefix+suffix dist
+    <= tau, (n,) int32 exact total distances — BIG-clamped when pruned)."""
     n = paths_vert.shape[-1]
     if use_kernel is None:
         use_kernel = n >= block_n
     if not use_kernel:
-        return ref.sparse_verify_ref(paths_vert, q_vert, base_dist, tau).astype(jnp.int32)
+        mask, dist = ref.sparse_verify_ref(paths_vert, q_vert, base_dist, tau)
+        return mask.astype(jnp.int32), dist
     paths_p = _pad_lanes(paths_vert, block_n)
     # pad base distances with +inf-like so pad lanes never survive
     pad = paths_p.shape[-1] - n
-    base_p = jnp.pad(base_dist.astype(jnp.int32), (0, pad), constant_values=jnp.int32(1 << 20))
-    out = sparse_verify_pallas(paths_p, q_vert, base_p, tau=tau,
-                               block_n=block_n, interpret=not _on_tpu())
-    return out[:n]
+    base_p = jnp.pad(base_dist.astype(jnp.int32), (0, pad), constant_values=jnp.int32(BIG))
+    mask, dist = sparse_verify_pallas(paths_p, q_vert, base_p, tau=tau,
+                                      block_n=block_n, interpret=not _on_tpu())
+    return mask[:n], dist[:n]

@@ -10,6 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .hamming_kernel import BIG
+
 
 def hamming_distances_ref(db_vert: jnp.ndarray, q_vert: jnp.ndarray) -> jnp.ndarray:
     """Batched vertical-format Hamming distances.
@@ -39,14 +41,16 @@ def hamming_threshold_count_ref(db_vert: jnp.ndarray, q_vert: jnp.ndarray,
 
 
 def sparse_verify_ref(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
-                      base_dist: jnp.ndarray, tau: int) -> jnp.ndarray:
+                      base_dist: jnp.ndarray, tau: int):
     """Sparse-layer verification oracle.
 
     paths_vert: (b, W, n) uint32 — collapsed root-to-leaf suffix paths;
     q_vert:     (b, W) uint32    — query suffix, single query;
     base_dist:  (n,) int32       — Hamming distance accumulated down to the
                                    sparse-layer roots (per leaf);
-    returns (n,) bool — leaf survives iff base + suffix distance <= tau.
+    returns ((n,) bool, (n,) int32) — survival mask (base + suffix <= tau)
+    and the total distance, clamped to BIG on pruned lanes.
     """
     d = hamming_distances_ref(paths_vert, q_vert[..., None])[0]
-    return (base_dist + d) <= tau
+    total = base_dist.astype(jnp.int32) + d
+    return total <= tau, jnp.minimum(total, BIG)

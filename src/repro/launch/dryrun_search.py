@@ -81,16 +81,16 @@ def main(argv=None):
 
         def search(arr, queries):
             def per_query(q):
-                masks, ov = jax.vmap(
+                masks, dists, ov = jax.vmap(
                     lambda levels, t_row, pv, dw, dc, lr, il, nl:
                     ds._shard_search(index, levels, t_row, pv, dw, dc, lr,
                                      il, nl, q, args.tau, caps,
                                      verify=args.verify)
                 )(arr["levels"], arr["t"], arr["pv"], arr["dw"], arr["dc"],
                   arr["lr"], arr["il"], arr["nl"])
-                return masks, ov.sum()
-            masks, ovs = jax.vmap(per_query)(queries)
-            return masks, ovs.sum()
+                return masks, dists, ov.sum()
+            masks, dists, ovs = jax.vmap(per_query)(queries)
+            return masks, dists, ovs.sum()
 
         q_abs = jax.ShapeDtypeStruct((args.queries, args.L), jnp.uint8)
         arr_abs = jax.tree_util.tree_map(

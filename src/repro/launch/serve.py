@@ -23,7 +23,7 @@ import numpy as np
 
 from ..configs.registry import ARCH_IDS, get_config
 from ..core.bst import build_bst
-from ..core.search import make_batch_searcher
+from ..core.search import make_batch_searcher, topk_batch
 from ..core.sketch import zbit_cws
 from ..distributed.sharding import use_mesh
 from ..launch.mesh import make_host_mesh
@@ -41,6 +41,8 @@ def main(argv=None):
     ap.add_argument("--retrieval", action="store_true")
     ap.add_argument("--index-size", type=int, default=4096)
     ap.add_argument("--tau", type=int, default=3)
+    ap.add_argument("--topk", type=int, default=3,
+                    help="k nearest documents returned per request")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -96,6 +98,13 @@ def main(argv=None):
             res = make_batch_searcher(index, args.tau)(q_sk)
             hits = np.asarray(res.mask).sum(axis=1)
             print(f"retrieval: tau={args.tau} hits per request: {hits}")
+            # top-k nearest documents (τ-escalation ladder + exact
+            # distances out of the same compiled searcher cache)
+            nn = topk_batch(index, q_sk, args.topk)
+            for r in range(args.batch):
+                print(f"  request {r}: top-{args.topk} docs "
+                      f"{np.asarray(nn.ids[r])} at distances "
+                      f"{np.asarray(nn.dists[r])} (tau*={nn.tau})")
     return 0
 
 

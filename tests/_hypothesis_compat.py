@@ -1,0 +1,89 @@
+"""Minimal deterministic stand-in for ``hypothesis`` so the tier-1 suite
+collects AND runs in a clean environment (the container ships no dev
+extras; see requirements-dev.txt for the real thing).
+
+Implements exactly the subset this repo's property tests use:
+``@given`` over positional strategies, ``@settings(max_examples, deadline)``,
+and ``st.integers / lists / randoms / data / composite``.  Draws come from
+a per-test ``random.Random`` seeded from a CRC of the test name, so runs
+are reproducible without hypothesis's database or shrinking.  When the
+real hypothesis is importable the test modules never load this file.
+"""
+
+from __future__ import annotations
+
+import random as _random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+
+class _Data:
+    """Stand-in for the object ``st.data()`` yields: interactive draws."""
+
+    def __init__(self, rng: _random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy):
+        return strategy._draw(self._rng)
+
+
+class _St:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size=0, max_size=10):
+        def draw(rng):
+            size = rng.randint(min_size, max_size)
+            return [elements._draw(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def randoms():
+        return _Strategy(lambda rng: _random.Random(rng.randint(0, 2**31)))
+
+    @staticmethod
+    def data():
+        return _Strategy(lambda rng: _Data(rng))
+
+    @staticmethod
+    def composite(fn):
+        def build(*args, **kwargs):
+            return _Strategy(
+                lambda rng: fn(lambda s: s._draw(rng), *args, **kwargs))
+        return build
+
+
+st = _St()
+
+
+def given(*strategies):
+    def decorate(fn):
+        # NOT functools.wraps: pytest must see a zero-arg signature, or it
+        # would treat the wrapped test's strategy params as fixtures.
+        def run():
+            # @settings may sit above @given (stamps run) or below it
+            # (stamps the raw fn) — honor either order
+            n = getattr(run, "_max_examples",
+                        getattr(fn, "_max_examples", 20))
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = _random.Random(seed)
+            for _ in range(n):
+                drawn = [s._draw(rng) for s in strategies]
+                fn(*drawn)
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        return run
+    return decorate
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+    return decorate

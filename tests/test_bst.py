@@ -4,7 +4,10 @@ exactly the brute-force Hamming-threshold solution set."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: deterministic fallback shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import (build_bst, build_fst_style, build_louds, build_multi_index,
                         make_batch_searcher, make_searcher, mi_search, search)

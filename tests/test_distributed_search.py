@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.core.distributed_search import (ShardedBST, build_sharded_bst,
-                                           gather_ids, make_sharded_searcher)
+                                           gather_ids, gather_topk,
+                                           make_sharded_searcher)
 from repro.core.hamming import hamming_pairwise_naive
 
 
@@ -27,7 +28,7 @@ def test_sharded_matches_bruteforce(n_shards, tau, verify):
 
     index = build_sharded_bst(db, b, n_shards)
     searcher = make_sharded_searcher(index, tau, verify=verify)
-    masks, overflow = searcher(jnp.asarray(queries))
+    masks, sdists, overflow = searcher(jnp.asarray(queries))
     assert int(overflow) == 0
     got = gather_ids(index, np.asarray(masks))
 
@@ -37,6 +38,34 @@ def test_sharded_matches_bruteforce(n_shards, tau, verify):
         want = np.flatnonzero(dists[qi] <= tau)
         np.testing.assert_array_equal(got[qi], want,
                                       err_msg=f"shards={n_shards} q={qi}")
+        # the distance planes are exact on the solution set
+        dvec = np.asarray(sdists[qi])[index.shard_of, index.pos_of]
+        np.testing.assert_array_equal(dvec[want], dists[qi][want],
+                                      err_msg=f"shards={n_shards} q={qi}")
+
+
+@pytest.mark.parametrize("n_shards", [1, 3])
+def test_gather_topk_ties_by_id(n_shards):
+    """gather_topk merges shard distance planes into global (distance, id)
+    order — duplicate-heavy DB makes boundary ties routine."""
+    n, L, b, tau, k = 240, 10, 2, 4, 7
+    rng = np.random.default_rng(8)
+    base = rng.integers(0, 1 << b, size=(40, L), dtype=np.uint8)
+    db = base[rng.integers(0, 40, size=n)]          # many exact duplicates
+    queries = db[:3]
+    index = build_sharded_bst(db, b, n_shards)
+    _, sdists, overflow = make_sharded_searcher(index, tau)(
+        jnp.asarray(queries))
+    assert int(overflow) == 0
+    ids, dk = gather_topk(index, np.asarray(sdists), k)
+    dists = np.asarray(hamming_pairwise_naive(
+        jnp.asarray(queries), jnp.asarray(db)))
+    for qi in range(len(queries)):
+        d = np.where(dists[qi] <= tau, dists[qi], 1 << 20)
+        want = np.lexsort((np.arange(n), d))[:k]
+        real = d[want] < (1 << 20)
+        np.testing.assert_array_equal(ids[qi], np.where(real, want, -1))
+        np.testing.assert_array_equal(dk[qi], d[want])
 
 
 def test_common_plan_is_shared():

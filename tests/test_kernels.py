@@ -4,7 +4,10 @@ oracle, swept over shapes / b / L / block sizes, plus hypothesis properties."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: deterministic fallback shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import hamming as H
 from repro.kernels import ops, ref
@@ -31,18 +34,30 @@ def test_hamming_kernel_matches_oracle(b, L, n, m, block_n):
     np.testing.assert_array_equal(got, brute)
 
 
+def test_big_sentinel_consistent():
+    """The kernel package's pruned-lane sentinel must equal core.bst.BIG."""
+    from repro.core.bst import BIG
+    from repro.kernels.hamming_kernel import BIG as KBIG
+    assert int(BIG) == int(KBIG) == int(ref.BIG)
+
+
 @pytest.mark.parametrize("b,L,tau", [(2, 16, 2), (4, 32, 5), (8, 64, 3), (2, 16, 0)])
 def test_sparse_verify_matches_oracle(b, L, tau):
     rng = np.random.default_rng(b + L + tau)
     n = 384
-    _, paths_vert = make_db(rng, n, L, b)
-    _, q_vert = make_db(rng, 1, L, b)
+    db, paths_vert = make_db(rng, n, L, b)
+    q, q_vert = make_db(rng, 1, L, b)
     q_vert = q_vert[..., 0]
     base = rng.integers(0, tau + 2, size=n).astype(np.int32)
-    got = np.asarray(ops.sparse_verify(paths_vert, q_vert, jnp.asarray(base),
-                                       tau=tau, block_n=128, use_kernel=True))
-    want = np.asarray(ref.sparse_verify_ref(paths_vert, q_vert, jnp.asarray(base), tau)).astype(np.int32)
-    np.testing.assert_array_equal(got, want)
+    got, got_d = ops.sparse_verify(paths_vert, q_vert, jnp.asarray(base),
+                                   tau=tau, block_n=128, use_kernel=True)
+    want, want_d = ref.sparse_verify_ref(paths_vert, q_vert,
+                                         jnp.asarray(base), tau)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+    # distances are exact: base + suffix Hamming distance
+    suffix = (db != q[0][None]).sum(axis=1)
+    np.testing.assert_array_equal(np.asarray(got_d), base + suffix)
 
 
 def test_kernel_direct_no_padding():
@@ -72,8 +87,9 @@ def test_verify_property(b, L, n, tau, rnd):
     db, paths_vert = make_db(rng, n, L, b)
     q, q_vert = make_db(rng, 1, L, b)
     base = rng.integers(0, 4, size=n).astype(np.int32)
-    got = np.asarray(ops.sparse_verify(paths_vert, q_vert[..., 0], jnp.asarray(base),
-                                       tau=tau, block_n=128))
+    got, got_d = ops.sparse_verify(paths_vert, q_vert[..., 0], jnp.asarray(base),
+                                   tau=tau, block_n=128)
     suffix = (db != q[0][None]).sum(axis=1)
     want = ((base + suffix) <= tau).astype(np.int32)
-    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    np.testing.assert_array_equal(np.asarray(got_d), base + suffix)

@@ -5,7 +5,10 @@ per-module): search exactness over arbitrary databases, monotonicity in
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: deterministic fallback shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.bst import build_bst
 from repro.core.distributed_search import (build_sharded_bst, gather_ids,

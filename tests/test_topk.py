@@ -1,0 +1,168 @@
+"""Top-k kNN engine: exact agreement with the brute-force Hamming oracle
+(ties broken by id), the τ-escalation ladder, the distance vector carried
+by SearchResult, and the compiled-searcher cache (no re-jit on repeated
+(index, τ) calls)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (build_bst, build_louds, build_multi_index,
+                        clear_searcher_cache, mi_search, search,
+                        searcher_cache_info, topk, topk_batch)
+from repro.core.bst import BIG
+
+
+def brute_dists(db, q):
+    return (db != q[None, :]).sum(axis=1).astype(np.int32)
+
+
+def oracle_topk(db, q, k):
+    """k smallest distances, ties broken by id; trimmed to n if k > n."""
+    d = brute_dists(db, q)
+    order = np.lexsort((np.arange(len(db)), d))[: min(k, len(db))]
+    return order, d[order]
+
+
+def random_db(rng, n, L, b, dup_frac=0.3):
+    n_uniq = max(1, int(n * (1 - dup_frac)))
+    base = rng.integers(0, 1 << b, size=(n_uniq, L)).astype(np.uint8)
+    extra = base[rng.integers(0, n_uniq, size=n - n_uniq)]
+    db = np.concatenate([base, extra], axis=0)
+    rng.shuffle(db)
+    return db
+
+
+@pytest.mark.parametrize("b", [1, 2, 4])
+@pytest.mark.parametrize("k", [1, 7, 64])
+def test_topk_matches_bruteforce(b, k):
+    rng = np.random.default_rng(b * 31 + k)
+    L = {1: 24, 2: 16, 4: 12}[b]
+    db = random_db(rng, 300, L, b)
+    idx = build_bst(db, b)
+    for qi in range(3):
+        q = db[rng.integers(0, len(db))] if qi % 2 == 0 else \
+            rng.integers(0, 1 << b, size=L).astype(np.uint8)
+        res = topk(idx, q, k)
+        assert res.overflow == 0
+        want_ids, want_d = oracle_topk(db, q, k)
+        np.testing.assert_array_equal(np.asarray(res.ids), want_ids)
+        np.testing.assert_array_equal(np.asarray(res.dists), want_d)
+
+
+def test_topk_escalates_past_initial_tau():
+    """k far above the survivors of the cost-model's starting τ: the
+    ladder must escalate and still return the exact answer."""
+    rng = np.random.default_rng(11)
+    db = random_db(rng, 150, 16, 2, dup_frac=0.0)
+    idx = build_bst(db, 2)
+    q = rng.integers(0, 4, size=16).astype(np.uint8)
+    # tau0=0 survivors are (almost surely) zero for a random query
+    res = topk(idx, q, 25, tau0=0)
+    want_ids, want_d = oracle_topk(db, q, 25)
+    np.testing.assert_array_equal(np.asarray(res.ids), want_ids)
+    np.testing.assert_array_equal(np.asarray(res.dists), want_d)
+    assert res.tau > 0  # the ladder really escalated
+
+
+def test_topk_k_exceeds_n_pads():
+    rng = np.random.default_rng(12)
+    db = random_db(rng, 40, 12, 2)
+    idx = build_bst(db, 2)
+    q = db[0]
+    res = topk(idx, q, 64)
+    want_ids, want_d = oracle_topk(db, q, 64)
+    np.testing.assert_array_equal(np.asarray(res.ids)[:40], want_ids)
+    np.testing.assert_array_equal(np.asarray(res.dists)[:40], want_d)
+    assert (np.asarray(res.ids)[40:] == -1).all()
+    assert (np.asarray(res.dists)[40:] == int(BIG)).all()
+
+
+@pytest.mark.parametrize("builder", [build_bst, build_louds])
+def test_topk_batch_matches_bruteforce(builder):
+    rng = np.random.default_rng(13)
+    db = random_db(rng, 200, 14, 2)
+    idx = builder(db, 2)
+    qs = np.stack([db[3], db[50],
+                   rng.integers(0, 4, size=14).astype(np.uint8)])
+    res = topk_batch(idx, qs, 9)
+    for i in range(len(qs)):
+        want_ids, want_d = oracle_topk(db, qs[i], 9)
+        np.testing.assert_array_equal(np.asarray(res.ids)[i], want_ids)
+        np.testing.assert_array_equal(np.asarray(res.dists)[i], want_d)
+
+
+@pytest.mark.parametrize("tau", [0, 2, 4])
+def test_search_result_distances_exact(tau):
+    """SearchResult.dist is the exact Hamming distance inside the τ-ball
+    and BIG outside — the invariant topk's selection relies on."""
+    rng = np.random.default_rng(14)
+    db = random_db(rng, 250, 16, 2)
+    idx = build_bst(db, 2)
+    q = db[9]
+    res = search(idx, q, tau)
+    assert int(res.overflow) == 0
+    d = brute_dists(db, q)
+    got = np.asarray(res.dist)
+    np.testing.assert_array_equal(got[d <= tau], d[d <= tau])
+    assert (got[d > tau] == int(BIG)).all()
+
+
+def test_multi_index_distances_exact():
+    rng = np.random.default_rng(15)
+    db = random_db(rng, 300, 32, 2)
+    mi = build_multi_index(db, 2, 2)
+    q = db[21]
+    tau = 4
+    res = mi_search(mi, q, tau)
+    d = brute_dists(db, q)
+    got = np.asarray(res.dist)
+    np.testing.assert_array_equal(np.asarray(res.mask), d <= tau)
+    np.testing.assert_array_equal(got[d <= tau], d[d <= tau])
+    assert (got[d > tau] == int(BIG)).all()
+
+
+def test_tiny_cap_ladder_converges_to_exact_mask():
+    """Regression for the overflow ladder: an absurdly small starting
+    capacity must still converge to the exact solution set."""
+    rng = np.random.default_rng(16)
+    db = random_db(rng, 300, 16, 2, dup_frac=0.0)
+    idx = build_bst(db, 2)
+    q = db[0]
+    res = search(idx, q, tau=4, cap_max=2)
+    assert int(res.overflow) == 0
+    d = brute_dists(db, q)
+    np.testing.assert_array_equal(np.asarray(res.mask), d <= 4)
+    np.testing.assert_array_equal(np.asarray(res.dist)[d <= 4], d[d <= 4])
+
+
+def test_repeated_search_hits_searcher_cache():
+    """Repeated search() at a fixed (index, τ) must be served from the
+    process-level compiled-searcher cache: miss count frozen, hits grow."""
+    rng = np.random.default_rng(17)
+    db = random_db(rng, 200, 16, 2)
+    idx = build_bst(db, 2)
+    clear_searcher_cache()
+    search(idx, db[0], 2)
+    after_first = searcher_cache_info()
+    assert after_first["misses"] == 1 and after_first["hits"] == 0
+    for i in range(5):
+        search(idx, db[i], 2)
+    after_more = searcher_cache_info()
+    assert after_more["misses"] == after_first["misses"]  # no re-jit
+    assert after_more["hits"] == after_first["hits"] + 5
+    # a different tau is a different compiled rung
+    search(idx, db[0], 3)
+    assert searcher_cache_info()["misses"] == 2
+
+
+def test_topk_repeated_calls_do_not_rejit():
+    rng = np.random.default_rng(18)
+    db = random_db(rng, 200, 16, 2)
+    idx = build_bst(db, 2)
+    clear_searcher_cache()
+    first = topk(idx, db[0], 5)
+    misses = searcher_cache_info()["misses"]
+    again = topk(idx, db[1], 5)
+    assert searcher_cache_info()["misses"] == misses
+    assert first.tau == again.tau
