@@ -1,0 +1,68 @@
+"""Batched serving throughput: queries/sec of the natively batched
+searcher (2D frontier + query-tiled verify kernel) across batch sizes
+m ∈ {1, 8, 64, 256}, against the legacy per-query loop over the
+single-query searcher.
+
+The point of the tentpole optimisation is that the collapsed-path array
+is streamed from HBM ⌈m/BLOCK_M⌉ times instead of m — on this CPU
+container the kernel runs in interpret mode, so the *assertable* part is
+correctness (native batch bit-identical to the per-query path) and the
+amortisation trend, while the roofline suite carries the analytic
+intensity model (benchmarks/roofline.py).
+
+Rows:
+  * ``batch/<ds>/m<m>/native`` — one natively batched call, warm
+  * ``batch/<ds>/m<m>/loop``   — m single-query calls, warm
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bst import build_bst
+from repro.core.search import (clear_searcher_cache, make_batch_searcher,
+                               make_searcher)
+
+from .common import Csv, make_dataset, timeit
+
+
+def run(csv: Csv, datasets=("review",), ms=(1, 8, 64, 256),
+        tau: int = 2) -> None:
+    for name in datasets:
+        cfg, db, _ = make_dataset(name)
+        rng = np.random.default_rng(1)
+        index = build_bst(db, cfg.b)
+        m_max = max(ms)
+        queries = np.concatenate([
+            db[rng.integers(0, len(db), m_max // 2)],
+            rng.integers(0, 1 << cfg.b, size=(m_max - m_max // 2, cfg.L),
+                         dtype=np.uint8)])
+        clear_searcher_cache()
+        single = make_searcher(index, tau)
+        for m in ms:
+            qs = jnp.asarray(queries[:m])
+            batched = make_batch_searcher(index, tau)
+            t_native = timeit(batched, qs)
+            csv.add(f"batch/{name}/m{m}/native", t_native * 1e6 / m,
+                    f"qps={m / t_native:.0f}")
+            t_loop = timeit(
+                lambda: jax.block_until_ready([single(q) for q in qs]))
+            csv.add(f"batch/{name}/m{m}/loop", t_loop * 1e6 / m,
+                    f"qps={m / t_loop:.0f}")
+
+            # bit-exactness of the native batch vs the per-query path
+            bres = batched(qs)
+            for i in range(m):
+                sres = single(qs[i])
+                np.testing.assert_array_equal(np.asarray(bres.mask[i]),
+                                              np.asarray(sres.mask))
+                np.testing.assert_array_equal(np.asarray(bres.dist[i]),
+                                              np.asarray(sres.dist))
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

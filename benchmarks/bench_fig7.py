@@ -22,6 +22,7 @@ from repro.core.bst import build_bst
 from repro.core.multi_index import build_multi_index, make_mi_searcher
 from repro.core.search import make_batch_searcher
 
+from . import common
 from .common import Csv, make_dataset, timeit
 
 SIG_LIMIT = 200_000   # stands in for the paper's 10 s/query abort
@@ -83,7 +84,10 @@ def run(csv: Csv, datasets=("review", "sift")) -> None:
 
         # Transferable paper claims (see module docstring).  Cross-family
         # absolute wall-clock (vectorized traversal vs host hash probe on
-        # one CPU core) is reported but NOT asserted.
+        # one CPU core) is reported but NOT asserted.  Timing-relational
+        # claims are meaningless at --smoke shapes and skipped there.
+        if common.SMOKE:
+            continue
         # (i) bST search time is flat in τ ...
         assert results[5]["SI-bST"] < 5 * results[1]["SI-bST"], results
         # ... while SIH's signature enumeration explodes (or hits the cap,

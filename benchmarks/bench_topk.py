@@ -22,6 +22,7 @@ from repro.core.bst import build_bst
 from repro.core.search import clear_searcher_cache, topk_batch
 from repro.kernels import ops
 
+from . import common
 from .common import Csv, make_dataset, timeit
 
 
@@ -37,7 +38,7 @@ def _scan_topk(db_vert, q_vert, k):
 
 def run(csv: Csv, datasets=("review",), ks=(1, 10, 100)) -> None:
     for name in datasets:
-        cfg, db, queries = make_dataset(name, n=1 << 16)
+        cfg, db, queries = make_dataset(name, n=common.cap_n(1 << 16))
         index = build_bst(db, cfg.b)
         planes = pack_vertical(db, cfg.b)
         db_vert = jnp.asarray(np.transpose(planes, (1, 2, 0)).copy())

@@ -13,12 +13,13 @@ from repro.core.hamming import (hamming_naive, hamming_vertical,
                                 pack_vertical)
 from repro.kernels import ops
 
+from . import common
 from .common import Csv, timeit
 
 
 def run(csv: Csv) -> None:
     rng = np.random.default_rng(0)
-    n, L, b = 1 << 18, 32, 4
+    n, L, b = common.cap_n(1 << 18), 32, 4
     db = rng.integers(0, 1 << b, size=(n, L), dtype=np.uint8)
     q = rng.integers(0, 1 << b, size=(L,), dtype=np.uint8)
 
@@ -41,7 +42,8 @@ def run(csv: Csv) -> None:
             f"speedup_vs_naive={t_naive / t_vert:.1f}x")
     csv.add("vertical/pallas_interpret", t_kernel * 1e6,
             "CPU interpret mode; TPU perf is the BlockSpec design")
-    assert t_vert < t_naive, (t_vert, t_naive)
+    if not common.SMOKE:  # timing claim is noise at smoke shapes
+        assert t_vert < t_naive, (t_vert, t_naive)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,25 @@ from repro.configs.registry import PAPER_DATASETS, SketchDatasetConfig
 SCALED_N = {"review": 1 << 17, "cp": 1 << 17, "sift": 1 << 17, "gist": 1 << 16}
 N_QUERIES = 20
 
+# --smoke: tiny-shape anti-bitrot mode (CI) — every suite must *execute*
+# end to end; perf-relational assertions are skipped (meaningless at
+# these shapes) while structural/space assertions still hold.
+SMOKE = False
+SMOKE_N = 1 << 10
+
+
+def set_smoke() -> None:
+    global SMOKE, N_QUERIES
+    SMOKE = True
+    N_QUERIES = 4
+    for k in SCALED_N:
+        SCALED_N[k] = SMOKE_N
+
+
+def cap_n(n: int) -> int:
+    """Clamp a suite's hard-coded database size in smoke mode."""
+    return min(n, SMOKE_N) if SMOKE else n
+
 
 def make_dataset(name: str, n: Optional[int] = None, seed: int = 0):
     """Synthetic b-bit sketch DB with the paper's (L, b).  Near-uniform

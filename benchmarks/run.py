@@ -10,8 +10,9 @@ import argparse
 import sys
 import traceback
 
-from . import (bench_fig7, bench_fig8, bench_table2, bench_table3,
-               bench_table4, bench_topk, bench_vertical, roofline)
+from . import (bench_batch, bench_fig7, bench_fig8, bench_table2,
+               bench_table3, bench_table4, bench_topk, bench_vertical,
+               common, roofline)
 from .common import Csv
 
 
@@ -19,24 +20,35 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller datasets / skip slow suites")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape anti-bitrot mode (CI): every suite "
+                         "executes end to end; perf-relational assertions "
+                         "are skipped")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names (table2,table3,...)")
     args = ap.parse_args(argv)
+    if args.smoke:
+        common.set_smoke()
+    quick = args.quick or args.smoke
 
     suites = {
         "fig8": lambda c: bench_fig8.run(c),
         "table2": lambda c: bench_table2.run(
-            c, datasets=("review",) if args.quick else ("review", "gist")),
+            c, datasets=("review",) if quick else ("review", "gist")),
         "vertical": lambda c: bench_vertical.run(c),
         "table3": lambda c: bench_table3.run(
-            c, datasets=("review",) if args.quick else ("review", "cp")),
+            c, datasets=("review",) if quick else ("review", "cp")),
         "table4": lambda c: bench_table4.run(
-            c, datasets=("review",) if args.quick else ("review", "sift")),
+            c, datasets=("review",) if quick else ("review", "sift")),
         "fig7": lambda c: bench_fig7.run(
-            c, datasets=("review",) if args.quick else ("review", "sift")),
+            c, datasets=("review",) if quick else ("review", "sift")),
         "topk": lambda c: bench_topk.run(
-            c, datasets=("review",) if args.quick else ("review", "sift"),
-            ks=(1, 10) if args.quick else (1, 10, 100)),
+            c, datasets=("review",) if quick else ("review", "sift"),
+            ks=(1, 10) if quick else (1, 10, 100)),
+        "batch": lambda c: bench_batch.run(
+            c, datasets=("review",),
+            ms=(1, 8) if args.smoke else (1, 8, 64) if args.quick
+            else (1, 8, 64, 256)),
         "roofline": lambda c: roofline.run(c),
     }
     if args.only:

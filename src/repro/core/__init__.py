@@ -5,7 +5,7 @@ from .bst import SketchIndex, build_bst, build_fst_style, build_louds
 from .cost_model import cost_multi, cost_single, frontier_capacities, sigs
 from .multi_index import (MultiIndex, build_multi_index, choose_plan,
                           clear_mi_searcher_cache, make_mi_searcher,
-                          mi_search)
+                          mi_search, mi_search_batch)
 from .search import (SearchResult, TopKResult, clear_searcher_cache,
                      get_searcher, make_batch_searcher, make_searcher, search,
                      searcher_cache_info, topk, topk_batch)
@@ -15,7 +15,7 @@ __all__ = [
     "SearchResult", "make_searcher", "make_batch_searcher", "search",
     "TopKResult", "topk", "topk_batch", "get_searcher",
     "searcher_cache_info", "clear_searcher_cache",
-    "MultiIndex", "build_multi_index", "mi_search", "make_mi_searcher",
-    "clear_mi_searcher_cache",
+    "MultiIndex", "build_multi_index", "mi_search", "mi_search_batch",
+    "make_mi_searcher", "clear_mi_searcher_cache",
     "choose_plan", "sigs", "cost_single", "cost_multi", "frontier_capacities",
 ]

@@ -35,11 +35,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
+from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
 from .bitvector import BitVector
 from .bst import BIG
 from .cost_model import frontier_capacities
 from .hamming import pack_vertical, pack_vertical_jax
-from .search import _compact
+from .search import _compact, _compact_batch
 from .trie_builder import TrieLevels, build_trie_levels, pick_layers, table_or_list
 
 WORD_SHIFT = 5
@@ -369,6 +370,86 @@ def _shard_search(index: ShardedBST, shard_levels, shard_t, paths_vert,
     return mask, dist, overflow
 
 
+def _shard_search_batch(index: ShardedBST, shard_levels, shard_t, paths_vert,
+                        d_words, d_cum, leaf_root, id_leaf, n_local,
+                        qs: jnp.ndarray, tau: int, caps,
+                        block_m: int = DEFAULT_BLOCK_M):
+    """One shard, the WHOLE query batch -> ((m, n_max) bool local masks,
+    (m, n_max) int32 exact local distances, (m,) int32 overflow).
+
+    The natively batched analogue of ``_shard_search`` for the "scan"
+    verify mode (DESIGN.md §3): a (m, cap) 2D frontier with one shared
+    children() lookup per level, a batched scatter-min onto per-query
+    ℓ_s-root planes, and the query-tiled batch verify over the padded
+    collapsed-path array — so under SPMD each device streams its local
+    path array once per ⌈m/block_m⌉ query tile rather than once per
+    query.  The verify backend auto-selects (this function is vmapped
+    over the shard axis; pallas_call batches the shard dim onto the
+    grid): the kernel for production-sized shards, the jnp oracle when
+    the padded shard is smaller than one block.  ``d_words``/``d_cum``
+    ride along unused to keep the vmapped signature identical to the
+    gather-verify path."""
+    del d_words, d_cum
+    qs = qs.astype(jnp.int32)
+    m = qs.shape[0]
+    ids = jnp.zeros((m, 1), jnp.int32)
+    dists = jnp.zeros((m, 1), jnp.int32)
+    valid = jnp.ones((m, 1), bool)
+    overflow = jnp.zeros((m,), jnp.int32)
+    b = index.b
+    for lev in range(1, index.ls + 1):
+        kind = index.kinds[lev - 1]
+        lv = shard_levels[lev - 1]
+        t_prev = shard_t[lev - 1]
+        t_cur = shard_t[lev]
+        cap = ids.shape[1]
+        flat = ids.reshape(-1)
+        if kind == "dense":
+            c_ids, c_lab, c_ex = _children_dense(flat, b)
+        elif kind == "table":
+            c_ids, c_lab, c_ex = _children_table(lv[0], lv[1], flat, t_prev, b)
+        else:
+            c_ids, c_lab, c_ex = _children_list(
+                lv[0], lv[1], lv[2], flat, t_prev, t_cur, b)
+        A = c_ids.shape[-1]
+        c_ids = c_ids.reshape(m, cap, A)
+        c_lab = c_lab.reshape(m, cap, A)
+        c_ex = c_ex.reshape(m, cap, A)
+        q_char = qs[:, lev - 1][:, None, None]
+        c_d = dists[:, :, None] + (c_lab != q_char).astype(jnp.int32)
+        c_v = valid[:, :, None] & c_ex & (c_d <= tau)
+        ids, dists, valid, ov = _compact_batch(
+            c_ids.reshape(m, -1), c_d.reshape(m, -1), c_v.reshape(m, -1),
+            caps[lev])
+        overflow = overflow + ov
+
+    t_L = shard_t[index.L]
+    t_Lmax = index.paths_vert.shape[-1]
+    sfx = index.L - index.ls
+    row = jnp.arange(m, dtype=jnp.int32)[:, None]
+    safe = jnp.where(valid, ids, 0)
+    base_root = jnp.full((m, t_Lmax + 1), BIG, jnp.int32).at[row, safe].min(
+        jnp.where(valid, dists, BIG), mode="drop")
+    lr_safe = jnp.clip(leaf_root, 0, t_Lmax)
+    base_leaf = base_root[:, lr_safe]                        # (m, t_Lmax)
+    lanes = jnp.arange(t_Lmax)
+    base_leaf = jnp.where(lanes[None, :] < t_L, base_leaf, BIG)
+    if sfx > 0:
+        q_sfx = jnp.transpose(pack_vertical_jax(qs[:, index.ls:], b),
+                              (1, 2, 0))                     # (b, W, m)
+        hm, leaf_dist = ops.sparse_verify_batch(paths_vert, q_sfx, base_leaf,
+                                                tau=tau, block_m=block_m)
+        survive = hm > 0
+    else:
+        survive = base_leaf <= tau
+        leaf_dist = base_leaf
+    leaf_of_id = jnp.clip(id_leaf, 0, t_Lmax - 1)
+    local = (jnp.arange(index.n_max) < n_local)[None, :]
+    mask = survive[:, leaf_of_id] & local
+    dist = jnp.where(mask, leaf_dist[:, leaf_of_id], BIG)
+    return mask, dist, overflow
+
+
 def expected_caps(t: Tuple[int, ...], b: int, tau: int,
                   safety: int = 16, floor: int = 64) -> Tuple[int, ...]:
     """Expected-case frontier capacities (§Perf P8): for uniform sketches
@@ -389,11 +470,18 @@ def expected_caps(t: Tuple[int, ...], b: int, tau: int,
 
 def make_sharded_searcher(index: ShardedBST, tau: int,
                           cap_max: int = 1 << 14, verify: str = "scan",
-                          caps_mode: str = "worst"):
+                          caps_mode: str = "worst",
+                          block_m: int = DEFAULT_BLOCK_M):
     """Returns jitted f(queries (m, L)) -> ((m, S, n_max) bool masks,
     (m, S, n_max) int32 exact distances, int32 overflow).  The shard axis
     vmaps — under jit-with-shardings it partitions over the mesh data
-    axes (each device runs only its own shard's trie)."""
+    axes (each device runs only its own shard's trie).
+
+    For ``verify="scan"`` (the default) the query axis is natively
+    batched inside each shard (``_shard_search_batch``): one 2D-frontier
+    traversal and one query-tiled verify per shard for the whole batch.
+    ``verify="gather"`` keeps the per-query trace (candidate gathering is
+    query-dependent) and vmaps over queries as before."""
     t_max = tuple(int(x) for x in np.asarray(index.t).max(axis=0))
     if caps_mode == "expected":
         caps = expected_caps(t_max, index.b, tau)
@@ -403,20 +491,32 @@ def make_sharded_searcher(index: ShardedBST, tau: int,
         (lv.words, lv.cum, lv.labels) if lv.kind == "list"
         else (lv.words, lv.cum) if lv.kind == "table" else ()
         for lv in index.levels)
+    shard_args = (level_arrays, index.t, index.paths_vert, index.d_words,
+                  index.d_cum, index.leaf_root, index.id_leaf, index.n_local)
 
-    def one_shard(levels, t_row, pv, dw, dc, lr, il, nl, q):
-        return _shard_search(index, levels, t_row, pv, dw, dc, lr, il, nl,
-                             q, tau, caps, verify=verify)
+    if verify == "scan":
+        def search(queries):
+            def per_shard(levels, t_row, pv, dw, dc, lr, il, nl):
+                return _shard_search_batch(
+                    index, levels, t_row, pv, dw, dc, lr, il, nl,
+                    queries, tau, caps, block_m=block_m)
+            masks, dists, overflows = jax.vmap(per_shard)(*shard_args)
+            # (S, m, ...) -> (m, S, ...): keep the public result contract
+            return (jnp.transpose(masks, (1, 0, 2)),
+                    jnp.transpose(dists, (1, 0, 2)), overflows.sum())
+    else:
+        def one_shard(levels, t_row, pv, dw, dc, lr, il, nl, q):
+            return _shard_search(index, levels, t_row, pv, dw, dc, lr, il,
+                                 nl, q, tau, caps, verify=verify)
 
-    def search(queries):
-        def per_query(q):
-            return jax.vmap(
-                lambda levels, t_row, pv, dw, dc, lr, il, nl: one_shard(
-                    levels, t_row, pv, dw, dc, lr, il, nl, q)
-            )(level_arrays, index.t, index.paths_vert, index.d_words,
-              index.d_cum, index.leaf_root, index.id_leaf, index.n_local)
-        masks, dists, overflows = jax.vmap(per_query)(queries)
-        return masks, dists, overflows.sum()
+        def search(queries):
+            def per_query(q):
+                return jax.vmap(
+                    lambda levels, t_row, pv, dw, dc, lr, il, nl: one_shard(
+                        levels, t_row, pv, dw, dc, lr, il, nl, q)
+                )(*shard_args)
+            masks, dists, overflows = jax.vmap(per_query)(queries)
+            return masks, dists, overflows.sum()
 
     return jax.jit(search)
 

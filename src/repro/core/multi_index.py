@@ -22,8 +22,10 @@ import numpy as np
 from . import cost_model
 from .bst import BIG, SketchIndex, build_bst
 from .hamming import pack_vertical, pack_vertical_jax
-from .search import _compact, _pin_cache_get, _search_trace
+from .search import (_compact, _compact_batch, _pin_cache_get, _search_trace,
+                     _search_trace_batch)
 from ..kernels import ops
+from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
 
 
 class MultiSearchResult(NamedTuple):
@@ -118,6 +120,49 @@ def _mi_search_trace(mi: MultiIndex, q: jnp.ndarray, *, tau: int,
                              overflow=overflow)
 
 
+def _mi_search_trace_batch(mi: MultiIndex, qs: jnp.ndarray, *, tau: int,
+                           caps_per_block, cand_cap: int,
+                           block_m: int = DEFAULT_BLOCK_M) -> MultiSearchResult:
+    """Natively batched MI search: every block runs the 2D-frontier batch
+    trace, candidate sets compact per query, and verification XOR/
+    popcounts each query against its own gathered candidates."""
+    qs = qs.astype(jnp.int32)
+    m = qs.shape[0]
+    taus = cost_model.block_thresholds(tau, len(mi.blocks))
+    cand_mask = jnp.zeros((m, mi.n), bool)
+    overflow = jnp.zeros((m,), jnp.int32)
+    for blk, (lo, hi), tj, caps in zip(mi.blocks, mi.bounds, taus,
+                                       caps_per_block):
+        res = _search_trace_batch(blk, qs[:, lo:hi], tau=tj, caps=caps,
+                                  block_m=block_m)
+        cand_mask = cand_mask | res.mask
+        overflow = overflow + res.overflow
+
+    n_cand = cand_mask.sum(axis=1, dtype=jnp.int32)
+    all_ids = jnp.broadcast_to(jnp.arange(mi.n, dtype=jnp.int32)[None, :],
+                               (m, mi.n))
+    ids, _, cvalid, ov = _compact_batch(all_ids,
+                                        jnp.zeros((m, mi.n), jnp.int32),
+                                        cand_mask, cand_cap)
+    overflow = overflow + ov
+    safe_ids = jnp.where(cvalid, ids, 0)                    # (m, C)
+    cand_vert = mi.full_vert[:, :, safe_ids]                # (b, W, m, C)
+    q_vert = jnp.transpose(pack_vertical_jax(qs, mi.b), (1, 2, 0))  # (b, W, m)
+    # per-query candidate sets: vmap the shared scan over the query axis
+    # (backend auto-selects — pallas_call batches under vmap, same as the
+    # sharded scan path; the oracle handles tiny candidate buffers)
+    dist = jax.vmap(
+        lambda cv, qv: ops.hamming_distances(cv, qv[..., None])[0],
+        in_axes=(2, 2))(cand_vert, q_vert)                  # (m, C)
+    ok = cvalid & (dist <= tau)
+    row = jnp.arange(m, dtype=jnp.int32)[:, None]
+    mask = jnp.zeros((m, mi.n), bool).at[row, safe_ids].max(ok, mode="drop")
+    dvec = jnp.full((m, mi.n), BIG, jnp.int32).at[row, safe_ids].min(
+        jnp.where(ok, dist, BIG), mode="drop")
+    return MultiSearchResult(mask=mask, dist=dvec, candidates=n_cand,
+                             overflow=overflow)
+
+
 # same discipline as search._SEARCHER_CACHE: the MultiIndex is pinned in
 # the value so the id key can never be recycled while the entry lives;
 # FIFO-bounded against benchmark sweeps.
@@ -131,21 +176,32 @@ def clear_mi_searcher_cache() -> None:
 
 
 def make_mi_searcher(mi: MultiIndex, tau: int, cap_max: int = 1 << 17,
-                     cand_cap: int | None = None):
+                     cand_cap: int | None = None, *, batch: bool = False,
+                     block_m: int = DEFAULT_BLOCK_M):
+    """Cached compiled MI searcher.  ``batch=False``: f(q (L,));
+    ``batch=True``: f(qs (m, L)) through the natively batched per-block
+    traces (leading query axis on every result field)."""
     taus = cost_model.block_thresholds(tau, len(mi.blocks))
     caps_per_block = tuple(
         cost_model.frontier_capacities(blk.t, blk.b, tj, cap_max)
         for blk, tj in zip(mi.blocks, taus))
     cc = cand_cap if cand_cap is not None else candidate_capacity(mi, tau)
 
-    key = (id(mi), tau, caps_per_block, cc)
+    key = (id(mi), tau, caps_per_block, cc, block_m if batch else None)
 
     def build():
-        @jax.jit
-        def run(q):
-            return _mi_search_trace(mi, q, tau=tau,
-                                    caps_per_block=caps_per_block,
-                                    cand_cap=cc)
+        if batch:
+            @jax.jit
+            def run(qs):
+                return _mi_search_trace_batch(mi, qs, tau=tau,
+                                              caps_per_block=caps_per_block,
+                                              cand_cap=cc, block_m=block_m)
+        else:
+            @jax.jit
+            def run(q):
+                return _mi_search_trace(mi, q, tau=tau,
+                                        caps_per_block=caps_per_block,
+                                        cand_cap=cc)
         return run
 
     fn, _ = _pin_cache_get(_MI_SEARCHER_CACHE, _MI_SEARCHER_CACHE_CAP, key,
@@ -154,12 +210,25 @@ def make_mi_searcher(mi: MultiIndex, tau: int, cap_max: int = 1 << 17,
 
 
 def mi_search(mi: MultiIndex, q: np.ndarray, tau: int) -> MultiSearchResult:
-    """Host wrapper with the doubled overflow ladder (cached searchers)."""
-    q = jnp.asarray(q)
+    """Host wrapper with the doubled overflow ladder: the m=1 row of
+    ``mi_search_batch`` (same pattern as ``topk``/``topk_batch``)."""
+    res = mi_search_batch(mi, jnp.asarray(q)[None], tau)
+    return MultiSearchResult(mask=res.mask[0], dist=res.dist[0],
+                             candidates=res.candidates[0],
+                             overflow=res.overflow[0])
+
+
+def mi_search_batch(mi: MultiIndex, qs: np.ndarray, tau: int,
+                    block_m: int = DEFAULT_BLOCK_M) -> MultiSearchResult:
+    """Batched ``mi_search``: (m, L) queries with one shared overflow
+    ladder (escalates until every query is exact)."""
+    qs = jnp.asarray(qs)
     cap_max, cand_cap = 1 << 15, candidate_capacity(mi, tau)
     while True:
-        res = make_mi_searcher(mi, tau, cap_max, cand_cap)(q)
-        if int(res.overflow) == 0 or (cap_max >= 1 << 22 and cand_cap >= mi.n):
+        res = make_mi_searcher(mi, tau, cap_max, cand_cap, batch=True,
+                               block_m=block_m)(qs)
+        if int(res.overflow.sum()) == 0 or (cap_max >= 1 << 22
+                                            and cand_cap >= mi.n):
             return res
         cap_max *= 2
         cand_cap = min(cand_cap * 2, mi.n)

@@ -11,6 +11,15 @@ traversed: pruned ℓ_s-subtries get a +∞ base distance and the Pallas
 verify kernel streams every collapsed suffix path in one masked scan —
 pruning becomes masking, pointer work becomes bandwidth.
 
+Multi-query is the first-class fast path (DESIGN.md §3): the batched
+searcher is NOT a vmap of the single-query trace but a natively batched
+``_search_trace_batch`` over a (m, cap) 2D frontier — one shared
+``children()`` gather per level for the whole batch, per-query
+cumsum-scatter compaction, a batched scatter-min onto (m, t_root)
+base-distance planes, and the query-tiled ``sparse_verify_batch`` Pallas
+kernel, which streams the collapsed-path array from HBM ⌈m/BLOCK_M⌉
+times instead of m.
+
 Exact distances are first-class: the traversal accumulates per-node
 Hamming distances anyway, and the verify kernel computes the exact total
 before thresholding, so ``SearchResult.dist`` carries the exact distance
@@ -39,6 +48,7 @@ from .bst import BIG, SketchIndex
 from .cost_model import frontier_capacities, sigs
 from .hamming import pack_vertical_jax
 from ..kernels import ops
+from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
 
 CAP_MAX_DEFAULT = 1 << 17
 LADDER_CAP_MAX = 1 << 22
@@ -70,6 +80,27 @@ def _compact(ids: jnp.ndarray, dists: jnp.ndarray, valid: jnp.ndarray,
     out_valid = jnp.arange(capacity + 1, dtype=jnp.int32) < kept
     overflow = jnp.maximum(total - capacity, 0)
     return out_ids[:capacity], out_dists[:capacity], out_valid[:capacity], overflow
+
+
+def _compact_batch(ids: jnp.ndarray, dists: jnp.ndarray, valid: jnp.ndarray,
+                   capacity: int):
+    """Row-wise stable masked compaction: (m, K) candidates -> (m,
+    capacity) frontier.  Each query compacts independently (per-row
+    cumsum + one 2D scatter); overflow is counted per query."""
+    m = ids.shape[0]
+    total = valid.sum(axis=1, dtype=jnp.int32)            # (m,)
+    pos = jnp.cumsum(valid, axis=1) - 1                   # (m, K)
+    slot = jnp.where(valid & (pos < capacity), pos, capacity)
+    row = jnp.arange(m, dtype=jnp.int32)[:, None]
+    out_ids = jnp.zeros((m, capacity + 1), jnp.int32).at[row, slot].set(
+        ids, mode="drop")
+    out_dists = jnp.full((m, capacity + 1), BIG, jnp.int32).at[row, slot].set(
+        dists, mode="drop")
+    kept = jnp.minimum(total, capacity)
+    out_valid = jnp.arange(capacity + 1, dtype=jnp.int32)[None, :] < kept[:, None]
+    overflow = jnp.maximum(total - capacity, 0)
+    return (out_ids[:, :capacity], out_dists[:, :capacity],
+            out_valid[:, :capacity], overflow)
 
 
 def _search_trace(index: SketchIndex, q: jnp.ndarray, *, tau: int,
@@ -125,11 +156,82 @@ def _search_trace(index: SketchIndex, q: jnp.ndarray, *, tau: int,
                         traversed=traversed)
 
 
+def _search_trace_batch(index: SketchIndex, qs: jnp.ndarray, *, tau: int,
+                        caps: Tuple[int, ...],
+                        block_m: int = DEFAULT_BLOCK_M) -> SearchResult:
+    """Natively batched search body: ``qs`` is (m, L) and the frontier is
+    a (m, cap) 2D array compacted per query.  Each level issues ONE
+    shared ``children()`` gather over the flattened (m·cap,) frontier
+    instead of m separate traces, the tail scatter-min lands on a
+    (m, t_root) base-distance plane, and the sparse layer runs through
+    the query-tiled batch verify kernel — the collapsed-path array is
+    streamed ⌈m/block_m⌉ times instead of m.  Per-query masks, exact
+    distances, and overflow counts are bit-identical to ``_search_trace``
+    (compaction is row-independent)."""
+    qs = qs.astype(jnp.int32)
+    m = qs.shape[0]
+    ids = jnp.zeros((m, 1), jnp.int32)
+    dists = jnp.zeros((m, 1), jnp.int32)
+    valid = jnp.ones((m, 1), bool)
+    overflow = jnp.zeros((m,), jnp.int32)
+    traversed = jnp.ones((m,), jnp.int32)
+
+    depth = len(index.levels)
+    for lev in range(1, depth + 1):
+        enc = index.levels[lev - 1]
+        cap = ids.shape[1]
+        c_ids, c_labels, c_exists = enc.children(ids.reshape(-1))  # (m·cap, A)
+        A = c_ids.shape[-1]
+        c_ids = c_ids.reshape(m, cap, A)
+        c_labels = c_labels.reshape(m, cap, A)
+        c_exists = c_exists.reshape(m, cap, A)
+        q_char = qs[:, lev - 1][:, None, None]
+        c_dists = dists[:, :, None] + (c_labels != q_char).astype(jnp.int32)
+        c_valid = valid[:, :, None] & c_exists & (c_dists <= tau)
+        ids, dists, valid, ov = _compact_batch(
+            c_ids.reshape(m, -1), c_dists.reshape(m, -1),
+            c_valid.reshape(m, -1), caps[lev])
+        overflow = overflow + ov
+        traversed = traversed + valid.sum(axis=1, dtype=jnp.int32)
+
+    row = jnp.arange(m, dtype=jnp.int32)[:, None]
+    safe_ids = jnp.where(valid, ids, 0)
+    if index.tail is not None:
+        tail = index.tail
+        # batched scatter of frontier distances onto per-query ℓ_s root
+        # planes (+∞ = pruned subtrie)
+        base_root = jnp.full((m, tail.t_root), BIG, jnp.int32).at[
+            row, safe_ids].min(jnp.where(valid, dists, BIG), mode="drop")
+        base_leaf = base_root[:, tail.leaf_root]                  # (m, t_L)
+        if tail.suffix_len > 0:
+            q_sfx = pack_vertical_jax(qs[:, index.ls:], index.b)  # (m, b, W)
+            q_sfx = jnp.transpose(q_sfx, (1, 2, 0))               # (b, W, m)
+            hit, leaf_dist = ops.sparse_verify_batch(
+                tail.paths_vert, q_sfx, base_leaf, tau=tau, block_m=block_m)
+            survive = hit > 0
+        else:
+            survive = base_leaf <= tau
+            leaf_dist = base_leaf
+    else:
+        # no collapsed tail (LOUDS/FST baselines): frontier is at level L
+        t_L = index.t[index.L]
+        leaf_dist = jnp.full((m, t_L), BIG, jnp.int32).at[row, safe_ids].min(
+            jnp.where(valid, dists, BIG), mode="drop")
+        survive = leaf_dist <= tau
+
+    mask = survive[:, index.id_leaf]
+    dist = jnp.where(mask, leaf_dist[:, index.id_leaf], BIG)
+    return SearchResult(mask=mask, dist=dist, overflow=overflow,
+                        traversed=traversed)
+
+
 # ---------------------------------------------------------------------------
 # compiled-searcher cache
 # ---------------------------------------------------------------------------
 
-# key: (id(index), tau, caps, batch) -> (index, jitted fn).  The index is
+# key: (id(index), tau, caps, block_m-or-None) -> (index, jitted fn).  The
+# last slot is None for the single-query searcher and the verify kernel's
+# query-tile size for the natively batched one.  The index is
 # held strongly in the value so its id can never be recycled while the
 # entry lives; serving processes hold few indexes, so this pins O(1) of
 # extra memory per cached rung.  FIFO-bounded so sweeps over many
@@ -167,19 +269,22 @@ def clear_searcher_cache() -> None:
 
 
 def get_searcher(index: SketchIndex, tau: int,
-                 cap_max: int = CAP_MAX_DEFAULT, *, batch: bool = False):
+                 cap_max: int = CAP_MAX_DEFAULT, *, batch: bool = False,
+                 block_m: int = DEFAULT_BLOCK_M):
     """Cached compiled searcher for this (index, τ, caps).  ``batch=False``
-    returns ``fn(q: (L,)) -> SearchResult``; ``batch=True`` the vmapped
-    ``fn(qs: (m, L)) -> SearchResult`` with a leading query axis."""
+    returns ``fn(q: (L,)) -> SearchResult``; ``batch=True`` the natively
+    batched ``fn(qs: (m, L)) -> SearchResult`` with a leading query axis
+    (2D-frontier traversal + the query-tiled verify kernel at tile size
+    ``block_m``)."""
     caps = frontier_capacities(index.t, index.b, tau, cap_max)
-    key = (id(index), tau, caps, batch)
+    key = (id(index), tau, caps, block_m if batch else None)
 
     def build():
         if batch:
             @jax.jit
             def run(qs):
-                return jax.vmap(
-                    lambda q: _search_trace(index, q, tau=tau, caps=caps))(qs)
+                return _search_trace_batch(index, qs, tau=tau, caps=caps,
+                                           block_m=block_m)
         else:
             @jax.jit
             def run(q):
@@ -200,9 +305,13 @@ def make_searcher(index: SketchIndex, tau: int,
 
 
 def make_batch_searcher(index: SketchIndex, tau: int,
-                        cap_max: int = CAP_MAX_DEFAULT):
-    """vmapped searcher: (m, L) queries -> SearchResult with leading axis."""
-    return get_searcher(index, tau, cap_max, batch=True)
+                        cap_max: int = CAP_MAX_DEFAULT,
+                        block_m: int = DEFAULT_BLOCK_M):
+    """Natively batched searcher: (m, L) queries -> SearchResult with a
+    leading query axis.  Unlike a vmap of the single-query trace, the
+    whole batch shares one traversal (one children() gather per level)
+    and one query-tiled verify scan of the collapsed-path array."""
+    return get_searcher(index, tau, cap_max, batch=True, block_m=block_m)
 
 
 # ---------------------------------------------------------------------------
@@ -235,11 +344,13 @@ def _tau_for_k(index: SketchIndex, k: int) -> int:
     return index.L
 
 
-@functools.lru_cache(maxsize=None)
-def _topk_select(n: int, k: int):
+@functools.lru_cache(maxsize=_SEARCHER_CACHE_CAP)
+def _topk_select(k: int):
     """Jitted batched (dist (m, n) -> (dists, ids) (m, k)) k-smallest
     selection.  ``lax.top_k`` breaks ties toward the lower index, so equal
-    distances order by id."""
+    distances order by id.  Keyed on ``k`` alone (n only shapes the traced
+    input, and jit re-specializes per shape anyway) and bounded like
+    ``_SEARCHER_CACHE`` so k-sweeps cannot grow it without limit."""
     def sel(dist):
         neg, idx = jax.lax.top_k(-dist, k)
         return -neg, idx.astype(jnp.int32)
@@ -258,7 +369,8 @@ def _pad_topk(dists: np.ndarray, ids: np.ndarray, k: int) -> Tuple[np.ndarray, n
 
 def topk(index: SketchIndex, q: np.ndarray, k: int,
          tau0: int | None = None, cap_max: int = CAP_MAX_DEFAULT,
-         max_cap: int = LADDER_CAP_MAX) -> TopKResult:
+         max_cap: int = LADDER_CAP_MAX,
+         block_m: int = DEFAULT_BLOCK_M) -> TopKResult:
     """Exact k-nearest-neighbor search: run the compiled range searcher on
     a τ-escalation ladder until ≥ k ids survive, then select the k smallest
     exact distances (ties broken by id).
@@ -271,17 +383,19 @@ def topk(index: SketchIndex, q: np.ndarray, k: int,
     result.  If ``k > n`` the result is padded with (-1, BIG).
     """
     res = topk_batch(index, jnp.asarray(q)[None], k, tau0=tau0,
-                     cap_max=cap_max, max_cap=max_cap)
+                     cap_max=cap_max, max_cap=max_cap, block_m=block_m)
     return TopKResult(ids=res.ids[0], dists=res.dists[0], tau=res.tau,
                       overflow=res.overflow)
 
 
 def topk_batch(index: SketchIndex, qs: np.ndarray, k: int,
                tau0: int | None = None, cap_max: int = CAP_MAX_DEFAULT,
-               max_cap: int = LADDER_CAP_MAX) -> TopKResult:
+               max_cap: int = LADDER_CAP_MAX,
+               block_m: int = DEFAULT_BLOCK_M) -> TopKResult:
     """Batched ``topk``: (m, L) queries -> (m, k) ids/dists.  One ladder
     for the whole batch — τ escalates until every query has ≥ k survivors,
-    so all queries share the same compiled searcher."""
+    so all queries share the same compiled searcher (the natively batched
+    2D-frontier trace + query-tiled verify kernel)."""
     qs = jnp.asarray(qs)
     kk = min(k, index.n)
     tau = tau0 if tau0 is not None else _tau_for_k(index, kk)
@@ -291,7 +405,8 @@ def topk_batch(index: SketchIndex, qs: np.ndarray, k: int,
     cap = cap_max
     while True:
         while True:
-            res = get_searcher(index, tau, cap, batch=True)(qs)
+            res = get_searcher(index, tau, cap, batch=True,
+                               block_m=block_m)(qs)
             overflow = int(res.overflow.sum())
             if overflow == 0 or cap >= max_cap:
                 break
@@ -299,7 +414,7 @@ def topk_batch(index: SketchIndex, qs: np.ndarray, k: int,
         if int(res.mask.sum(axis=1).min()) >= kk or tau >= index.L:
             break
         tau = min(index.L, max(tau + 1, 2 * tau))
-    dists, ids = _topk_select(index.n, kk)(res.dist)
+    dists, ids = _topk_select(kk)(res.dist)
     dists, ids = _pad_topk(np.asarray(dists), np.asarray(ids), k)
     # BIG lanes are non-results (possible when the capacity ladder
     # saturated with overflow): mask their arbitrary ids to the pad value

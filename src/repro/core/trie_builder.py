@@ -89,7 +89,10 @@ def build_trie_levels(sketches: np.ndarray, b: int) -> TrieLevels:
         if t_L > 1:
             boundary = boundary | np.concatenate([[True], col[1:] != col[:-1]])
             boundary[0] = True
-        nodes = (np.cumsum(boundary) - 1).astype(np.int32)  # leaf -> node id at lev
+        # int64: a billion-scale level can exceed 2^31 nodes and the
+        # cumsum must not wrap; the queryable encodings downcast to int32
+        # at encoding time, after any per-shard split has bounded t.
+        nodes = np.cumsum(boundary, dtype=np.int64) - 1  # leaf -> node id at lev
         t_lev = int(nodes[-1]) + 1
         first = np.flatnonzero(boundary)           # first leaf per node
         labels.append(col[first].astype(np.uint8))

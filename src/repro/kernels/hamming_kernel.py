@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: vertical-format Hamming-threshold scan.
+"""Pallas TPU kernels: query-tiled vertical-format Hamming scans.
 
 This is the measured hot spot of the paper's pipeline — the sparse-layer
 path scan and the multi-index verification step both reduce to "stream a
@@ -12,12 +12,22 @@ with the sketch index on the last (lane) axis.  A block of
 vectorizes the whole XOR/OR/popcount chain across 128-sketch lanes with
 the (tiny) b·W plane/word axes on sublanes.
 
+Query tiling (the batched-serving optimisation): a grid cell loads one
+(b, W, BLOCK_N) database block ONCE and plays a whole (b, W, BLOCK_M)
+query tile against it, emitting (BLOCK_M, BLOCK_N) output planes.  HBM
+traffic for the database drops from m streams (one per query, the naive
+vmap) to ⌈m/BLOCK_M⌉ streams, and the arithmetic intensity of the scan
+scales ~linearly with BLOCK_M until the (BLOCK_M, BLOCK_N) output planes
+dominate the byte count (see benchmarks/roofline.py).
+
 Block-shape reasoning (v5e: 128 lanes, 8 sublanes, ~16 MiB VMEM/core):
   * BLOCK_N multiple of 128 (lane width).  Default 2048.
-  * b·W ≤ 16 for every paper dataset (b=2,W=1 … b=8,W=2), so a block is at
-    most 16·2048·4 = 128 KiB — VMEM pressure is negligible and the grid
-    can double-buffer aggressively; arithmetic intensity is ~1.5 int-ops
-    per byte, i.e. firmly memory-bound, which the roofline table reflects.
+  * BLOCK_M on sublanes of the output tile; default 8 (one sublane
+    register's worth) — the XOR intermediate is (b, W, BLOCK_M, BLOCK_N)
+    = at most 16·8·2048·4 = 1 MiB of VMEM, leaving room to double-buffer.
+  * b·W ≤ 16 for every paper dataset (b=2,W=1 … b=8,W=2); at BLOCK_M=1
+    the kernel degenerates to the original memory-bound single-query
+    scan at ~1.5 int-ops per byte.
 """
 
 from __future__ import annotations
@@ -29,104 +39,127 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK_N = 2048
+DEFAULT_BLOCK_M = 8
 
 # Distance sentinel for pruned lanes.  Matches core.bst.BIG (kernels must
 # not import core); verified equal in tests/test_kernels.py.
 BIG = 1 << 20
 
 
-def _hamming_kernel(db_ref, q_ref, out_ref, *, b: int, W: int):
-    """One (query j, db block i) cell: distances for BLOCK_N sketches."""
-    db = db_ref[...]          # (b, W, BLOCK_N) uint32
-    q = q_ref[...]            # (b, W, 1) uint32
-    diff = db ^ q             # broadcast over lanes
+def _tile_distances(db, q, *, b: int, W: int):
+    """(b, W, BLOCK_N) uint32 x (b, W, BLOCK_M) uint32 ->
+    (BLOCK_M, BLOCK_N) int32 Hamming distances; b and W are python
+    constants so both reductions fully unroll."""
+    diff = db[:, :, None, :] ^ q[:, :, :, None]   # (b, W, BLOCK_M, BLOCK_N)
     acc = diff[0]
-    for i in range(1, b):     # b is a python constant -> fully unrolled
+    for i in range(1, b):
         acc = acc | diff[i]
-    pops = jax.lax.population_count(acc).astype(jnp.int32)  # (W, BLOCK_N)
+    pops = jax.lax.population_count(acc).astype(jnp.int32)  # (W, M, N)
     dist = pops[0]
     for w in range(1, W):
         dist = dist + pops[w]
-    out_ref[...] = dist[None, :]  # (1, BLOCK_N)
+    return dist
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _hamming_kernel(db_ref, q_ref, out_ref, *, b: int, W: int):
+    """One (query tile j, db block i) cell: (BLOCK_M, BLOCK_N) distances."""
+    out_ref[...] = _tile_distances(db_ref[...], q_ref[...], b=b, W=W)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
 def hamming_distances_pallas(db_vert: jnp.ndarray, q_vert: jnp.ndarray,
-                             *, block_n: int = DEFAULT_BLOCK_N,
+                             *, block_m: int = DEFAULT_BLOCK_M,
+                             block_n: int = DEFAULT_BLOCK_N,
                              interpret: bool = False) -> jnp.ndarray:
     """(b, W, n) x (b, W, m) -> (m, n) int32 distances via pallas_call.
 
-    Grid is (m, n/block_n): queries on the outer axis so each query's
-    planes stay VMEM-resident while database blocks stream past.
-    ``n`` must be a multiple of ``block_n`` (ops.py pads).
+    Grid is (m/block_m, n/block_n): query tiles on the outer axis so each
+    tile's planes stay VMEM-resident while database blocks stream past —
+    the database is read ⌈m/block_m⌉ times total.  ``n`` must be a
+    multiple of ``block_n`` and ``m`` of ``block_m`` (ops.py pads both).
     """
     b, W, n = db_vert.shape
     m = q_vert.shape[-1]
     assert n % block_n == 0, (n, block_n)
-    grid = (m, n // block_n)
+    assert m % block_m == 0, (m, block_m)
+    grid = (m // block_m, n // block_n)
     kernel = functools.partial(_hamming_kernel, b=b, W=W)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((b, W, block_n), lambda j, i: (0, 0, i)),
-            pl.BlockSpec((b, W, 1), lambda j, i: (0, 0, j)),
+            pl.BlockSpec((b, W, block_m), lambda j, i: (0, 0, j)),
         ],
-        out_specs=pl.BlockSpec((1, block_n), lambda j, i: (j, i)),
+        out_specs=pl.BlockSpec((block_m, block_n), lambda j, i: (j, i)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         interpret=interpret,
     )(db_vert, q_vert)
 
 
-def _verify_kernel(db_ref, q_ref, base_ref, mask_ref, dist_ref,
-                   *, b: int, W: int, tau: int):
-    """Fused sparse-layer verify: suffix distance + accumulated prefix
-    distance, thresholded — emits an int32 0/1 survival mask plus the
-    exact int32 total distance (clamped to BIG on pruned lanes)."""
-    db = db_ref[...]
-    q = q_ref[...]
-    diff = db ^ q
-    acc = diff[0]
-    for i in range(1, b):
-        acc = acc | diff[i]
-    pops = jax.lax.population_count(acc).astype(jnp.int32)
-    dist = pops[0]
-    for w in range(1, W):
-        dist = dist + pops[w]
-    total = dist + base_ref[0, :]
-    mask_ref[...] = (total <= tau).astype(jnp.int32)[None, :]
-    dist_ref[...] = jnp.minimum(total, BIG)[None, :]
+def _verify_batch_kernel(db_ref, q_ref, base_ref, mask_ref, dist_ref,
+                         *, b: int, W: int, tau: int):
+    """Fused query-tiled sparse-layer verify: suffix distance + per-query
+    accumulated prefix distance, thresholded — emits (BLOCK_M, BLOCK_N)
+    int32 0/1 survival masks plus the exact int32 total distances
+    (clamped to BIG on pruned lanes)."""
+    dist = _tile_distances(db_ref[...], q_ref[...], b=b, W=W)
+    total = dist + base_ref[...]                  # (BLOCK_M, BLOCK_N)
+    mask_ref[...] = (total <= tau).astype(jnp.int32)
+    dist_ref[...] = jnp.minimum(total, BIG)
 
 
-@functools.partial(jax.jit, static_argnames=("tau", "block_n", "interpret"))
-def sparse_verify_pallas(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
-                         base_dist: jnp.ndarray, *, tau: int,
-                         block_n: int = DEFAULT_BLOCK_N,
-                         interpret: bool = False):
-    """(b, W, n) suffix paths + (b, W) query suffix + (n,) prefix distances
-    -> ((n,) int32 survival mask, (n,) int32 total distance).  Distances
-    are exact (prefix + suffix) for every non-pruned lane and clamped to
-    BIG where the prefix was pruned (base >= BIG)."""
+@functools.partial(jax.jit,
+                   static_argnames=("tau", "block_m", "block_n", "interpret"))
+def sparse_verify_batch_pallas(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                               base_dist: jnp.ndarray, *, tau: int,
+                               block_m: int = DEFAULT_BLOCK_M,
+                               block_n: int = DEFAULT_BLOCK_N,
+                               interpret: bool = False):
+    """(b, W, n) suffix paths + (b, W, m) query suffixes + (m, n) prefix
+    distances -> ((m, n) int32 survival masks, (m, n) int32 totals).
+
+    Grid (m/block_m, n/block_n): each cell loads one (b, W, block_n)
+    database block once and XOR/popcounts it against a (b, W, block_m)
+    query tile, so the collapsed-path array is streamed from HBM only
+    ⌈m/block_m⌉ times for the whole batch.  Distances are exact
+    (prefix + suffix) for every non-pruned lane and clamped to BIG where
+    the prefix was pruned (base >= BIG)."""
     b, W, n = paths_vert.shape
+    m = q_vert.shape[-1]
     assert n % block_n == 0, (n, block_n)
-    grid = (n // block_n,)
-    kernel = functools.partial(_verify_kernel, b=b, W=W, tau=tau)
+    assert m % block_m == 0, (m, block_m)
+    assert base_dist.shape == (m, n), (base_dist.shape, m, n)
+    grid = (m // block_m, n // block_n)
+    kernel = functools.partial(_verify_batch_kernel, b=b, W=W, tau=tau)
     mask, dist = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((b, W, block_n), lambda i: (0, 0, i)),
-            pl.BlockSpec((b, W, 1), lambda i: (0, 0, 0)),
-            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((b, W, block_n), lambda j, i: (0, 0, i)),
+            pl.BlockSpec((b, W, block_m), lambda j, i: (0, 0, j)),
+            pl.BlockSpec((block_m, block_n), lambda j, i: (j, i)),
         ],
         out_specs=[
-            pl.BlockSpec((1, block_n), lambda i: (0, i)),
-            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((block_m, block_n), lambda j, i: (j, i)),
+            pl.BlockSpec((block_m, block_n), lambda j, i: (j, i)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((1, n), jnp.int32),
-            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
         ],
         interpret=interpret,
-    )(paths_vert, q_vert[..., None], base_dist[None, :].astype(jnp.int32))
+    )(paths_vert, q_vert, base_dist.astype(jnp.int32))
+    return mask, dist
+
+
+def sparse_verify_pallas(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                         base_dist: jnp.ndarray, *, tau: int,
+                         block_n: int = DEFAULT_BLOCK_N,
+                         interpret: bool = False):
+    """Single-query verify: the m=1, block_m=1 degenerate tile of the
+    batched kernel.  (b, W, n) + (b, W) + (n,) -> ((n,) mask, (n,) dist)."""
+    mask, dist = sparse_verify_batch_pallas(
+        paths_vert, q_vert[..., None], base_dist[None, :].astype(jnp.int32),
+        tau=tau, block_m=1, block_n=block_n, interpret=interpret)
     return mask[0], dist[0]

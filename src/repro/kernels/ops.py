@@ -1,9 +1,11 @@
 """Public jit'd wrappers around the Pallas kernels.
 
 Responsibilities: layout conversion ((n, b, W) <-> (b, W, n)), padding to
-block multiples, backend selection (compiled Pallas on TPU, interpret mode
-on CPU so correctness tests execute the *same kernel body*), and fallback
-to the pure-jnp oracle for shapes where a kernel launch is not worth it.
+block multiples (both the lane/database axis and the query axis of the
+query-tiled kernels), backend selection (compiled Pallas on TPU,
+interpret mode on CPU so correctness tests execute the *same kernel
+body*), and fallback to the pure-jnp oracle for shapes where a kernel
+launch is not worth it.
 """
 
 from __future__ import annotations
@@ -14,8 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .hamming_kernel import (BIG, DEFAULT_BLOCK_N, hamming_distances_pallas,
-                             sparse_verify_pallas)
+from .hamming_kernel import (BIG, DEFAULT_BLOCK_M, DEFAULT_BLOCK_N,
+                             hamming_distances_pallas,
+                             sparse_verify_batch_pallas, sparse_verify_pallas)
 
 
 def _on_tpu() -> bool:
@@ -36,28 +39,34 @@ def _pad_lanes(x: jnp.ndarray, block_n: int) -> jnp.ndarray:
 
 
 def hamming_distances(db_vert: jnp.ndarray, q_vert: jnp.ndarray,
-                      *, block_n: int = DEFAULT_BLOCK_N,
+                      *, block_m: int = DEFAULT_BLOCK_M,
+                      block_n: int = DEFAULT_BLOCK_N,
                       use_kernel: bool | None = None) -> jnp.ndarray:
-    """(b, W, n) x (b, W, m) -> (m, n) int32.  Pads n to a block multiple,
-    launches the kernel, and slices the pad back off (pad sketches are
-    all-zero words -> garbage distances, dropped here)."""
+    """(b, W, n) x (b, W, m) -> (m, n) int32.  Pads n and m to block
+    multiples, launches the query-tiled kernel, and slices the pads back
+    off (pad sketches/queries are all-zero words -> garbage rows/columns,
+    dropped here)."""
     n = db_vert.shape[-1]
+    m = q_vert.shape[-1]
     if use_kernel is None:
         use_kernel = n >= block_n  # tiny scans: oracle is cheaper than launch
     if not use_kernel:
         return ref.hamming_distances_ref(db_vert, q_vert)
+    block_m = min(block_m, m)  # never compute more pad-query rows than m
     db_p = _pad_lanes(db_vert, block_n)
-    out = hamming_distances_pallas(db_p, q_vert, block_n=block_n,
-                                   interpret=not _on_tpu())
-    return out[:, :n]
+    q_p = _pad_lanes(q_vert, block_m)
+    out = hamming_distances_pallas(db_p, q_p, block_m=block_m,
+                                   block_n=block_n, interpret=not _on_tpu())
+    return out[:m, :n]
 
 
 def sparse_verify(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
                   base_dist: jnp.ndarray, *, tau: int,
                   block_n: int = DEFAULT_BLOCK_N,
                   use_kernel: bool | None = None):
-    """Fused verify: ((n,) int32 mask of leaves with prefix+suffix dist
-    <= tau, (n,) int32 exact total distances — BIG-clamped when pruned)."""
+    """Fused single-query verify: ((n,) int32 mask of leaves with
+    prefix+suffix dist <= tau, (n,) int32 exact total distances —
+    BIG-clamped when pruned)."""
     n = paths_vert.shape[-1]
     if use_kernel is None:
         use_kernel = n >= block_n
@@ -71,3 +80,42 @@ def sparse_verify(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
     mask, dist = sparse_verify_pallas(paths_p, q_vert, base_p, tau=tau,
                                       block_n=block_n, interpret=not _on_tpu())
     return mask[:n], dist[:n]
+
+
+def sparse_verify_batch(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                        base_dist: jnp.ndarray, *, tau: int,
+                        block_m: int = DEFAULT_BLOCK_M,
+                        block_n: int = DEFAULT_BLOCK_N,
+                        use_kernel: bool | None = None):
+    """Fused query-tiled verify over a whole batch.
+
+    paths_vert: (b, W, n) collapsed suffix paths (shared database);
+    q_vert:     (b, W, m) query suffixes;
+    base_dist:  (m, n) per-query prefix distances (BIG = pruned subtrie);
+    returns ((m, n) int32 masks, (m, n) int32 exact totals, BIG-clamped).
+
+    Pads n to a ``block_n`` multiple with BIG base distances (pad lanes
+    can never survive) and m to a ``block_m`` multiple with all-zero
+    queries (pad rows sliced off), then launches the (m/block_m,
+    n/block_n)-grid kernel: the database is streamed ⌈m/block_m⌉ times
+    instead of m."""
+    n = paths_vert.shape[-1]
+    m = q_vert.shape[-1]
+    if use_kernel is None:
+        use_kernel = n >= block_n
+    if not use_kernel:
+        mask, dist = ref.sparse_verify_batch_ref(paths_vert, q_vert,
+                                                 base_dist, tau)
+        return mask.astype(jnp.int32), dist
+    block_m = min(block_m, m)  # never compute more pad-query rows than m
+    paths_p = _pad_lanes(paths_vert, block_n)
+    q_p = _pad_lanes(q_vert, block_m)
+    pad_n = paths_p.shape[-1] - n
+    pad_m = q_p.shape[-1] - m
+    base_p = jnp.pad(base_dist.astype(jnp.int32),
+                     ((0, pad_m), (0, pad_n)),
+                     constant_values=jnp.int32(BIG))
+    mask, dist = sparse_verify_batch_pallas(paths_p, q_p, base_p, tau=tau,
+                                            block_m=block_m, block_n=block_n,
+                                            interpret=not _on_tpu())
+    return mask[:m, :n], dist[:m, :n]

@@ -40,17 +40,31 @@ def hamming_threshold_count_ref(db_vert: jnp.ndarray, q_vert: jnp.ndarray,
     return (d <= tau).sum(axis=1).astype(jnp.int32)
 
 
-def sparse_verify_ref(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
-                      base_dist: jnp.ndarray, tau: int):
-    """Sparse-layer verification oracle.
+def sparse_verify_batch_ref(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                            base_dist: jnp.ndarray, tau: int):
+    """Query-batched sparse-layer verification oracle.
 
     paths_vert: (b, W, n) uint32 — collapsed root-to-leaf suffix paths;
-    q_vert:     (b, W) uint32    — query suffix, single query;
-    base_dist:  (n,) int32       — Hamming distance accumulated down to the
-                                   sparse-layer roots (per leaf);
-    returns ((n,) bool, (n,) int32) — survival mask (base + suffix <= tau)
-    and the total distance, clamped to BIG on pruned lanes.
+    q_vert:     (b, W, m) uint32 — m query suffixes;
+    base_dist:  (m, n) int32     — per-query Hamming distance accumulated
+                                   down to the sparse-layer roots (per leaf);
+    returns ((m, n) bool, (m, n) int32) — survival masks
+    (base + suffix <= tau) and total distances, clamped to BIG on pruned
+    lanes.
     """
-    d = hamming_distances_ref(paths_vert, q_vert[..., None])[0]
+    d = hamming_distances_ref(paths_vert, q_vert)        # (m, n)
     total = base_dist.astype(jnp.int32) + d
     return total <= tau, jnp.minimum(total, BIG)
+
+
+def sparse_verify_ref(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                      base_dist: jnp.ndarray, tau: int):
+    """Single-query verification oracle: the m=1 row of the batch oracle.
+
+    paths_vert: (b, W, n);  q_vert: (b, W);  base_dist: (n,) int32;
+    returns ((n,) bool, (n,) int32).
+    """
+    mask, dist = sparse_verify_batch_ref(
+        paths_vert, q_vert[..., None],
+        base_dist.astype(jnp.int32)[None, :], tau)
+    return mask[0], dist[0]

@@ -25,6 +25,7 @@ from ..configs.registry import ARCH_IDS, get_config
 from ..core.bst import build_bst
 from ..core.search import make_batch_searcher, topk_batch
 from ..core.sketch import zbit_cws
+from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
 from ..distributed.sharding import use_mesh
 from ..launch.mesh import make_host_mesh
 from ..models import model as M
@@ -43,6 +44,9 @@ def main(argv=None):
     ap.add_argument("--tau", type=int, default=3)
     ap.add_argument("--topk", type=int, default=3,
                     help="k nearest documents returned per request")
+    ap.add_argument("--block-m", type=int, default=None,
+                    help="query-tile size of the batched verify kernel "
+                         "(default: kernel DEFAULT_BLOCK_M)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -95,12 +99,16 @@ def main(argv=None):
             q = jnp.abs(h[:, :64]) if h.shape[-1] >= 64 else jnp.pad(
                 jnp.abs(h), ((0, 0), (0, 64 - h.shape[-1])))
             q_sk = zbit_cws(key, q, L=L, b=b)
-            res = make_batch_searcher(index, args.tau)(q_sk)
+            # natively batched searcher: the whole request batch shares
+            # one 2D-frontier traversal + one query-tiled verify scan
+            block_m = args.block_m or DEFAULT_BLOCK_M
+            res = make_batch_searcher(index, args.tau, block_m=block_m)(q_sk)
             hits = np.asarray(res.mask).sum(axis=1)
-            print(f"retrieval: tau={args.tau} hits per request: {hits}")
+            print(f"retrieval: tau={args.tau} hits per request: {hits} "
+                  f"(batched verify tile block_m={block_m})")
             # top-k nearest documents (τ-escalation ladder + exact
             # distances out of the same compiled searcher cache)
-            nn = topk_batch(index, q_sk, args.topk)
+            nn = topk_batch(index, q_sk, args.topk, block_m=block_m)
             for r in range(args.batch):
                 print(f"  request {r}: top-{args.topk} docs "
                       f"{np.asarray(nn.ids[r])} at distances "

@@ -61,12 +61,13 @@ def test_sparse_verify_matches_oracle(b, L, tau):
 
 
 def test_kernel_direct_no_padding():
-    """Exercise the raw pallas_call (n an exact multiple of block_n)."""
+    """Exercise the raw pallas_call (n, m exact multiples of the tiles)."""
     rng = np.random.default_rng(0)
     b, L, n, m = 4, 32, 1024, 4
     _, db_vert = make_db(rng, n, L, b)
     _, q_vert = make_db(rng, m, L, b)
-    got = np.asarray(hamming_distances_pallas(db_vert, q_vert, block_n=256, interpret=True))
+    got = np.asarray(hamming_distances_pallas(db_vert, q_vert, block_m=2,
+                                              block_n=256, interpret=True))
     want = np.asarray(ref.hamming_distances_ref(db_vert, q_vert))
     np.testing.assert_array_equal(got, want)
 
