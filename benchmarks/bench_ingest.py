@@ -1,0 +1,93 @@
+"""Streaming-ingest benchmark for the dynamic segmented index
+(DESIGN.md §4): inserts/sec while the LSM-style stack seals and merges
+segments, the cost of a forced merge, and query latency mid-stream vs
+post-merge.
+
+Rows:
+  * ``ingest/<ds>/insert``        — amortized µs per inserted sketch over
+                                    the whole stream (incl. flush/merge),
+                                    derived inserts/sec
+  * ``ingest/<ds>/delete``        — µs per tombstoned id
+  * ``ingest/<ds>/merge``         — one forced two-segment merge
+  * ``ingest/<ds>/query_mid``     — batched topk with a live delta buffer
+  * ``ingest/<ds>/query_postmerge`` — batched topk after merge+compact
+
+Correctness ride-along (every mode, incl. --smoke): the post-merge top-k
+must be bit-identical to a fresh static build over the survivors."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import SegmentedIndex, build_bst, topk_batch
+
+from .common import Csv, cap_n, make_dataset, timeit
+
+
+def run(csv: Csv, datasets=("review",), k: int = 10) -> None:
+    for name in datasets:
+        cfg, db, queries = make_dataset(name, n=cap_n(1 << 15))
+        n = len(db)
+        chunk = max(64, n // 64)
+        idx = SegmentedIndex(cfg.L, cfg.b, delta_cap=max(256, n // 8))
+
+        t0 = time.perf_counter()
+        ids = np.zeros((0,), np.int64)
+        for lo in range(0, n, chunk):
+            ids = np.concatenate([ids, idx.insert(db[lo:lo + chunk])])
+        dt = time.perf_counter() - t0
+        csv.add(f"ingest/{name}/insert", dt * 1e6 / n,
+                f"ips={n / dt:.0f};segments={len(idx.segments)}")
+
+        rng = np.random.default_rng(2)
+        victims = ids[rng.choice(n, n // 10, replace=False)]
+        t0 = time.perf_counter()
+        removed = idx.delete(victims)
+        dt = time.perf_counter() - t0
+        csv.add(f"ingest/{name}/delete", dt * 1e6 / max(removed, 1),
+                f"removed={removed}")
+
+        # mid-stream query latency: delta buffer + segments answer together
+        qs = queries[: min(8, len(queries))]
+        nn_mid = idx.topk_batch(qs, k)   # warm + capture tau once
+        t_mid = timeit(lambda: idx.topk_batch(qs, k))
+        csv.add(f"ingest/{name}/query_mid", t_mid * 1e6 / len(qs),
+                f"tau={nn_mid.tau}")
+
+        # a controlled two-segment merge (auto-merge may have collapsed
+        # the streaming stack already, so measure on a fresh two-half
+        # stack: one n/2 + n/2 -> n rebuild via build_trie_levels)
+        idx2 = SegmentedIndex(cfg.L, cfg.b, delta_cap=n + 1,
+                              auto_merge=False)
+        idx2.insert(db[: n // 2])
+        idx2.flush()
+        idx2.insert(db[n // 2:])
+        idx2.flush()
+        t0 = time.perf_counter()
+        assert idx2.merge()
+        dt = time.perf_counter() - t0
+        csv.add(f"ingest/{name}/merge", dt * 1e6,
+                f"rows={n};rows_per_s={n / dt:.0f}")
+
+        idx.flush()
+        idx.maybe_merge()
+        idx.compact(min_dead_frac=0.0)
+
+        t_post = timeit(lambda: idx.topk_batch(qs, k))
+        csv.add(f"ingest/{name}/query_postmerge", t_post * 1e6 / len(qs),
+                f"segments={len(idx.segments)};"
+                f"space_KiB={idx.space_bits() / 8 / 1024:.1f}")
+
+        # correctness ride-along: post-merge == fresh static build
+        surv = np.ones(n, bool)
+        surv[victims] = False
+        surv_ids = np.flatnonzero(surv)
+        static = topk_batch(build_bst(db[surv], cfg.b), qs, k)
+        mapped = np.where(np.asarray(static.ids) >= 0,
+                          surv_ids[np.maximum(np.asarray(static.ids), 0)], -1)
+        dyn = idx.topk_batch(qs, k)
+        np.testing.assert_array_equal(np.asarray(dyn.dists),
+                                      np.asarray(static.dists))
+        np.testing.assert_array_equal(np.asarray(dyn.ids), mapped)

@@ -10,9 +10,9 @@ import argparse
 import sys
 import traceback
 
-from . import (bench_batch, bench_fig7, bench_fig8, bench_table2,
-               bench_table3, bench_table4, bench_topk, bench_vertical,
-               common, roofline)
+from . import (bench_batch, bench_fig7, bench_fig8, bench_ingest,
+               bench_table2, bench_table3, bench_table4, bench_topk,
+               bench_vertical, common, roofline)
 from .common import Csv
 
 
@@ -49,6 +49,7 @@ def main(argv=None) -> int:
             c, datasets=("review",),
             ms=(1, 8) if args.smoke else (1, 8, 64) if args.quick
             else (1, 8, 64, 256)),
+        "ingest": lambda c: bench_ingest.run(c, datasets=("review",)),
         "roofline": lambda c: roofline.run(c),
     }
     if args.only:

@@ -9,6 +9,8 @@ from .multi_index import (MultiIndex, build_multi_index, choose_plan,
 from .search import (SearchResult, TopKResult, clear_searcher_cache,
                      get_searcher, make_batch_searcher, make_searcher, search,
                      searcher_cache_info, topk, topk_batch)
+from .segments import (Segment, SegmentedIndex, SegmentedSearchResult,
+                       ShardedSegmentedIndex, tombstone_bits)
 
 __all__ = [
     "BitVector", "SketchIndex", "build_bst", "build_louds", "build_fst_style",
@@ -18,4 +20,6 @@ __all__ = [
     "MultiIndex", "build_multi_index", "mi_search", "mi_search_batch",
     "make_mi_searcher", "clear_mi_searcher_cache",
     "choose_plan", "sigs", "cost_single", "cost_multi", "frontier_capacities",
+    "Segment", "SegmentedIndex", "SegmentedSearchResult",
+    "ShardedSegmentedIndex", "tombstone_bits",
 ]

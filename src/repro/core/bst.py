@@ -305,7 +305,10 @@ def _build_sparse_tail(trie: TrieLevels, ls: int) -> SparseTail:
 def build_bst(sketches: np.ndarray, b: int, lam: float = 0.5,
               trie: Optional[TrieLevels] = None) -> SketchIndex:
     """The paper's bST: dense prefix + adaptive TABLE/LIST middle + collapsed
-    sparse tail."""
+    sparse tail.
+
+    sketches: (n, L) uint8 over Σ=[0, 2^b); returns a queryable
+    ``SketchIndex`` pytree (ids are row positions in ``sketches``)."""
     trie = trie or build_trie_levels(sketches, b)
     lm, ls = pick_layers(trie, lam)
     levels: List = []
@@ -330,7 +333,8 @@ def build_bst(sketches: np.ndarray, b: int, lam: float = 0.5,
 def build_louds(sketches: np.ndarray, b: int,
                 trie: Optional[TrieLevels] = None) -> SketchIndex:
     """LOUDS-trie baseline: every level as (labels, unary-degree bitvector),
-    no dense shortcut, no path collapse (Table III comparison)."""
+    no dense shortcut, no path collapse (Table III comparison).
+    sketches: (n, L) uint8 -> ``SketchIndex``."""
     trie = trie or build_trie_levels(sketches, b)
     levels = tuple(_build_louds_level(trie, lev) for lev in range(1, trie.L + 1))
     return SketchIndex(levels=levels, tail=None,
@@ -343,7 +347,8 @@ def build_fst_style(sketches: np.ndarray, b: int,
                     trie: Optional[TrieLevels] = None) -> SketchIndex:
     """FST-style two-layer baseline: bitmap-encoded (LOUDS-DENSE-like) top
     levels while the density rule favours TABLE, list-encoded
-    (LOUDS-SPARSE-like) below; no path collapse (Table III comparison)."""
+    (LOUDS-SPARSE-like) below; no path collapse (Table III comparison).
+    sketches: (n, L) uint8 -> ``SketchIndex``."""
     trie = trie or build_trie_levels(sketches, b)
     levels: List = []
     kinds: List[str] = []

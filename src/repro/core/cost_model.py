@@ -29,6 +29,19 @@ def sigs(b: int, L: int, tau: int) -> float:
     return total
 
 
+def tau_for_k(b: int, L: int, n: float, k: int) -> int:
+    """Smallest τ whose expected candidate count over a uniform DB of n
+    sketches reaches k: |I(τ)| ≈ n·sigs(b, L, τ)/(2^b)^L (Appendix A).
+    Seeds the τ-escalation ladders of ``search.topk*`` and the dynamic
+    segmented index — one estimator, every ladder."""
+    denom = float(1 << b) ** min(L, 64)
+    n = max(float(n), 1.0)
+    for tau in range(L + 1):
+        if sigs(b, L, tau) * n / denom >= k:
+            return tau
+    return L
+
+
 def cost_single(b: int, L: int, tau: int, n: float) -> float:
     """cost_S = sigs(b,L,τ)·L + |I|  (Eq. 2), with |I| estimated under the
     uniform-distribution assumption of Appendix A."""

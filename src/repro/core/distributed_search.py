@@ -128,6 +128,12 @@ def _pad_to(arr: np.ndarray, n: int, fill=0) -> np.ndarray:
 
 def build_sharded_bst(sketches: np.ndarray, b: int, n_shards: int,
                       lam: float = 0.5) -> ShardedBST:
+    """One SPMD-servable index over ``n_shards`` padded per-shard bSTs.
+
+    sketches: (n, L) uint8 over Σ=[0, 2^b); global id i lands on shard
+    ``i % n_shards``.  All shards share one static layer plan (computed
+    from aggregate stats) and common padded array shapes; true sizes
+    travel as int32 data (see module docstring)."""
     n, L = sketches.shape
     shard_of = (np.arange(n) % n_shards).astype(np.int64)
     tries: List[TrieLevels] = []
@@ -532,6 +538,44 @@ def gather_ids(index: ShardedBST, masks: np.ndarray) -> List[np.ndarray]:
     return out
 
 
+def topk_from_dists(dists: np.ndarray, k: int,
+                    ids: Optional[np.ndarray] = None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Select per-query top-k from merged distance planes.
+
+    dists: (m, n) int32 — one distance per (query, column), BIG on
+    non-results; ids: optional (n,) int global labels per column
+    (default: the column index itself).  Returns ((m, k) int32 ids,
+    (m, k) int32 dists), each row sorted ascending by (distance, label);
+    slots beyond a query's real survivors are (-1, BIG) pads.  This is
+    the shared shard-merge selection: ``gather_topk`` feeds it the
+    all-gathered shard planes (columns == global ids) and the dynamic
+    segmented index (``core.segments``) feeds it column-compressed
+    fan-out planes labeled by stable global ids.
+    """
+    m, n = dists.shape
+    kk = min(k, n)
+    labels = np.arange(n, dtype=np.int64) if ids is None \
+        else np.asarray(ids, dtype=np.int64)
+    out_ids = np.full((m, k), -1, np.int32)
+    out_d = np.full((m, k), int(BIG), np.int32)
+    for qi in range(m):
+        d = np.asarray(dists[qi])
+        # partial selection, then a full (distance, label) sort over
+        # every candidate at or below the k-th distance — a bare
+        # argpartition would pick arbitrarily among ties at the boundary
+        if kk < n:
+            thresh = d[np.argpartition(d, kk - 1)[:kk]].max()
+            cand = np.flatnonzero(d <= thresh)
+        else:
+            cand = np.arange(n)
+        order = cand[np.lexsort((labels[cand], d[cand]))][:kk]
+        real = d[order] < int(BIG)
+        out_ids[qi, :kk] = np.where(real, labels[order], -1)
+        out_d[qi, :kk] = d[order]
+    return out_ids, out_d
+
+
 def gather_topk(index: ShardedBST, dists: np.ndarray,
                 k: int) -> Tuple[np.ndarray, np.ndarray]:
     """Merge per-shard distance planes into global per-query top-k.
@@ -539,28 +583,11 @@ def gather_topk(index: ShardedBST, dists: np.ndarray,
     dists: (m, S, n_max) int32 from the sharded searcher (BIG off-mask).
     Returns ((m, k) ids, (m, k) dists), each row sorted ascending by
     (distance, id): the sharded analogue of ``core.topk``'s final
-    selection, run host-side after the result all-gather.  Slots beyond a
-    query's within-τ survivors are (-1, BIG) pads — unlike ``core.topk``
-    there is no τ-escalation here, so fewer than k real neighbors can
-    come back; re-search at a larger τ to fill them.
+    selection, run host-side after the result all-gather
+    (``topk_from_dists``).  Slots beyond a query's within-τ survivors are
+    (-1, BIG) pads — unlike ``core.topk`` there is no τ-escalation here,
+    so fewer than k real neighbors can come back; re-search at a larger τ
+    to fill them.
     """
-    m = dists.shape[0]
-    n = index.shard_of.shape[0]
-    kk = min(k, n)
-    ids = np.full((m, k), -1, np.int32)
-    out_d = np.full((m, k), int(BIG), np.int32)
-    for qi in range(m):
-        d = np.asarray(dists[qi])[index.shard_of, index.pos_of]  # (n,)
-        # partial selection, then a full (distance, id) sort over every
-        # candidate at or below the k-th distance — a bare argpartition
-        # would pick arbitrarily among ties at the boundary
-        if kk < n:
-            thresh = d[np.argpartition(d, kk - 1)[:kk]].max()
-            cand = np.flatnonzero(d <= thresh)
-        else:
-            cand = np.arange(n)
-        order = cand[np.lexsort((cand, d[cand]))][:kk]
-        real = d[order] < int(BIG)
-        ids[qi, :kk] = np.where(real, order, -1)
-        out_d[qi, :kk] = d[order]
-    return ids, out_d
+    merged = np.asarray(dists)[:, index.shard_of, index.pos_of]  # (m, n)
+    return topk_from_dists(merged, k)

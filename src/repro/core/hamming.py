@@ -100,7 +100,8 @@ def hamming_vertical_many(db_planes: jnp.ndarray, q_planes: jnp.ndarray) -> jnp.
 
 
 def hamming_naive(db: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
-    """Character-by-character O(L) reference (paper's 'naive approach')."""
+    """Character-by-character O(L) reference (paper's 'naive approach').
+    db: (n, L) uint8; q: (L,) uint8 -> (n,) int32."""
     return (db != q[None, :]).sum(axis=-1).astype(jnp.int32)
 
 

@@ -63,6 +63,11 @@ class MultiIndex:
 
 def build_multi_index(sketches: np.ndarray, b: int, m: int,
                       lam: float = 0.5) -> MultiIndex:
+    """MI-bST over ``m`` disjoint sketch blocks (paper §III-B).
+
+    sketches: (n, L) uint8 over Σ=[0, 2^b); each of the m blocks gets its
+    own bST over the block substrings, plus one (b, W, n) vertical copy
+    of the full sketches for kernel verification."""
     sketches = np.asarray(sketches, dtype=np.uint8)
     n, L = sketches.shape
     lens = cost_model._block_lengths(L, m)
@@ -122,10 +127,16 @@ def _mi_search_trace(mi: MultiIndex, q: jnp.ndarray, *, tau: int,
 
 def _mi_search_trace_batch(mi: MultiIndex, qs: jnp.ndarray, *, tau: int,
                            caps_per_block, cand_cap: int,
-                           block_m: int = DEFAULT_BLOCK_M) -> MultiSearchResult:
+                           block_m: int = DEFAULT_BLOCK_M,
+                           id_live: jnp.ndarray | None = None) -> MultiSearchResult:
     """Natively batched MI search: every block runs the 2D-frontier batch
     trace, candidate sets compact per query, and verification XOR/
-    popcounts each query against its own gathered candidates."""
+    popcounts each query against its own gathered candidates.
+
+    ``id_live``: optional (n,) bool tombstone mask (dynamic segmented
+    index, DESIGN.md §4) — dead ids are dropped from the candidate union
+    *before* compaction, so they consume neither candidate-buffer
+    capacity nor verification bandwidth."""
     qs = qs.astype(jnp.int32)
     m = qs.shape[0]
     taus = cost_model.block_thresholds(tau, len(mi.blocks))
@@ -137,6 +148,8 @@ def _mi_search_trace_batch(mi: MultiIndex, qs: jnp.ndarray, *, tau: int,
                                   block_m=block_m)
         cand_mask = cand_mask | res.mask
         overflow = overflow + res.overflow
+    if id_live is not None:
+        cand_mask = cand_mask & id_live[None, :]
 
     n_cand = cand_mask.sum(axis=1, dtype=jnp.int32)
     all_ids = jnp.broadcast_to(jnp.arange(mi.n, dtype=jnp.int32)[None, :],
@@ -177,20 +190,30 @@ def clear_mi_searcher_cache() -> None:
 
 def make_mi_searcher(mi: MultiIndex, tau: int, cap_max: int = 1 << 17,
                      cand_cap: int | None = None, *, batch: bool = False,
-                     block_m: int = DEFAULT_BLOCK_M):
+                     block_m: int = DEFAULT_BLOCK_M, with_live: bool = False):
     """Cached compiled MI searcher.  ``batch=False``: f(q (L,));
     ``batch=True``: f(qs (m, L)) through the natively batched per-block
-    traces (leading query axis on every result field)."""
+    traces (leading query axis on every result field).  ``with_live=True``
+    (batch only) compiles the tombstone-aware ``f(qs, id_live (n,) bool)``
+    variant — the liveness bitmap is traced, so deletes never re-jit."""
     taus = cost_model.block_thresholds(tau, len(mi.blocks))
     caps_per_block = tuple(
         cost_model.frontier_capacities(blk.t, blk.b, tj, cap_max)
         for blk, tj in zip(mi.blocks, taus))
     cc = cand_cap if cand_cap is not None else candidate_capacity(mi, tau)
 
-    key = (id(mi), tau, caps_per_block, cc, block_m if batch else None)
+    key = (id(mi), tau, caps_per_block, cc, block_m if batch else None,
+           with_live)
 
     def build():
-        if batch:
+        if batch and with_live:
+            @jax.jit
+            def run(qs, id_live):
+                return _mi_search_trace_batch(mi, qs, tau=tau,
+                                              caps_per_block=caps_per_block,
+                                              cand_cap=cc, block_m=block_m,
+                                              id_live=id_live)
+        elif batch:
             @jax.jit
             def run(qs):
                 return _mi_search_trace_batch(mi, qs, tau=tau,
@@ -211,7 +234,8 @@ def make_mi_searcher(mi: MultiIndex, tau: int, cap_max: int = 1 << 17,
 
 def mi_search(mi: MultiIndex, q: np.ndarray, tau: int) -> MultiSearchResult:
     """Host wrapper with the doubled overflow ladder: the m=1 row of
-    ``mi_search_batch`` (same pattern as ``topk``/``topk_batch``)."""
+    ``mi_search_batch`` (same pattern as ``topk``/``topk_batch``).
+    ``q``: (L,) uint8 -> ``MultiSearchResult`` over the index's n ids."""
     res = mi_search_batch(mi, jnp.asarray(q)[None], tau)
     return MultiSearchResult(mask=res.mask[0], dist=res.dist[0],
                              candidates=res.candidates[0],
@@ -219,14 +243,19 @@ def mi_search(mi: MultiIndex, q: np.ndarray, tau: int) -> MultiSearchResult:
 
 
 def mi_search_batch(mi: MultiIndex, qs: np.ndarray, tau: int,
-                    block_m: int = DEFAULT_BLOCK_M) -> MultiSearchResult:
+                    block_m: int = DEFAULT_BLOCK_M,
+                    id_live: np.ndarray | None = None) -> MultiSearchResult:
     """Batched ``mi_search``: (m, L) queries with one shared overflow
-    ladder (escalates until every query is exact)."""
+    ladder (escalates until every query is exact).  ``id_live``: optional
+    (n,) bool tombstone mask — dead ids are excluded from candidates and
+    results (segmented-index fan-out, DESIGN.md §4)."""
     qs = jnp.asarray(qs)
+    live = jnp.asarray(id_live) if id_live is not None else None
     cap_max, cand_cap = 1 << 15, candidate_capacity(mi, tau)
     while True:
-        res = make_mi_searcher(mi, tau, cap_max, cand_cap, batch=True,
-                               block_m=block_m)(qs)
+        fn = make_mi_searcher(mi, tau, cap_max, cand_cap, batch=True,
+                              block_m=block_m, with_live=live is not None)
+        res = fn(qs, live) if live is not None else fn(qs)
         if int(res.overflow.sum()) == 0 or (cap_max >= 1 << 22
                                             and cand_cap >= mi.n):
             return res

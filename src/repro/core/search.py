@@ -45,7 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .bst import BIG, SketchIndex
-from .cost_model import frontier_capacities, sigs
+from .cost_model import frontier_capacities, tau_for_k
 from .hamming import pack_vertical_jax
 from ..kernels import ops
 from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
@@ -103,10 +103,23 @@ def _compact_batch(ids: jnp.ndarray, dists: jnp.ndarray, valid: jnp.ndarray,
             out_valid[:, :capacity], overflow)
 
 
+def _leaf_live(index: SketchIndex, id_live: jnp.ndarray) -> jnp.ndarray:
+    """(n,) bool id liveness -> (t_L,) bool leaf liveness: a leaf is live
+    iff at least one live id maps to it (duplicates share a leaf).  Used
+    by the dynamic segmented index (DESIGN.md §4) to feed the tombstone
+    mask into the verify stage."""
+    t_L = index.t[index.L]
+    return jnp.zeros((t_L,), bool).at[index.id_leaf].max(id_live, mode="drop")
+
+
 def _search_trace(index: SketchIndex, q: jnp.ndarray, *, tau: int,
-                  caps: Tuple[int, ...]) -> SearchResult:
-    """Traced search body.  ``q``: (L,) uint8/int32 query sketch."""
+                  caps: Tuple[int, ...],
+                  id_live: jnp.ndarray | None = None) -> SearchResult:
+    """Traced search body.  ``q``: (L,) uint8/int32 query sketch;
+    ``id_live``: optional (n,) bool tombstone mask — dead ids never
+    survive and fully-dead leaves are pruned at the verify stage."""
     q = q.astype(jnp.int32)
+    live = _leaf_live(index, id_live) if id_live is not None else None
     ids = jnp.zeros((1,), jnp.int32)
     dists = jnp.zeros((1,), jnp.int32)
     valid = jnp.ones((1,), bool)
@@ -136,9 +149,11 @@ def _search_trace(index: SketchIndex, q: jnp.ndarray, *, tau: int,
         if tail.suffix_len > 0:
             q_sfx = pack_vertical_jax(q[index.ls:][None], index.b)[0]  # (b, W)
             hit, leaf_dist = ops.sparse_verify(tail.paths_vert, q_sfx,
-                                               base_leaf, tau=tau)
+                                               base_leaf, tau=tau, live=live)
             survive = hit > 0
         else:
+            if live is not None:
+                base_leaf = jnp.where(live, base_leaf, BIG)
             survive = base_leaf <= tau
             leaf_dist = base_leaf
     else:
@@ -148,9 +163,13 @@ def _search_trace(index: SketchIndex, q: jnp.ndarray, *, tau: int,
         safe_ids = jnp.where(valid, ids, 0)
         leaf_dist = jnp.full((t_L,), BIG, jnp.int32).at[safe_ids].min(
             jnp.where(valid, dists, BIG), mode="drop")
+        if live is not None:
+            leaf_dist = jnp.where(live, leaf_dist, BIG)
         survive = leaf_dist <= tau
 
     mask = survive[index.id_leaf]
+    if id_live is not None:
+        mask = mask & id_live
     dist = jnp.where(mask, leaf_dist[index.id_leaf], BIG)
     return SearchResult(mask=mask, dist=dist, overflow=overflow,
                         traversed=traversed)
@@ -158,7 +177,8 @@ def _search_trace(index: SketchIndex, q: jnp.ndarray, *, tau: int,
 
 def _search_trace_batch(index: SketchIndex, qs: jnp.ndarray, *, tau: int,
                         caps: Tuple[int, ...],
-                        block_m: int = DEFAULT_BLOCK_M) -> SearchResult:
+                        block_m: int = DEFAULT_BLOCK_M,
+                        id_live: jnp.ndarray | None = None) -> SearchResult:
     """Natively batched search body: ``qs`` is (m, L) and the frontier is
     a (m, cap) 2D array compacted per query.  Each level issues ONE
     shared ``children()`` gather over the flattened (m·cap,) frontier
@@ -167,8 +187,10 @@ def _search_trace_batch(index: SketchIndex, qs: jnp.ndarray, *, tau: int,
     the query-tiled batch verify kernel — the collapsed-path array is
     streamed ⌈m/block_m⌉ times instead of m.  Per-query masks, exact
     distances, and overflow counts are bit-identical to ``_search_trace``
-    (compaction is row-independent)."""
+    (compaction is row-independent).  ``id_live``: optional (n,) bool
+    tombstone mask shared by every query (DESIGN.md §4)."""
     qs = qs.astype(jnp.int32)
+    live = _leaf_live(index, id_live) if id_live is not None else None
     m = qs.shape[0]
     ids = jnp.zeros((m, 1), jnp.int32)
     dists = jnp.zeros((m, 1), jnp.int32)
@@ -207,9 +229,12 @@ def _search_trace_batch(index: SketchIndex, qs: jnp.ndarray, *, tau: int,
             q_sfx = pack_vertical_jax(qs[:, index.ls:], index.b)  # (m, b, W)
             q_sfx = jnp.transpose(q_sfx, (1, 2, 0))               # (b, W, m)
             hit, leaf_dist = ops.sparse_verify_batch(
-                tail.paths_vert, q_sfx, base_leaf, tau=tau, block_m=block_m)
+                tail.paths_vert, q_sfx, base_leaf, tau=tau, live=live,
+                block_m=block_m)
             survive = hit > 0
         else:
+            if live is not None:
+                base_leaf = jnp.where(live[None, :], base_leaf, BIG)
             survive = base_leaf <= tau
             leaf_dist = base_leaf
     else:
@@ -217,9 +242,13 @@ def _search_trace_batch(index: SketchIndex, qs: jnp.ndarray, *, tau: int,
         t_L = index.t[index.L]
         leaf_dist = jnp.full((m, t_L), BIG, jnp.int32).at[row, safe_ids].min(
             jnp.where(valid, dists, BIG), mode="drop")
+        if live is not None:
+            leaf_dist = jnp.where(live[None, :], leaf_dist, BIG)
         survive = leaf_dist <= tau
 
     mask = survive[:, index.id_leaf]
+    if id_live is not None:
+        mask = mask & id_live[None, :]
     dist = jnp.where(mask, leaf_dist[:, index.id_leaf], BIG)
     return SearchResult(mask=mask, dist=dist, overflow=overflow,
                         traversed=traversed)
@@ -270,21 +299,35 @@ def clear_searcher_cache() -> None:
 
 def get_searcher(index: SketchIndex, tau: int,
                  cap_max: int = CAP_MAX_DEFAULT, *, batch: bool = False,
-                 block_m: int = DEFAULT_BLOCK_M):
+                 block_m: int = DEFAULT_BLOCK_M, with_live: bool = False):
     """Cached compiled searcher for this (index, τ, caps).  ``batch=False``
     returns ``fn(q: (L,)) -> SearchResult``; ``batch=True`` the natively
     batched ``fn(qs: (m, L)) -> SearchResult`` with a leading query axis
     (2D-frontier traversal + the query-tiled verify kernel at tile size
-    ``block_m``)."""
+    ``block_m``).  ``with_live=True`` compiles the tombstone-aware variant
+    ``fn(q_or_qs, id_live: (n,) bool) -> SearchResult`` (dead ids never
+    survive; the liveness bitmap is a *traced* argument, so flipping
+    tombstones never re-jits — the dynamic segmented index's fast path,
+    DESIGN.md §4)."""
     caps = frontier_capacities(index.t, index.b, tau, cap_max)
-    key = (id(index), tau, caps, block_m if batch else None)
+    key = (id(index), tau, caps, block_m if batch else None, with_live)
 
     def build():
-        if batch:
+        if batch and with_live:
+            @jax.jit
+            def run(qs, id_live):
+                return _search_trace_batch(index, qs, tau=tau, caps=caps,
+                                           block_m=block_m, id_live=id_live)
+        elif batch:
             @jax.jit
             def run(qs):
                 return _search_trace_batch(index, qs, tau=tau, caps=caps,
                                            block_m=block_m)
+        elif with_live:
+            @jax.jit
+            def run(q, id_live):
+                return _search_trace(index, q, tau=tau, caps=caps,
+                                     id_live=id_live)
         else:
             @jax.jit
             def run(q):
@@ -323,7 +366,8 @@ def search(index: SketchIndex, q: np.ndarray, tau: int,
            max_cap: int = LADDER_CAP_MAX) -> SearchResult:
     """Host convenience wrapper with the overflow ladder: retries with a
     doubled capacity until the traversal is exact (or ``max_cap`` is hit).
-    Every rung comes from the process-level searcher cache, so a repeated
+    ``q``: (L,) uint8 -> ``SearchResult`` over the index's n ids.  Every
+    rung comes from the process-level searcher cache, so a repeated
     (index, τ) call never re-jits."""
     q = jnp.asarray(q)
     while True:
@@ -334,14 +378,9 @@ def search(index: SketchIndex, q: np.ndarray, tau: int,
 
 
 def _tau_for_k(index: SketchIndex, k: int) -> int:
-    """Smallest τ whose expected candidate count reaches k, from the cost
-    model's uniform-DB estimate |I(τ)| ≈ n·sigs(b, L, τ)/(2^b)^L."""
-    A = float(1 << index.b)
-    denom = A ** min(index.L, 64)
-    for tau in range(index.L + 1):
-        if sigs(index.b, index.L, tau) * index.n / denom >= k:
-            return tau
-    return index.L
+    """Ladder seed: the cost model's shared uniform-DB estimator
+    (``cost_model.tau_for_k``) over this index's (b, L, n)."""
+    return tau_for_k(index.b, index.L, index.n, k)
 
 
 @functools.lru_cache(maxsize=_SEARCHER_CACHE_CAP)
@@ -373,7 +412,8 @@ def topk(index: SketchIndex, q: np.ndarray, k: int,
          block_m: int = DEFAULT_BLOCK_M) -> TopKResult:
     """Exact k-nearest-neighbor search: run the compiled range searcher on
     a τ-escalation ladder until ≥ k ids survive, then select the k smallest
-    exact distances (ties broken by id).
+    exact distances (ties broken by id).  ``q``: (L,) uint8 ->
+    ``TopKResult`` with (k,) int32 ids/dists.
 
     Correctness: once ``mask.sum() >= k`` at threshold τ with zero frontier
     overflow, every excluded id has distance > τ ≥ the k-th smallest — so

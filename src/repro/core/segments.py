@@ -1,0 +1,675 @@
+"""Dynamic segmented bST index: streaming insert/delete with background
+merge, never blocking search (DESIGN.md §4).
+
+The paper's bST is static — ``build_trie_levels`` consumes the whole
+sketch matrix up front — but the trie family supports incremental
+maintenance (Kanda & Tabei's follow-up, arXiv 2009.11559).  This module
+adds the LSM-style construction on top of the *unchanged* static
+machinery:
+
+  * a small mutable **delta buffer** absorbs inserts and answers queries
+    by brute-force Hamming scan (the batch verify kernel's
+    ``ops.hamming_distances`` — exact distances at any τ for free);
+  * sealed **segments** are immutable bSTs (or MI-bST / sharded-bST
+    stacks) with a per-segment **tombstone bitmap**: ``delete`` flips a
+    bit, and the liveness bitmap is a *traced* argument of the cached
+    compiled searcher (``get_searcher(..., with_live=True)``), so
+    deletes never re-jit and dead leaves are pruned inside the verify
+    stage (``ops.sparse_verify*(..., live=...)``);
+  * a size-tiered ``merge()`` rebuilds two segments into one via
+    ``build_trie_levels`` (dropping tombstones as it goes) and
+    ``compact()`` rebuilds a single segment to reclaim tombstoned rows;
+  * ``search``/``topk``/``topk_batch`` fan out over the delta buffer and
+    every segment, merge the per-segment distance planes onto the global
+    id space, and reuse the shard-merge selection
+    (``distributed_search.topk_from_dists``) — results are bit-identical
+    to a static bST built from the surviving sketches (ties by id, and
+    global ids are assigned monotonically, so the tie order matches the
+    static build's insertion order).
+
+Ids are **stable**: ``insert`` assigns monotonically increasing global
+ids that survive merges and compactions.  Internally everything is
+column-compressed — fan-out planes are (m, R) over the *physical* rows
+currently held, labeled by global id, so churn cost tracks the live
+corpus (R is reclaimed by merge/compact).  Only the range-search result
+contract (``search_batch``'s (m, n_ids) mask/dist planes) materializes
+the full ever-assigned id axis; ``topk*`` never does.
+
+Shapes and dtypes: sketches are (n, L) uint8 over Σ=[0, 2^b); result
+masks are (m, n_ids) bool, distances (m, n_ids) int32 with BIG
+(= 1 << 20) on non-results; ids returned by ``insert``/``topk`` are
+int64 / int32 global ids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
+from .bst import BIG, build_bst
+from .cost_model import tau_for_k
+from .distributed_search import (build_sharded_bst, make_sharded_searcher,
+                                 topk_from_dists)
+from .hamming import pack_vertical
+from .multi_index import build_multi_index, mi_search_batch
+from .search import (CAP_MAX_DEFAULT, LADDER_CAP_MAX, TopKResult,
+                     _pin_cache_get, get_searcher)
+
+BIG_I = int(BIG)
+
+BACKENDS = ("bst", "multi", "sharded")
+
+
+def tombstone_bits(n: int) -> int:
+    """Storage cost in bits of one tombstone bitmap over ``n`` ids,
+    accounted exactly like ``BitVector.nbits`` (payload words + the
+    32-bit-per-word rank directory a succinct liveness bitmap carries):
+    word-padded payload + cumulative-popcount table.
+
+    >>> tombstone_bits(64)      # 2 payload words + 3 table entries
+    160
+    """
+    n_words = max(1, (int(n) + 31) // 32)
+    return n_words * 32 + (n_words + 1) * 32
+
+
+@dataclasses.dataclass
+class Segment:
+    """One immutable sealed segment: a static index + host-side metadata.
+
+    Attributes:
+      index:    the queryable structure (``SketchIndex``, ``MultiIndex``,
+                or ``ShardedBST`` depending on the stack's backend).
+      sketches: (n_seg, L) uint8 — retained host-side so merges/compacts
+                can rebuild without touching the encodings.
+      ids:      (n_seg,) int64 global ids, sorted ascending.
+      live:     (n_seg,) bool tombstone bitmap (False = deleted).
+    """
+
+    index: object
+    sketches: np.ndarray
+    ids: np.ndarray
+    live: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return int(self.ids.shape[0])
+
+    @property
+    def n_live(self) -> int:
+        return int(self.live.sum())
+
+
+class SegmentedSearchResult(NamedTuple):
+    mask: np.ndarray      # (m, n_ids) bool — live ids within τ per query
+    dist: np.ndarray      # (m, n_ids) int32 — exact distance where mask, BIG off
+    overflow: int         # total dropped frontier entries (0 = exact)
+
+
+# make_sharded_searcher has no process-level cache of its own (the static
+# pipeline jits once per program); segment stacks re-enter it per search,
+# so pin compiled sharded searchers here with the same discipline as
+# search._SEARCHER_CACHE.
+_SHARDED_SEARCHER_CACHE: Dict[tuple, tuple] = {}
+_SHARDED_SEARCHER_CACHE_CAP = 64
+
+
+def _ladder_topk(columns_fn, n_live: int, b: int, L: int, qs: np.ndarray,
+                 k: int, tau0: Optional[int]) -> TopKResult:
+    """The shared kNN ladder over column-compressed fan-out results.
+
+    ``columns_fn(qs, tau)`` -> ((m, R) int32 distances over the physical
+    columns — BIG on non-results, (R,) int64 global id per column,
+    overflow).  Escalates τ (seeded by ``cost_model.tau_for_k`` over the
+    live count) until every query has ≥ min(k, n_live) survivors, then
+    runs the shard-merge selection with the global-id labels.  Working
+    memory is O(m·R) where R is the *physical* row count (reclaimed by
+    merge/compact), not the ever-assigned global id space."""
+    m = qs.shape[0]
+    if n_live == 0:
+        return TopKResult(ids=jnp.full((m, k), -1, jnp.int32),
+                          dists=jnp.full((m, k), BIG_I, jnp.int32),
+                          tau=0, overflow=0)
+    kk = min(int(k), n_live)
+    tau = tau0 if tau0 is not None else tau_for_k(b, L, n_live, kk)
+    tau = min(max(int(tau), 0), L)
+    while True:
+        dist, col_ids, overflow = columns_fn(qs, tau)
+        if int((dist < BIG_I).sum(axis=1).min()) >= kk or tau >= L:
+            break
+        tau = min(L, max(tau + 1, 2 * tau))
+    ids, dists = topk_from_dists(dist, int(k), ids=col_ids)
+    return TopKResult(ids=jnp.asarray(ids), dists=jnp.asarray(dists),
+                      tau=tau, overflow=overflow)
+
+
+class SegmentedIndex:
+    """A dynamic, incrementally maintained index over b-bit sketches.
+
+    Parameters:
+      L, b:       sketch length / bits per character (Σ = [0, 2^b)).
+      delta_cap:  delta-buffer rows that trigger an automatic ``flush``.
+      backend:    "bst" (default) — each segment is one bST;
+                  "multi"   — each segment is an MI-bST (``mi_blocks``);
+                  "sharded" — each segment is a padded S-shard ShardedBST
+                  searched through ``make_sharded_searcher`` (each shard
+                  of the SPMD program serves its slice of the segment).
+      mi_blocks:  block count for backend="multi".
+      n_shards:   shard count for backend="sharded" (clamped to the
+                  segment size).
+      lam:        the paper's λ collapse parameter, forwarded to builds.
+      auto_merge: run the size-tiered merge policy after every automatic
+                  flush (manual ``flush()`` never merges implicitly).
+      block_m:    query-tile size forwarded to the batched verify kernel.
+
+    >>> import numpy as np
+    >>> idx = SegmentedIndex(L=8, b=2, delta_cap=4)
+    >>> ids = idx.insert(np.zeros((5, 8), np.uint8))   # auto-flush at 4
+    >>> (len(ids), idx.n_live, len(idx.segments))
+    (5, 5, 1)
+    >>> int(idx.delete(ids[:2]))
+    2
+    >>> idx.n_live
+    3
+    """
+
+    def __init__(self, L: int, b: int, *, delta_cap: int = 4096,
+                 backend: str = "bst", mi_blocks: int = 2, n_shards: int = 4,
+                 lam: float = 0.5, auto_merge: bool = True,
+                 block_m: int = DEFAULT_BLOCK_M):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}")
+        self.L = int(L)
+        self.b = int(b)
+        self.delta_cap = int(delta_cap)
+        self.backend = backend
+        self.mi_blocks = int(mi_blocks)
+        self.n_shards = int(n_shards)
+        self.lam = float(lam)
+        self.auto_merge = bool(auto_merge)
+        self.block_m = int(block_m)
+
+        self.segments: List[Segment] = []
+        self.n_ids = 0                      # global ids ever assigned
+        self._delta_sk = np.zeros((0, self.L), np.uint8)
+        self._delta_ids = np.zeros((0,), np.int64)
+        self._delta_live = np.zeros((0,), bool)
+        self._delta_vert: Optional[jnp.ndarray] = None  # cached (b, W, nd)
+        self.counters = {"flushes": 0, "merges": 0, "compactions": 0,
+                         "inserted": 0, "deleted": 0}
+
+    # -- mutation --------------------------------------------------------
+
+    def insert(self, sketches: np.ndarray) -> np.ndarray:
+        """Append sketches to the delta buffer; returns their (k,) int64
+        global ids.  ``sketches``: (k, L) or (L,) uint8 over [0, 2^b).
+        Triggers ``flush`` (and, if ``auto_merge``, the size-tiered merge
+        policy) once the delta buffer reaches ``delta_cap`` rows —
+        search stays available throughout."""
+        sk = np.asarray(sketches, dtype=np.uint8)
+        if sk.ndim == 1:
+            sk = sk[None, :]
+        if sk.shape[1] != self.L:
+            raise ValueError(f"sketch length {sk.shape[1]} != L={self.L}")
+        if sk.size and int(sk.max()) >= (1 << self.b):
+            raise ValueError("character exceeds alphabet [0, 2^b)")
+        k = sk.shape[0]
+        new_ids = np.arange(self.n_ids, self.n_ids + k, dtype=np.int64)
+        self.n_ids += k
+        self._delta_sk = np.concatenate([self._delta_sk, sk])
+        self._delta_ids = np.concatenate([self._delta_ids, new_ids])
+        self._delta_live = np.concatenate(
+            [self._delta_live, np.ones(k, bool)])
+        self._delta_vert = None
+        self.counters["inserted"] += k
+        if len(self._delta_ids) >= self.delta_cap:
+            self.flush()
+            if self.auto_merge:
+                self.maybe_merge()
+        return new_ids
+
+    def delete(self, ids) -> int:
+        """Tombstone global ids (scalar or (k,) array-like); returns the
+        number of ids newly deleted (already-dead or unknown ids are
+        ignored).  O(k log n) searchsorted per container — no index is
+        rebuilt and compiled searchers stay valid (liveness is traced)."""
+        ids = np.unique(np.atleast_1d(np.asarray(ids, dtype=np.int64)))
+        newly = 0
+        containers: List[Tuple[np.ndarray, np.ndarray]] = [
+            (self._delta_ids, self._delta_live)]
+        containers += [(seg.ids, seg.live) for seg in self.segments]
+        for id_arr, live_arr in containers:
+            if id_arr.size == 0:
+                continue
+            pos = np.searchsorted(id_arr, ids)
+            ok = (pos < id_arr.size) & (
+                id_arr[np.minimum(pos, id_arr.size - 1)] == ids)
+            sel = pos[ok]
+            newly += int(live_arr[sel].sum())
+            live_arr[sel] = False
+        self.counters["deleted"] += newly
+        return newly
+
+    def flush(self) -> Optional[Segment]:
+        """Seal the delta buffer's live rows into a new immutable segment
+        (dead delta rows are dropped for free).  Returns the new Segment,
+        or None when nothing was live."""
+        live = self._delta_live
+        seg = None
+        if live.any():
+            sk = self._delta_sk[live]
+            ids = self._delta_ids[live]
+            seg = Segment(index=self._build(sk), sketches=sk, ids=ids,
+                          live=np.ones(len(ids), bool))
+            self.segments.append(seg)
+            self.counters["flushes"] += 1
+        self._delta_sk = np.zeros((0, self.L), np.uint8)
+        self._delta_ids = np.zeros((0,), np.int64)
+        self._delta_live = np.zeros((0,), bool)
+        self._delta_vert = None
+        return seg
+
+    def merge(self, i: Optional[int] = None,
+              j: Optional[int] = None) -> bool:
+        """Rebuild two segments into one via ``build_trie_levels`` (inside
+        the backend's builder), dropping tombstoned rows as it goes.
+        Defaults to the two smallest segments (size-tiered choice);
+        returns False when fewer than two segments exist."""
+        if len(self.segments) < 2:
+            return False
+        if i is None or j is None:
+            order = np.argsort([seg.n for seg in self.segments],
+                               kind="stable")
+            i, j = int(order[0]), int(order[1])
+        if i == j:
+            raise ValueError("cannot merge a segment with itself")
+        a, b_ = self.segments[i], self.segments[j]
+        sk = np.concatenate([a.sketches[a.live], b_.sketches[b_.live]])
+        ids = np.concatenate([a.ids[a.live], b_.ids[b_.live]])
+        order = np.argsort(ids, kind="stable")   # keep ids sorted for delete
+        sk, ids = sk[order], ids[order]
+        lo, hi = min(i, j), max(i, j)
+        del self.segments[hi], self.segments[lo]
+        if len(ids):
+            self.segments.insert(lo, Segment(
+                index=self._build(sk), sketches=sk, ids=ids,
+                live=np.ones(len(ids), bool)))
+        self.counters["merges"] += 1
+        return True
+
+    def maybe_merge(self) -> int:
+        """Size-tiered merge policy: while two segments share a size tier
+        (⌊log2 n⌋ bucket), merge the two smallest of that tier.  Returns
+        the number of merges performed.  Amortized O(log n) rebuilds per
+        inserted row, and search never blocks (the old segments answer
+        queries until the swap)."""
+        merges = 0
+        while True:
+            tiers: Dict[int, List[int]] = {}
+            for si, seg in enumerate(self.segments):
+                tiers.setdefault(max(seg.n, 1).bit_length(), []).append(si)
+            crowded = [idxs for idxs in tiers.values() if len(idxs) >= 2]
+            if not crowded:
+                return merges
+            idxs = min(crowded, key=lambda g: min(self.segments[s].n
+                                                  for s in g))
+            pair = sorted(idxs, key=lambda s: self.segments[s].n)[:2]
+            self.merge(pair[0], pair[1])
+            merges += 1
+
+    def compact(self, i: Optional[int] = None,
+                min_dead_frac: float = 0.0) -> int:
+        """Rebuild segment ``i`` (or every segment when None) without its
+        tombstoned leaves; fully-dead segments are removed outright.
+        ``min_dead_frac`` skips segments whose dead fraction is at or
+        below the threshold.  Returns the number of segments rebuilt or
+        removed."""
+        targets = range(len(self.segments)) if i is None else [i]
+        out: List[Optional[Segment]] = list(self.segments)
+        done = 0
+        for si in targets:
+            seg = self.segments[si]
+            dead = seg.n - seg.n_live
+            if dead == 0 or (seg.n and dead / seg.n <= min_dead_frac):
+                continue
+            if seg.n_live == 0:
+                out[si] = None
+            else:
+                sk, ids = seg.sketches[seg.live], seg.ids[seg.live]
+                out[si] = Segment(index=self._build(sk), sketches=sk,
+                                  ids=ids, live=np.ones(len(ids), bool))
+            done += 1
+        self.segments = [s for s in out if s is not None]
+        self.counters["compactions"] += done
+        return done
+
+    # -- queries ---------------------------------------------------------
+
+    def search_batch(self, qs: np.ndarray, tau: int) -> SegmentedSearchResult:
+        """Range search, fanned out over the delta buffer and every
+        segment.  ``qs``: (m, L) uint8 queries -> (m, n_ids) global mask
+        and exact-distance planes (BIG off-mask / on dead ids)."""
+        qs = np.asarray(qs, dtype=np.uint8)
+        if qs.ndim == 1:
+            qs = qs[None, :]
+        plane, overflow = self._search_planes(qs, int(tau))
+        return SegmentedSearchResult(mask=plane <= tau, dist=plane,
+                                     overflow=overflow)
+
+    def search(self, q: np.ndarray, tau: int) -> SegmentedSearchResult:
+        """Single-query ``search_batch`` (m=1 planes squeezed)."""
+        res = self.search_batch(np.asarray(q)[None], tau)
+        return SegmentedSearchResult(mask=res.mask[0], dist=res.dist[0],
+                                     overflow=res.overflow)
+
+    def topk_batch(self, qs: np.ndarray, k: int,
+                   tau0: Optional[int] = None) -> TopKResult:
+        """Exact k-nearest-neighbors over the live ids: the fan-out
+        planes of ``search_batch`` on a shared τ-escalation ladder, then
+        the shard-merge selection (``topk_from_dists``).  ``qs``: (m, L)
+        uint8 -> (m, k) int32 global ids / int32 exact distances,
+        ascending by (distance, id); (-1, BIG) pads past the live count.
+        Bit-identical to ``core.search.topk_batch`` on a static bST of
+        the surviving sketches (after the monotone global-id mapping).
+        Works over column-compressed planes — O(m · physical rows), not
+        O(m · ids-ever-assigned)."""
+        qs = np.asarray(qs, dtype=np.uint8)
+        if qs.ndim == 1:
+            qs = qs[None, :]
+        return _ladder_topk(self._search_columns, self.n_live, self.b,
+                            self.L, qs, k, tau0)
+
+    def topk(self, q: np.ndarray, k: int,
+             tau0: Optional[int] = None) -> TopKResult:
+        """Single-query ``topk_batch`` (row 0)."""
+        res = self.topk_batch(np.asarray(q)[None], k, tau0=tau0)
+        return TopKResult(ids=res.ids[0], dists=res.dists[0], tau=res.tau,
+                          overflow=res.overflow)
+
+    # -- accounting ------------------------------------------------------
+
+    @property
+    def n_live(self) -> int:
+        """Live (inserted minus deleted) ids across delta + segments."""
+        return int(self._delta_live.sum()) + sum(
+            seg.n_live for seg in self.segments)
+
+    def __len__(self) -> int:
+        return self.n_live
+
+    def space_bits(self) -> int:
+        """Model-space accounting: per-segment index bits + one tombstone
+        bitmap per segment and one for the delta buffer (DESIGN.md §4 —
+        the dynamic overhead next to ``BitVector.nbits``'s static
+        accounting), + raw delta rows at b bits per character."""
+        bits = 0
+        for seg in self.segments:
+            bits += int(seg.index.model_bits()) + tombstone_bits(seg.n)
+        nd = len(self._delta_ids)
+        if nd:
+            bits += nd * self.L * self.b + tombstone_bits(nd)
+        return bits
+
+    def stats(self) -> Dict[str, object]:
+        """Lifecycle counters and per-segment occupancy (for dashboards
+        and the ingest benchmark)."""
+        return {
+            "n_ids": self.n_ids, "n_live": self.n_live,
+            "delta_rows": int(len(self._delta_ids)),
+            "delta_live": int(self._delta_live.sum()),
+            "segments": [(seg.n, seg.n_live) for seg in self.segments],
+            "space_bits": self.space_bits(), **self.counters,
+        }
+
+    # -- internals -------------------------------------------------------
+
+    def _build(self, sk: np.ndarray):
+        if self.backend == "multi":
+            return build_multi_index(sk, self.b, self.mi_blocks, self.lam)
+        if self.backend == "sharded":
+            return build_sharded_bst(sk, self.b,
+                                     max(1, min(self.n_shards, len(sk))),
+                                     self.lam)
+        return build_bst(sk, self.b, self.lam)
+
+    def _delta_planes(self) -> jnp.ndarray:
+        if self._delta_vert is None:
+            planes = pack_vertical(self._delta_sk, self.b)   # (nd, b, W)
+            self._delta_vert = jnp.asarray(
+                np.transpose(planes, (1, 2, 0)).copy())       # (b, W, nd)
+        return self._delta_vert
+
+    def _search_columns(self, qs: np.ndarray,
+                        tau: int) -> Tuple[np.ndarray, np.ndarray, int]:
+        """(m, L) queries -> ((m, R) int32 distances over the physical
+        columns — BIG on non-results, (R,) int64 global id per column,
+        total overflow), where R = rows currently held (every segment's
+        rows, then the delta buffer's) — R shrinks with merge/compact,
+        unlike the ever-assigned global id space.  Every segment
+        contributes exact distances within τ; the delta buffer
+        contributes a brute-force scan clamped to the same τ so the
+        ladder logic sees one consistent contract."""
+        m = qs.shape[0]
+        dists: List[np.ndarray] = []
+        col_ids: List[np.ndarray] = []
+        overflow = 0
+        qs_j = jnp.asarray(qs)
+        for seg in self.segments:
+            if seg.live.any():
+                dist, ov = self._search_segment(seg, qs_j, tau)
+                overflow += ov
+            else:
+                dist = np.full((m, seg.n), BIG_I, np.int32)
+            dists.append(dist)
+            col_ids.append(seg.ids)
+        if len(self._delta_ids):
+            planes = pack_vertical(qs, self.b)                # (m, b, W)
+            q_vert = jnp.asarray(np.transpose(planes, (1, 2, 0)).copy())
+            d = np.asarray(ops.hamming_distances(self._delta_planes(),
+                                                 q_vert))     # (m, nd)
+            d = np.where(self._delta_live[None, :] & (d <= tau), d, BIG_I)
+            dists.append(d.astype(np.int32))
+            col_ids.append(self._delta_ids)
+        if not dists:
+            return (np.zeros((m, 0), np.int32), np.zeros((0,), np.int64),
+                    0)
+        return (np.concatenate(dists, axis=1),
+                np.concatenate(col_ids), overflow)
+
+    def _search_planes(self, qs: np.ndarray,
+                       tau: int) -> Tuple[np.ndarray, int]:
+        """(m, L) queries -> ((m, n_ids) int32 global distance plane with
+        BIG on non-results, total overflow): the column-compressed
+        fan-out scattered onto the full global-id axis (the range-search
+        result contract)."""
+        m = qs.shape[0]
+        dist, col_ids, overflow = self._search_columns(qs, tau)
+        plane = np.full((m, self.n_ids), BIG_I, np.int32)
+        plane[:, col_ids] = dist
+        return plane, overflow
+
+    def _search_segment(self, seg: Segment, qs_j: jnp.ndarray,
+                        tau: int) -> Tuple[np.ndarray, int]:
+        """One segment, the whole batch -> ((m, n_seg) int32 exact local
+        distances — BIG off-mask and on tombstones, overflow).  Runs the
+        backend's cached compiled searcher with the liveness bitmap as a
+        traced argument, on the doubled capacity ladder until exact."""
+        if self.backend == "multi":
+            res = mi_search_batch(seg.index, qs_j, tau,
+                                  block_m=self.block_m, id_live=seg.live)
+            return (np.asarray(res.dist, dtype=np.int32),
+                    int(np.asarray(res.overflow).sum()))
+        if self.backend == "sharded":
+            idx = seg.index
+            cap = 1 << 14
+            while True:
+                key = (id(idx), tau, cap)
+
+                def build():
+                    return make_sharded_searcher(idx, tau, cap_max=cap)
+                fn, _ = _pin_cache_get(_SHARDED_SEARCHER_CACHE,
+                                       _SHARDED_SEARCHER_CACHE_CAP,
+                                       key, idx, build)
+                _, dists, ov = fn(qs_j)
+                if int(ov) == 0 or cap >= LADDER_CAP_MAX:
+                    break
+                cap *= 2
+            merged = np.asarray(dists)[:, idx.shard_of, idx.pos_of]
+            merged = np.where(seg.live[None, :], merged, BIG_I)
+            return merged.astype(np.int32), int(ov)
+        live_j = jnp.asarray(seg.live)
+        cap = CAP_MAX_DEFAULT
+        while True:
+            fn = get_searcher(seg.index, tau, cap, batch=True,
+                              block_m=self.block_m, with_live=True)
+            res = fn(qs_j, live_j)
+            ov = int(np.asarray(res.overflow).sum())
+            if ov == 0 or cap >= LADDER_CAP_MAX:
+                break
+            cap *= 2
+        return np.asarray(res.dist, dtype=np.int32), ov
+
+
+class ShardedSegmentedIndex:
+    """S independent segment stacks, one per shard — the dynamic analogue
+    of ``build_sharded_bst``'s layout: inserts round-robin across shards
+    (matching the static builder's ``id % S`` placement), deletes route
+    by id, and queries fan out over every shard's stack before the
+    shared shard-merge selection.  Per-shard stacks keep every segment
+    rebuild bounded by its shard's slice — a merge touches 1/S of the
+    data, the same fault/rebuild granularity as the static sharded
+    index.
+
+    Same result contract as ``SegmentedIndex`` (global-id planes,
+    ``TopKResult`` with global ids).
+    """
+
+    def __init__(self, L: int, b: int, n_shards: int = 4, *,
+                 delta_cap: int = 4096, backend: str = "bst",
+                 lam: float = 0.5, auto_merge: bool = True,
+                 block_m: int = DEFAULT_BLOCK_M):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.L, self.b = int(L), int(b)
+        self.n_shards = int(n_shards)
+        self.shards = [
+            SegmentedIndex(L, b, delta_cap=delta_cap, backend=backend,
+                           lam=lam, auto_merge=auto_merge, block_m=block_m)
+            for _ in range(self.n_shards)]
+        self.n_ids = 0
+        # global id -> shard is `id % S`; per-shard local ids are dense,
+        # so global id maps to local position `id // S`.
+
+    def insert(self, sketches: np.ndarray) -> np.ndarray:
+        """Round-robin insert; returns (k,) int64 global ids."""
+        sk = np.asarray(sketches, dtype=np.uint8)
+        if sk.ndim == 1:
+            sk = sk[None, :]
+        k = sk.shape[0]
+        new_ids = np.arange(self.n_ids, self.n_ids + k, dtype=np.int64)
+        for s in range(self.n_shards):
+            rows = np.flatnonzero(new_ids % self.n_shards == s)
+            if rows.size:
+                self.shards[s].insert(sk[rows])
+        self.n_ids += k
+        return new_ids
+
+    def delete(self, ids) -> int:
+        """Tombstone global ids; returns the number newly deleted."""
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        ids = ids[(ids >= 0) & (ids < self.n_ids)]
+        newly = 0
+        for s in range(self.n_shards):
+            mine = ids[ids % self.n_shards == s]
+            if mine.size:
+                newly += self.shards[s].delete(mine // self.n_shards)
+        return newly
+
+    def flush(self) -> None:
+        for shard in self.shards:
+            shard.flush()
+
+    def merge(self) -> int:
+        """Size-tiered merge inside every shard's stack; returns total
+        merges performed."""
+        return sum(shard.maybe_merge() for shard in self.shards)
+
+    def compact(self, min_dead_frac: float = 0.0) -> int:
+        return sum(shard.compact(min_dead_frac=min_dead_frac)
+                   for shard in self.shards)
+
+    @property
+    def n_live(self) -> int:
+        return sum(shard.n_live for shard in self.shards)
+
+    def __len__(self) -> int:
+        return self.n_live
+
+    def space_bits(self) -> int:
+        return sum(shard.space_bits() for shard in self.shards)
+
+    def stats(self) -> Dict[str, object]:
+        return {"n_ids": self.n_ids, "n_live": self.n_live,
+                "shards": [shard.stats() for shard in self.shards]}
+
+    def _search_columns(self, qs: np.ndarray,
+                        tau: int) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Column-compressed fan-out over every shard's stack: local
+        column ids relabel to global via ``gid = local * S + s``."""
+        m = qs.shape[0]
+        dists: List[np.ndarray] = []
+        col_ids: List[np.ndarray] = []
+        overflow = 0
+        for s, shard in enumerate(self.shards):
+            dist, local_ids, ov = shard._search_columns(qs, tau)
+            dists.append(dist)
+            col_ids.append(local_ids * self.n_shards + s)
+            overflow += ov
+        if not dists:
+            return (np.zeros((m, 0), np.int32), np.zeros((0,), np.int64),
+                    0)
+        return (np.concatenate(dists, axis=1),
+                np.concatenate(col_ids), overflow)
+
+    def _global_plane(self, qs: np.ndarray,
+                      tau: int) -> Tuple[np.ndarray, int]:
+        m = qs.shape[0]
+        dist, col_ids, overflow = self._search_columns(qs, tau)
+        plane = np.full((m, self.n_ids), BIG_I, np.int32)
+        plane[:, col_ids] = dist
+        return plane, overflow
+
+    def search_batch(self, qs: np.ndarray, tau: int) -> SegmentedSearchResult:
+        """(m, L) uint8 queries -> global (m, n_ids) mask/dist planes."""
+        qs = np.asarray(qs, dtype=np.uint8)
+        if qs.ndim == 1:
+            qs = qs[None, :]
+        plane, overflow = self._global_plane(qs, int(tau))
+        return SegmentedSearchResult(mask=plane <= tau, dist=plane,
+                                     overflow=overflow)
+
+    def search(self, q: np.ndarray, tau: int) -> SegmentedSearchResult:
+        res = self.search_batch(np.asarray(q)[None], tau)
+        return SegmentedSearchResult(mask=res.mask[0], dist=res.dist[0],
+                                     overflow=res.overflow)
+
+    def topk_batch(self, qs: np.ndarray, k: int,
+                   tau0: Optional[int] = None) -> TopKResult:
+        """Exact global kNN: per-shard column-compressed fan-out on one
+        shared τ ladder (same contract as ``SegmentedIndex.topk_batch``)."""
+        qs = np.asarray(qs, dtype=np.uint8)
+        if qs.ndim == 1:
+            qs = qs[None, :]
+        return _ladder_topk(self._search_columns, self.n_live, self.b,
+                            self.L, qs, k, tau0)
+
+    def topk(self, q: np.ndarray, k: int,
+             tau0: Optional[int] = None) -> TopKResult:
+        res = self.topk_batch(np.asarray(q)[None], k, tau0=tau0)
+        return TopKResult(ids=res.ids[0], dists=res.dists[0], tau=res.tau,
+                          overflow=res.overflow)

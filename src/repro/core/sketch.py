@@ -90,7 +90,9 @@ def zbit_cws(key: jax.Array, weights: jnp.ndarray, *, L: int, b: int) -> jnp.nda
 
 
 def jaccard(items_a, mask_a, items_b, mask_b) -> jnp.ndarray:
-    """Exact Jaccard between two padded sets — oracle for minhash tests."""
+    """Exact Jaccard between two padded sets — oracle for minhash tests.
+    items_*: (batch, max_items) int32 ids; mask_*: (batch, max_items)
+    bool validity -> (batch,) float."""
     def one(ia, ma, ib, mb):
         ia = jnp.where(ma, ia, -1)
         ib = jnp.where(mb, ib, -2)
@@ -102,7 +104,8 @@ def jaccard(items_a, mask_a, items_b, mask_b) -> jnp.ndarray:
 
 
 def minmax_kernel(wa: jnp.ndarray, wb: jnp.ndarray) -> jnp.ndarray:
-    """Exact min-max kernel — oracle for CWS tests."""
+    """Exact min-max kernel — oracle for CWS tests.
+    wa, wb: (..., dim) float, >= 0 -> (...,) float in [0, 1]."""
     num = jnp.minimum(wa, wb).sum(axis=-1)
     den = jnp.maximum(wa, wb).sum(axis=-1)
     return jnp.where(den > 0, num / den, 0.0)

@@ -51,6 +51,12 @@ class TrieLevels:
 
 
 def build_trie_levels(sketches: np.ndarray, b: int) -> TrieLevels:
+    """Scan a sketch database into per-level trie facts.
+
+    sketches: (n, L) uint8 over Σ=[0, 2^b) (duplicates allowed — they
+    share a leaf); returns a host-side ``TrieLevels`` with node counts,
+    labels, parents, and leaf maps per level (shapes in the dataclass).
+    O(n·L) after the lexicographic sort; no pointer trie is built."""
     sketches = np.ascontiguousarray(np.asarray(sketches, dtype=np.uint8))
     n, L = sketches.shape
     assert sketches.max(initial=0) < (1 << b), "character exceeds alphabet"

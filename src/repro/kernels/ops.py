@@ -62,11 +62,20 @@ def hamming_distances(db_vert: jnp.ndarray, q_vert: jnp.ndarray,
 
 def sparse_verify(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
                   base_dist: jnp.ndarray, *, tau: int,
+                  live: jnp.ndarray | None = None,
                   block_n: int = DEFAULT_BLOCK_N,
                   use_kernel: bool | None = None):
     """Fused single-query verify: ((n,) int32 mask of leaves with
     prefix+suffix dist <= tau, (n,) int32 exact total distances —
-    BIG-clamped when pruned)."""
+    BIG-clamped when pruned).
+
+    ``live`` is an optional (n,) bool tombstone mask (dynamic segmented
+    index, DESIGN.md §4): dead lanes get a BIG base distance before the
+    kernel launch, so tombstoned leaves are pruned by the verify exactly
+    like subtries the traversal never reached — pruning == masking, no
+    extra kernel pass."""
+    if live is not None:
+        base_dist = jnp.where(live, base_dist, jnp.int32(BIG))
     n = paths_vert.shape[-1]
     if use_kernel is None:
         use_kernel = n >= block_n
@@ -84,6 +93,7 @@ def sparse_verify(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
 
 def sparse_verify_batch(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
                         base_dist: jnp.ndarray, *, tau: int,
+                        live: jnp.ndarray | None = None,
                         block_m: int = DEFAULT_BLOCK_M,
                         block_n: int = DEFAULT_BLOCK_N,
                         use_kernel: bool | None = None):
@@ -92,6 +102,10 @@ def sparse_verify_batch(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
     paths_vert: (b, W, n) collapsed suffix paths (shared database);
     q_vert:     (b, W, m) query suffixes;
     base_dist:  (m, n) per-query prefix distances (BIG = pruned subtrie);
+    live:       optional (n,) bool tombstone mask shared by every query —
+                dead lanes get a BIG base distance before the kernel
+                launch (tombstoned leaves are pruned exactly like
+                unreached subtries; DESIGN.md §4);
     returns ((m, n) int32 masks, (m, n) int32 exact totals, BIG-clamped).
 
     Pads n to a ``block_n`` multiple with BIG base distances (pad lanes
@@ -99,6 +113,8 @@ def sparse_verify_batch(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
     queries (pad rows sliced off), then launches the (m/block_m,
     n/block_n)-grid kernel: the database is streamed ⌈m/block_m⌉ times
     instead of m."""
+    if live is not None:
+        base_dist = jnp.where(live[None, :], base_dist, jnp.int32(BIG))
     n = paths_vert.shape[-1]
     m = q_vert.shape[-1]
     if use_kernel is None:

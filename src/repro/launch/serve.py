@@ -9,6 +9,12 @@ serving feature: the final hidden states of completed requests are
 0-bit-CWS-sketched and queried against a bST index of (synthetic)
 document sketches — batched Hamming-threshold retrieval as the RAG
 lookup step.
+
+``--ingest`` serves the *dynamic* retrieval plane (DESIGN.md §4): a
+segmented index absorbs streaming document inserts and deletes through
+the ``ingest_insert`` / ``ingest_delete`` endpoints while answering
+top-k queries mid-stream — no model required, no rebuild, no blocked
+search.
 """
 
 from __future__ import annotations
@@ -24,12 +30,78 @@ import numpy as np
 from ..configs.registry import ARCH_IDS, get_config
 from ..core.bst import build_bst
 from ..core.search import make_batch_searcher, topk_batch
+from ..core.segments import SegmentedIndex
 from ..core.sketch import zbit_cws
 from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
 from ..distributed.sharding import use_mesh
 from ..launch.mesh import make_host_mesh
 from ..models import model as M
 from ..train.steps import make_decode_step, make_prefill_step
+
+
+# ---------------------------------------------------------------------------
+# ingest endpoints (the mutation surface a serving frontend would expose;
+# the --ingest mode below drives them as a demo traffic generator)
+# ---------------------------------------------------------------------------
+
+def ingest_insert(index: SegmentedIndex, sketches: np.ndarray) -> np.ndarray:
+    """Insert endpoint: (k, L) uint8 document sketches -> (k,) int64
+    stable doc ids.  Sealing/merging happens inside the index without
+    blocking concurrent searches."""
+    return index.insert(sketches)
+
+
+def ingest_delete(index: SegmentedIndex, doc_ids: np.ndarray) -> int:
+    """Delete endpoint: tombstones doc ids, returns how many were newly
+    removed.  O(k log n); compiled searchers stay warm (liveness is a
+    traced argument, never a recompile)."""
+    return index.delete(doc_ids)
+
+
+def run_ingest(args) -> int:
+    """--ingest mode: stream synthetic document sketches through the
+    insert/delete endpoints and serve top-k queries mid-stream."""
+    L, b = 32, 4
+    rng = np.random.default_rng(args.seed)
+    n = args.index_size
+    docs = rng.integers(0, 1 << b, size=(n, L), dtype=np.uint8)
+    index = SegmentedIndex(L, b, delta_cap=args.delta_cap,
+                           block_m=args.block_m or DEFAULT_BLOCK_M)
+
+    chunk = max(64, n // 16)
+    t0 = time.time()
+    ids = np.zeros((0,), np.int64)
+    for lo in range(0, n, chunk):
+        ids = np.concatenate(
+            [ids, ingest_insert(index, docs[lo:lo + chunk])])
+        if lo == chunk * 4:   # mid-stream query traffic
+            qs = docs[rng.integers(0, lo, args.batch)]
+            nn = index.topk_batch(qs, args.topk)
+            st = index.stats()
+            print(f"mid-stream topk over {st['n_live']} live docs "
+                  f"({len(st['segments'])} segments + {st['delta_rows']} "
+                  f"delta rows): tau*={nn.tau}")
+    dt = time.time() - t0
+    print(f"ingested {n} docs in {dt:.2f}s ({n / dt:.0f} inserts/s, "
+          f"{index.counters['merges']} background merges)")
+
+    removed = ingest_delete(index, ids[rng.choice(n, n // 8, replace=False)])
+    index.flush()
+    index.maybe_merge()
+    index.compact(min_dead_frac=0.25)
+    st = index.stats()
+    print(f"deleted {removed}; stack now {st['segments']} "
+          f"(space {st['space_bits'] / 8 / 1024:.1f} KiB incl. tombstones)")
+
+    qs = docs[rng.integers(0, n, args.batch)]
+    t0 = time.time()
+    nn = index.topk_batch(qs, args.topk)
+    dt = time.time() - t0
+    for r in range(min(args.batch, 4)):
+        print(f"  request {r}: top-{args.topk} docs {np.asarray(nn.ids[r])} "
+              f"at distances {np.asarray(nn.dists[r])} (tau*={nn.tau})")
+    print(f"post-merge batched topk: {dt / args.batch * 1e3:.1f} ms/query")
+    return 0
 
 
 def main(argv=None):
@@ -40,6 +112,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--retrieval", action="store_true")
+    ap.add_argument("--ingest", action="store_true",
+                    help="streaming-ingest retrieval plane: dynamic "
+                         "segmented index + insert/delete endpoints "
+                         "(model-free; see DESIGN.md §4)")
+    ap.add_argument("--delta-cap", type=int, default=2048,
+                    help="delta-buffer rows before a segment seals "
+                         "(--ingest)")
     ap.add_argument("--index-size", type=int, default=4096)
     ap.add_argument("--tau", type=int, default=3)
     ap.add_argument("--topk", type=int, default=3,
@@ -49,6 +128,9 @@ def main(argv=None):
                          "(default: kernel DEFAULT_BLOCK_M)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.ingest:
+        return run_ingest(args)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if not cfg.causal or cfg.inputs_embeds:

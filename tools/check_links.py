@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Markdown link checker (offline): every relative link/image target in
+the repo's *.md files must exist on disk, and every intra-repo anchor
+(`file.md#section`) must match a heading in the target file.
+
+    python tools/check_links.py [root]
+
+External (http/https/mailto) links are skipped — CI has no network and
+examples must not rot for reachability reasons; what this job pins down
+is the *internal* docs graph (README ↔ DESIGN.md ↔ docs/API.md ↔ code
+paths referenced as links).  Exit code 1 on any broken target.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "node_modules"}
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (lowercase, strip punctuation, dashes)."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def md_files(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in path.parts):
+            yield path
+
+
+def anchors_of(path: Path) -> set:
+    return {slugify(h) for h in HEADING_RE.findall(
+        path.read_text(encoding="utf-8"))}
+
+
+def check(root: Path) -> int:
+    errors = []
+    for md in md_files(root):
+        text = md.read_text(encoding="utf-8")
+        for match in LINK_RE.finditer(text):
+            target = match.group(1)
+            if target.startswith(SKIP_SCHEMES):
+                continue
+            path_part, _, anchor = target.partition("#")
+            base = md if not path_part else (md.parent / path_part)
+            if path_part:
+                if not base.exists():
+                    errors.append(f"{md}: broken link -> {target}")
+                    continue
+            if anchor and base.suffix == ".md" and base.exists():
+                if slugify(anchor) not in anchors_of(base):
+                    errors.append(f"{md}: missing anchor -> {target}")
+    for err in errors:
+        print(err)
+    n = len(list(md_files(root)))
+    print(f"checked {n} markdown files: "
+          f"{'FAILED (' + str(len(errors)) + ' broken)' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(Path(sys.argv[1] if len(sys.argv) > 1 else ".")))
