@@ -1,0 +1,178 @@
+"""Closed-loop serving-runtime benchmark (DESIGN.md §5).
+
+A threaded ``repro.serving.Scheduler`` fronts one collection preloaded
+with a synthetic corpus; C closed-loop clients each submit one request,
+wait for its future, and immediately submit the next — the classic
+closed-loop load model, so offered load adapts to service rate and the
+reported QPS is *sustained*, not offered.  The request mix is
+read-heavy with interleaved writes (defaults: 70% topk, 20% search,
+5% insert, 5% delete), exercising the read-coalescing + write-fencing
+path the scheduler exists for.
+
+Rows:
+  * ``serving/<ds>/qps``        — sustained requests/sec over the run
+  * ``serving/<ds>/topk_p50``   — end-to-end (queue + exec) ms
+  * ``serving/<ds>/topk_p99``
+  * ``serving/<ds>/search_p99``
+  * ``serving/<ds>/fill``       — batch-fill ratio (coalesced queries /
+                                  dispatched bucket rows)
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.bench_serving
+[--smoke] [--clients C] [--ops N] [--out BENCH.json]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.serving import (CollectionConfig, OverloadError, Scheduler,
+                           SchedulerConfig)
+
+from . import common
+from .common import Csv, cap_n, make_dataset
+
+# op mix: (name, cumulative probability)
+MIX = (("topk", 0.70), ("search", 0.90), ("insert", 0.95), ("delete", 1.0))
+
+
+def _submit_with_retry(submit):
+    """Closed-loop overload handling: back off and re-submit until the
+    queue admits the request, so every client iteration completes exactly
+    one op (the reported totals stay honest under overload)."""
+    while True:
+        try:
+            return submit()
+        except OverloadError:
+            time.sleep(0.001)
+
+
+def _client(sched: Scheduler, docs: np.ndarray, ids_pool: list,
+            lock: threading.Lock, rng: np.random.Generator, ops: int,
+            k: int, tau: int, errors: list) -> None:
+    n = len(docs)
+    for _ in range(ops):
+        r = rng.random()
+        try:
+            if r < MIX[0][1]:
+                doc = docs[rng.integers(0, n)]
+                fut = _submit_with_retry(
+                    lambda: sched.submit_topk("bench", doc, k))
+            elif r < MIX[1][1]:
+                doc = docs[rng.integers(0, n)]
+                fut = _submit_with_retry(
+                    lambda: sched.submit_search("bench", doc, tau))
+            elif r < MIX[2][1]:
+                rows = docs[rng.integers(0, n, size=4)]
+                fut = _submit_with_retry(
+                    lambda: sched.submit_insert("bench", rows))
+            else:
+                with lock:
+                    victim = ids_pool[rng.integers(0, len(ids_pool))]
+                fut = _submit_with_retry(
+                    lambda: sched.submit_delete("bench", victim))
+            res = fut.result(timeout=300)
+            if r >= MIX[1][1] and r < MIX[2][1]:     # insert: bank new ids
+                with lock:
+                    ids_pool.extend(res.tolist())
+        except Exception as e:                       # noqa: BLE001
+            errors.append(e)
+            return
+
+
+def run(csv: Csv, datasets=("review",), clients: int = 8,
+        ops_per_client: int = 40, k: int = 10, tau: int = 2) -> None:
+    if common.SMOKE:
+        clients, ops_per_client = 4, 6
+    for name in datasets:
+        cfg, db, _ = make_dataset(name, n=cap_n(1 << 14))
+        n = len(db)
+        sched = Scheduler(config=SchedulerConfig(
+            max_batch=max(8, clients), max_queue=4 * clients + 64,
+            max_wait_ms=1.0))
+        sched.create_collection("bench", CollectionConfig(
+            L=cfg.L, b=cfg.b, delta_cap=max(256, n // 4)))
+        preload = sched.submit_insert("bench", db)
+        sched.start()
+        ids_pool = list(preload.result(timeout=600).tolist())
+        # warm every shape bucket the mix can dispatch before timing
+        warm = [sched.submit_topk("bench", db[i], k) for i in range(4)]
+        warm += [sched.submit_search("bench", db[i], tau) for i in range(4)]
+        for f in warm:
+            f.result(timeout=600)
+
+        lock = threading.Lock()
+        errors: list = []
+        threads = [
+            threading.Thread(target=_client, args=(
+                sched, db, ids_pool, lock,
+                np.random.default_rng(1000 + c), ops_per_client, k, tau,
+                errors))
+            for c in range(clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        sched.stop()
+        if errors:
+            raise errors[0]
+
+        total = clients * ops_per_client
+        snap = sched.stats()
+        lat = snap["latency"]
+        qps = total / dt
+        csv.add(f"serving/{name}/qps", dt / total * 1e6,
+                f"qps={qps:.0f};clients={clients};ops={total};"
+                f"rejected={snap['counters'].get('rejected_total', 0)}")
+        for op in ("topk", "search"):
+            if op in lat:
+                csv.add(f"serving/{name}/{op}_p50", lat[op]["p50_ms"] * 1e3,
+                        f"p50_ms={lat[op]['p50_ms']:.2f}")
+                csv.add(f"serving/{name}/{op}_p99", lat[op]["p99_ms"] * 1e3,
+                        f"p99_ms={lat[op]['p99_ms']:.2f}")
+        fill = snap["batch_fill_ratio"]
+        csv.add(f"serving/{name}/fill", 0.0,
+                f"fill={fill:.3f};cache_traces="
+                f"{snap['searcher_cache']['traces']}")
+        if not common.SMOKE:
+            # relational sanity: the runtime must actually coalesce —
+            # with 8 closed-loop clients the mean read batch must beat 1
+            batches = sum(v for kk, v in snap["counters"].items()
+                          if kk.startswith("batches_total:"))
+            reads = sum(lat[op]["count"] for op in ("topk", "search")
+                        if op in lat)
+            assert batches < reads, (batches, reads)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--ops", type=int, default=40,
+                    help="requests per closed-loop client")
+    ap.add_argument("--out", default=None,
+                    help="also write machine-readable JSON rows here")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        from . import common
+        common.set_smoke()
+    csv = Csv()
+    csv.header()
+    run(csv, clients=args.clients, ops_per_client=args.ops)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"suite": "serving", "smoke": args.smoke,
+                       "rows": csv.records}, f, indent=2)
+        print(f"# wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -78,13 +78,47 @@ def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
     return float(np.median(ts))
 
 
+def parse_derived(derived: str) -> Dict[str, object]:
+    """Parse a ``k=v;k=v`` derived string into a typed dict (ints and
+    floats coerced; bare tokens land under ``"notes"``).  The
+    machine-readable side of every benchmark row (``run.py --out``).
+
+    >>> parse_derived("qps=120;fill=0.5;mode=scan")
+    {'qps': 120, 'fill': 0.5, 'mode': 'scan'}
+    """
+    out: Dict[str, object] = {}
+    notes = []
+    for tok in filter(None, (t.strip() for t in derived.split(";"))):
+        if "=" not in tok:
+            notes.append(tok)
+            continue
+        k, v = tok.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    if notes:
+        out["notes"] = notes
+    return out
+
+
 class Csv:
+    """Benchmark row sink: human CSV lines + machine-readable records
+    (``records`` feeds ``run.py --out BENCH_<name>.json``)."""
+
     def __init__(self):
         self.rows: List[str] = []
+        self.records: List[Dict[str, object]] = []
 
     def add(self, name: str, us_per_call: float, derived: str = "") -> None:
         row = f"{name},{us_per_call:.2f},{derived}"
         self.rows.append(row)
+        self.records.append({"name": name,
+                             "us_per_call": round(float(us_per_call), 2),
+                             "derived": parse_derived(derived)})
         print(row, flush=True)
 
     def header(self) -> None:

@@ -2,17 +2,23 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--quick]`` prints
 ``name,us_per_call,derived`` CSV rows (plus the roofline table from the
-dry-run cache if present)."""
+dry-run cache if present).  ``--out BENCH_<name>.json`` additionally
+writes every row machine-readable (name, us_per_call, parsed derived
+k=v config) — the perf-trajectory artifact CI uploads per run."""
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import traceback
 
+import jax
+
 from . import (bench_batch, bench_fig7, bench_fig8, bench_ingest,
-               bench_table2, bench_table3, bench_table4, bench_topk,
-               bench_vertical, common, roofline)
+               bench_serving, bench_table2, bench_table3, bench_table4,
+               bench_topk, bench_vertical, common, roofline)
 from .common import Csv
 
 
@@ -26,6 +32,9 @@ def main(argv=None) -> int:
                          "are skipped")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names (table2,table3,...)")
+    ap.add_argument("--out", default=None, metavar="BENCH_<name>.json",
+                    help="write machine-readable results (per-row "
+                         "QPS/latency + parsed config) to this JSON file")
     args = ap.parse_args(argv)
     if args.smoke:
         common.set_smoke()
@@ -50,6 +59,10 @@ def main(argv=None) -> int:
             ms=(1, 8) if args.smoke else (1, 8, 64) if args.quick
             else (1, 8, 64, 256)),
         "ingest": lambda c: bench_ingest.run(c, datasets=("review",)),
+        "serving": lambda c: bench_serving.run(
+            c, datasets=("review",),
+            clients=4 if quick else 8,
+            ops_per_client=10 if quick else 40),
         "roofline": lambda c: roofline.run(c),
     }
     if args.only:
@@ -66,6 +79,20 @@ def main(argv=None) -> int:
         except Exception as e:
             failures.append((name, e))
             traceback.print_exc()
+    if args.out:
+        payload = {
+            "config": {"quick": args.quick, "smoke": args.smoke,
+                       "only": args.only,
+                       "backend": jax.default_backend(),
+                       "python": platform.python_version(),
+                       "platform": platform.platform()},
+            "suites": sorted(suites),
+            "failed": [n for n, _ in failures],
+            "rows": csv.records,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(csv.records)} rows to {args.out}")
     if failures:
         print(f"FAILED suites: {[n for n, _ in failures]}")
         return 1

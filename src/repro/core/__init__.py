@@ -6,16 +6,17 @@ from .cost_model import cost_multi, cost_single, frontier_capacities, sigs
 from .multi_index import (MultiIndex, build_multi_index, choose_plan,
                           clear_mi_searcher_cache, make_mi_searcher,
                           mi_search, mi_search_batch)
-from .search import (SearchResult, TopKResult, clear_searcher_cache,
-                     get_searcher, make_batch_searcher, make_searcher, search,
-                     searcher_cache_info, topk, topk_batch)
+from .search import (SearchResult, TopKResult, bucket_m,
+                     clear_searcher_cache, get_searcher, make_batch_searcher,
+                     make_searcher, search, searcher_cache_info, topk,
+                     topk_batch)
 from .segments import (Segment, SegmentedIndex, SegmentedSearchResult,
                        ShardedSegmentedIndex, tombstone_bits)
 
 __all__ = [
     "BitVector", "SketchIndex", "build_bst", "build_louds", "build_fst_style",
     "SearchResult", "make_searcher", "make_batch_searcher", "search",
-    "TopKResult", "topk", "topk_batch", "get_searcher",
+    "TopKResult", "topk", "topk_batch", "get_searcher", "bucket_m",
     "searcher_cache_info", "clear_searcher_cache",
     "MultiIndex", "build_multi_index", "mi_search", "mi_search_batch",
     "make_mi_searcher", "clear_mi_searcher_cache",

@@ -54,6 +54,25 @@ CAP_MAX_DEFAULT = 1 << 17
 LADDER_CAP_MAX = 1 << 22
 
 
+def bucket_m(m: int) -> int:
+    """Power-of-two query-batch shape bucket: the smallest 2^j >= m.
+    Batched searchers pad the query axis up to this bucket (and slice the
+    results back), so a stream of arbitrary client batch sizes touches
+    only O(log m_max) compiled traces instead of one per distinct m."""
+    if m < 1:
+        raise ValueError("batch must contain at least one query")
+    return 1 << (m - 1).bit_length()
+
+
+def _pad_rows(qs: jnp.ndarray, bucket: int) -> jnp.ndarray:
+    """Pad the leading (query) axis up to ``bucket`` rows by repeating the
+    last row — a real query, so pad rows can never overflow a frontier
+    harder than the rows already present (zeros could)."""
+    m = qs.shape[0]
+    pad = jnp.broadcast_to(qs[-1:], (bucket - m,) + qs.shape[1:])
+    return jnp.concatenate([qs, pad], axis=0)
+
+
 class SearchResult(NamedTuple):
     mask: jnp.ndarray        # (n,) bool — ids within τ of the query
     dist: jnp.ndarray        # (n,) int32 — exact distance where mask, BIG off
@@ -267,7 +286,7 @@ def _search_trace_batch(index: SketchIndex, qs: jnp.ndarray, *, tau: int,
 # (index, τ, cap) combinations (benchmarks) cannot grow without limit.
 _SEARCHER_CACHE: Dict[tuple, tuple] = {}
 _SEARCHER_CACHE_CAP = 128
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_CACHE_STATS = {"hits": 0, "misses": 0, "traces": 0}
 
 
 def _pin_cache_get(cache: dict, cap: int, key: tuple, obj, build):
@@ -286,15 +305,21 @@ def _pin_cache_get(cache: dict, cap: int, key: tuple, obj, build):
 
 
 def searcher_cache_info() -> Dict[str, int]:
-    """Process-level cache counters (a miss == one fresh jit trace)."""
+    """Process-level cache counters.  ``misses`` counts Python-cache
+    misses (one per new (index, τ, caps, block_m, with_live) key);
+    ``traces`` counts actual jit traces, including jit's own per-shape
+    re-specialization — with the power-of-two m-bucketing this stops
+    growing after one warmup per bucket, even under a varying-m query
+    stream."""
     return {"hits": _CACHE_STATS["hits"], "misses": _CACHE_STATS["misses"],
-            "size": len(_SEARCHER_CACHE)}
+            "traces": _CACHE_STATS["traces"], "size": len(_SEARCHER_CACHE)}
 
 
 def clear_searcher_cache() -> None:
     _SEARCHER_CACHE.clear()
     _CACHE_STATS["hits"] = 0
     _CACHE_STATS["misses"] = 0
+    _CACHE_STATS["traces"] = 0
 
 
 def get_searcher(index: SketchIndex, tau: int,
@@ -308,36 +333,64 @@ def get_searcher(index: SketchIndex, tau: int,
     ``fn(q_or_qs, id_live: (n,) bool) -> SearchResult`` (dead ids never
     survive; the liveness bitmap is a *traced* argument, so flipping
     tombstones never re-jits — the dynamic segmented index's fast path,
-    DESIGN.md §4)."""
+    DESIGN.md §4).
+
+    Batched searchers bucket the query axis: ``qs`` is padded up to
+    ``bucket_m(m)`` rows (repeating the last query) before the jitted
+    trace and the results are sliced back to m, so any client batch size
+    ``m <= bucket`` reuses one compiled trace per power-of-two bucket —
+    variable-size serving traffic stops re-jitting after one warmup per
+    bucket (DESIGN.md §5)."""
     caps = frontier_capacities(index.t, index.b, tau, cap_max)
     key = (id(index), tau, caps, block_m if batch else None, with_live)
+
+    def traced():
+        # runs only while jit traces the body: counts real traces,
+        # including per-shape re-specialization of one cached fn
+        _CACHE_STATS["traces"] += 1
 
     def build():
         if batch and with_live:
             @jax.jit
             def run(qs, id_live):
+                traced()
                 return _search_trace_batch(index, qs, tau=tau, caps=caps,
                                            block_m=block_m, id_live=id_live)
         elif batch:
             @jax.jit
             def run(qs):
+                traced()
                 return _search_trace_batch(index, qs, tau=tau, caps=caps,
                                            block_m=block_m)
         elif with_live:
             @jax.jit
             def run(q, id_live):
+                traced()
                 return _search_trace(index, q, tau=tau, caps=caps,
                                      id_live=id_live)
         else:
             @jax.jit
             def run(q):
+                traced()
                 return _search_trace(index, q, tau=tau, caps=caps)
         return run
 
     fn, hit = _pin_cache_get(_SEARCHER_CACHE, _SEARCHER_CACHE_CAP, key,
                              index, build)
     _CACHE_STATS["hits" if hit else "misses"] += 1
-    return fn
+    if not batch:
+        return fn
+
+    def bucketed(qs, *rest):
+        qs = jnp.asarray(qs)
+        m = qs.shape[0]
+        mb = bucket_m(m)
+        if mb == m:
+            return fn(qs, *rest)
+        res = fn(_pad_rows(qs, mb), *rest)
+        return SearchResult(*(a[:m] for a in res))
+
+    return bucketed
 
 
 def make_searcher(index: SketchIndex, tau: int,
@@ -353,7 +406,10 @@ def make_batch_searcher(index: SketchIndex, tau: int,
     """Natively batched searcher: (m, L) queries -> SearchResult with a
     leading query axis.  Unlike a vmap of the single-query trace, the
     whole batch shares one traversal (one children() gather per level)
-    and one query-tiled verify scan of the collapsed-path array."""
+    and one query-tiled verify scan of the collapsed-path array.  The
+    query axis is padded to the power-of-two ``bucket_m(m)`` internally
+    (results sliced back), so varying client batch sizes reuse one
+    compiled trace per bucket."""
     return get_searcher(index, tau, cap_max, batch=True, block_m=block_m)
 
 
@@ -454,8 +510,13 @@ def topk_batch(index: SketchIndex, qs: np.ndarray, k: int,
         if int(res.mask.sum(axis=1).min()) >= kk or tau >= index.L:
             break
         tau = min(index.L, max(tau + 1, 2 * tau))
-    dists, ids = _topk_select(kk)(res.dist)
-    dists, ids = _pad_topk(np.asarray(dists), np.asarray(ids), k)
+    # bucket the selection's query axis too: BIG pad rows select (-1, BIG)
+    # lanes that the final slice drops, so selection never re-traces per m
+    m, mb = res.dist.shape[0], bucket_m(res.dist.shape[0])
+    dist_in = res.dist if mb == m else jnp.concatenate(
+        [res.dist, jnp.full((mb - m, res.dist.shape[1]), BIG, jnp.int32)])
+    dists, ids = _topk_select(kk)(dist_in)
+    dists, ids = _pad_topk(np.asarray(dists)[:m], np.asarray(ids)[:m], k)
     # BIG lanes are non-results (possible when the capacity ladder
     # saturated with overflow): mask their arbitrary ids to the pad value
     ids = np.where(dists >= int(BIG), -1, ids)

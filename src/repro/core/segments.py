@@ -202,8 +202,17 @@ class SegmentedIndex:
         self._delta_vert: Optional[jnp.ndarray] = None  # cached (b, W, nd)
         self.counters = {"flushes": 0, "merges": 0, "compactions": 0,
                          "inserted": 0, "deleted": 0}
+        # write hook: fn(event: str, info: dict) fired after every
+        # lifecycle write ("insert" / "delete" / "flush" / "merge" /
+        # "compact") — the serving layer's metrics tap (DESIGN.md §5).
+        # Exceptions are the caller's problem; keep hooks cheap.
+        self.event_hook: Optional[object] = None
 
     # -- mutation --------------------------------------------------------
+
+    def _emit(self, event: str, **info) -> None:
+        if self.event_hook is not None:
+            self.event_hook(event, info)
 
     def insert(self, sketches: np.ndarray) -> np.ndarray:
         """Append sketches to the delta buffer; returns their (k,) int64
@@ -227,6 +236,7 @@ class SegmentedIndex:
             [self._delta_live, np.ones(k, bool)])
         self._delta_vert = None
         self.counters["inserted"] += k
+        self._emit("insert", rows=k)
         if len(self._delta_ids) >= self.delta_cap:
             self.flush()
             if self.auto_merge:
@@ -253,6 +263,7 @@ class SegmentedIndex:
             newly += int(live_arr[sel].sum())
             live_arr[sel] = False
         self.counters["deleted"] += newly
+        self._emit("delete", rows=newly)
         return newly
 
     def flush(self) -> Optional[Segment]:
@@ -268,6 +279,7 @@ class SegmentedIndex:
                           live=np.ones(len(ids), bool))
             self.segments.append(seg)
             self.counters["flushes"] += 1
+            self._emit("flush", rows=seg.n)
         self._delta_sk = np.zeros((0, self.L), np.uint8)
         self._delta_ids = np.zeros((0,), np.int64)
         self._delta_live = np.zeros((0,), bool)
@@ -300,6 +312,7 @@ class SegmentedIndex:
                 index=self._build(sk), sketches=sk, ids=ids,
                 live=np.ones(len(ids), bool)))
         self.counters["merges"] += 1
+        self._emit("merge", rows=int(len(ids)))
         return True
 
     def maybe_merge(self) -> int:
@@ -346,6 +359,8 @@ class SegmentedIndex:
             done += 1
         self.segments = [s for s in out if s is not None]
         self.counters["compactions"] += done
+        if done:
+            self._emit("compact", segments=done)
         return done
 
     # -- queries ---------------------------------------------------------
@@ -399,6 +414,13 @@ class SegmentedIndex:
         return int(self._delta_live.sum()) + sum(
             seg.n_live for seg in self.segments)
 
+    @property
+    def tombstones(self) -> int:
+        """Dead rows still physically held (reclaimable by merge/compact)
+        across the delta buffer and every segment."""
+        dead_delta = int((~self._delta_live).sum())
+        return dead_delta + sum(seg.n - seg.n_live for seg in self.segments)
+
     def __len__(self) -> int:
         return self.n_live
 
@@ -420,8 +442,10 @@ class SegmentedIndex:
         and the ingest benchmark)."""
         return {
             "n_ids": self.n_ids, "n_live": self.n_live,
+            "tombstones": self.tombstones,
             "delta_rows": int(len(self._delta_ids)),
             "delta_live": int(self._delta_live.sum()),
+            "n_segments": len(self.segments),
             "segments": [(seg.n, seg.n_live) for seg in self.segments],
             "space_bits": self.space_bits(), **self.counters,
         }
@@ -613,8 +637,14 @@ class ShardedSegmentedIndex:
     def space_bits(self) -> int:
         return sum(shard.space_bits() for shard in self.shards)
 
+    @property
+    def tombstones(self) -> int:
+        return sum(shard.tombstones for shard in self.shards)
+
     def stats(self) -> Dict[str, object]:
         return {"n_ids": self.n_ids, "n_live": self.n_live,
+                "tombstones": self.tombstones,
+                "n_segments": sum(len(s.segments) for s in self.shards),
                 "shards": [shard.stats() for shard in self.shards]}
 
     def _search_columns(self, qs: np.ndarray,

@@ -6,15 +6,16 @@ batch of prompts and decode N tokens (greedy), reporting tokens/s.
 
 ``--retrieval`` additionally demonstrates the paper's technique as a
 serving feature: the final hidden states of completed requests are
-0-bit-CWS-sketched and queried against a bST index of (synthetic)
-document sketches — batched Hamming-threshold retrieval as the RAG
-lookup step.
+0-bit-CWS-sketched and submitted as *individual* top-k requests to the
+serving scheduler (``repro.serving``), which coalesces them into one
+shape-bucketed dispatch — the RAG lookup step running through the real
+runtime rather than a raw searcher call.
 
-``--ingest`` serves the *dynamic* retrieval plane (DESIGN.md §4): a
-segmented index absorbs streaming document inserts and deletes through
-the ``ingest_insert`` / ``ingest_delete`` endpoints while answering
-top-k queries mid-stream — no model required, no rebuild, no blocked
-search.
+``--ingest`` serves the *dynamic* retrieval plane (DESIGN.md §4 + §5):
+a scheduler-fronted collection absorbs streaming document inserts and
+deletes while answering top-k queries mid-stream — bounded queues,
+micro-batched reads, writes interleaved re-jit-free — and ends with the
+``/stats``-style metrics dump.
 """
 
 from __future__ import annotations
@@ -28,79 +29,84 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.registry import ARCH_IDS, get_config
-from ..core.bst import build_bst
-from ..core.search import make_batch_searcher, topk_batch
-from ..core.segments import SegmentedIndex
 from ..core.sketch import zbit_cws
 from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
 from ..distributed.sharding import use_mesh
 from ..launch.mesh import make_host_mesh
 from ..models import model as M
+from ..serving import CollectionConfig, Scheduler, SchedulerConfig
 from ..train.steps import make_decode_step, make_prefill_step
 
 
 # ---------------------------------------------------------------------------
-# ingest endpoints (the mutation surface a serving frontend would expose;
-# the --ingest mode below drives them as a demo traffic generator)
+# serving-runtime helpers (shared by --ingest and --retrieval)
 # ---------------------------------------------------------------------------
 
-def ingest_insert(index: SegmentedIndex, sketches: np.ndarray) -> np.ndarray:
-    """Insert endpoint: (k, L) uint8 document sketches -> (k,) int64
-    stable doc ids.  Sealing/merging happens inside the index without
-    blocking concurrent searches."""
-    return index.insert(sketches)
-
-
-def ingest_delete(index: SegmentedIndex, doc_ids: np.ndarray) -> int:
-    """Delete endpoint: tombstones doc ids, returns how many were newly
-    removed.  O(k log n); compiled searchers stay warm (liveness is a
-    traced argument, never a recompile)."""
-    return index.delete(doc_ids)
+def make_scheduler(args, L: int, b: int, name: str = "docs") -> Scheduler:
+    """One scheduler fronting one collection with the CLI's knobs."""
+    sched = Scheduler(config=SchedulerConfig(
+        max_batch=args.max_batch, max_queue=args.max_queue,
+        max_wait_ms=args.max_wait_ms))
+    sched.create_collection(name, CollectionConfig(
+        L=L, b=b, delta_cap=args.delta_cap,
+        block_m=args.block_m or DEFAULT_BLOCK_M))
+    return sched
 
 
 def run_ingest(args) -> int:
     """--ingest mode: stream synthetic document sketches through the
-    insert/delete endpoints and serve top-k queries mid-stream."""
+    scheduler's insert/delete surface and serve top-k queries mid-stream,
+    ending with the /stats metrics dump."""
     L, b = 32, 4
     rng = np.random.default_rng(args.seed)
     n = args.index_size
     docs = rng.integers(0, 1 << b, size=(n, L), dtype=np.uint8)
-    index = SegmentedIndex(L, b, delta_cap=args.delta_cap,
-                           block_m=args.block_m or DEFAULT_BLOCK_M)
+    sched = make_scheduler(args, L, b).start()
+    index = sched.registry.get("docs").index
 
     chunk = max(64, n // 16)
     t0 = time.time()
-    ids = np.zeros((0,), np.int64)
+    id_futs = []
     for lo in range(0, n, chunk):
-        ids = np.concatenate(
-            [ids, ingest_insert(index, docs[lo:lo + chunk])])
-        if lo == chunk * 4:   # mid-stream query traffic
-            qs = docs[rng.integers(0, lo, args.batch)]
-            nn = index.topk_batch(qs, args.topk)
+        id_futs.append(sched.submit_insert("docs", docs[lo:lo + chunk]))
+        if lo == chunk * 4:   # mid-stream query traffic, coalesced by the
+            # scheduler into shape-bucketed dispatches between inserts
+            futs = [sched.submit_topk("docs", q, args.topk)
+                    for q in docs[rng.integers(0, lo, args.batch)]]
+            nn = [f.result() for f in futs]
             st = index.stats()
             print(f"mid-stream topk over {st['n_live']} live docs "
-                  f"({len(st['segments'])} segments + {st['delta_rows']} "
-                  f"delta rows): tau*={nn.tau}")
+                  f"({st['n_segments']} segments + {st['delta_rows']} "
+                  f"delta rows): tau*={nn[0].tau}")
+    ids = np.concatenate([f.result() for f in id_futs])
     dt = time.time() - t0
     print(f"ingested {n} docs in {dt:.2f}s ({n / dt:.0f} inserts/s, "
           f"{index.counters['merges']} background merges)")
 
-    removed = ingest_delete(index, ids[rng.choice(n, n // 8, replace=False)])
+    removed = sched.submit_delete(
+        "docs", ids[rng.choice(n, n // 8, replace=False)]).result()
     index.flush()
     index.maybe_merge()
     index.compact(min_dead_frac=0.25)
     st = index.stats()
     print(f"deleted {removed}; stack now {st['segments']} "
-          f"(space {st['space_bits'] / 8 / 1024:.1f} KiB incl. tombstones)")
+          f"(space {st['space_bits'] / 8 / 1024:.1f} KiB incl. tombstones, "
+          f"{st['tombstones']} tombstones held)")
 
     qs = docs[rng.integers(0, n, args.batch)]
     t0 = time.time()
-    nn = index.topk_batch(qs, args.topk)
+    futs = [sched.submit_topk("docs", q, args.topk) for q in qs]
+    nn = [f.result() for f in futs]
     dt = time.time() - t0
     for r in range(min(args.batch, 4)):
-        print(f"  request {r}: top-{args.topk} docs {np.asarray(nn.ids[r])} "
-              f"at distances {np.asarray(nn.dists[r])} (tau*={nn.tau})")
-    print(f"post-merge batched topk: {dt / args.batch * 1e3:.1f} ms/query")
+        print(f"  request {r}: top-{args.topk} docs {nn[r].ids} "
+              f"at distances {nn[r].dists} (tau*={nn[r].tau})")
+    print(f"post-merge scheduled topk: {dt / args.batch * 1e3:.1f} "
+          f"ms/query (batch-fill "
+          f"{sched.metrics.batch_fill_ratio():.2f})")
+    sched.stop()
+    print("--- /stats ---")
+    print(sched.render_stats())
     return 0
 
 
@@ -113,12 +119,19 @@ def main(argv=None):
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--retrieval", action="store_true")
     ap.add_argument("--ingest", action="store_true",
-                    help="streaming-ingest retrieval plane: dynamic "
-                         "segmented index + insert/delete endpoints "
-                         "(model-free; see DESIGN.md §4)")
+                    help="streaming-ingest retrieval plane: scheduler-"
+                         "fronted dynamic segmented index (model-free; "
+                         "see DESIGN.md §4-§5)")
     ap.add_argument("--delta-cap", type=int, default=2048,
                     help="delta-buffer rows before a segment seals "
                          "(--ingest)")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="most queries the scheduler coalesces into one "
+                         "read dispatch")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="per-collection queue bound (overload rejects)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="partial-batch flush deadline")
     ap.add_argument("--index-size", type=int, default=4096)
     ap.add_argument("--tau", type=int, default=3)
     ap.add_argument("--topk", type=int, default=3,
@@ -169,32 +182,34 @@ def main(argv=None):
 
         if args.retrieval:
             # the paper's technique as the retrieval plane: hidden-state
-            # sketches -> bST Hamming search
+            # sketches -> scheduler-fronted bST Hamming search.  Each
+            # completed request submits its own top-k lookup; the
+            # scheduler coalesces them into one shape-bucketed dispatch.
             L, b = 32, 4
             key = jax.random.PRNGKey(7)
             docs = rng.random((args.index_size, 64)).astype(np.float32)
             doc_sk = np.asarray(zbit_cws(key, jnp.asarray(docs), L=L, b=b))
-            index = build_bst(doc_sk, b)
+            sched = make_scheduler(args, L, b)
+            sched.submit_insert("docs", doc_sk)
             # query: final hidden state of each request, hashed the same way
             h = jax.nn.softmax(logits, axis=-1) @ params[
                 "embed" if "embed" in params else "lm_head"].astype(jnp.float32)
             q = jnp.abs(h[:, :64]) if h.shape[-1] >= 64 else jnp.pad(
                 jnp.abs(h), ((0, 0), (0, 64 - h.shape[-1])))
-            q_sk = zbit_cws(key, q, L=L, b=b)
-            # natively batched searcher: the whole request batch shares
-            # one 2D-frontier traversal + one query-tiled verify scan
-            block_m = args.block_m or DEFAULT_BLOCK_M
-            res = make_batch_searcher(index, args.tau, block_m=block_m)(q_sk)
-            hits = np.asarray(res.mask).sum(axis=1)
+            q_sk = np.asarray(zbit_cws(key, q, L=L, b=b))
+            range_futs = [sched.submit_search("docs", qr, args.tau)
+                          for qr in q_sk]
+            topk_futs = [sched.submit_topk("docs", qr, args.topk)
+                         for qr in q_sk]
+            sched.pump()     # synchronous drive on the serving thread
+            hits = np.array([f.result().mask.sum() for f in range_futs])
             print(f"retrieval: tau={args.tau} hits per request: {hits} "
-                  f"(batched verify tile block_m={block_m})")
-            # top-k nearest documents (τ-escalation ladder + exact
-            # distances out of the same compiled searcher cache)
-            nn = topk_batch(index, q_sk, args.topk, block_m=block_m)
-            for r in range(args.batch):
-                print(f"  request {r}: top-{args.topk} docs "
-                      f"{np.asarray(nn.ids[r])} at distances "
-                      f"{np.asarray(nn.dists[r])} (tau*={nn.tau})")
+                  f"(scheduler batch-fill "
+                  f"{sched.metrics.batch_fill_ratio():.2f})")
+            for r, f in enumerate(topk_futs):
+                nn = f.result()
+                print(f"  request {r}: top-{args.topk} docs {nn.ids} "
+                      f"at distances {nn.dists} (tau*={nn.tau})")
     return 0
 
 

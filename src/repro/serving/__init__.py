@@ -1,0 +1,36 @@
+"""Serving runtime: async micro-batching scheduler over the segmented
+index (DESIGN.md §5).
+
+The layer between clients and the compiled searchers: a per-collection
+request queue with dynamic micro-batching (power-of-two shape buckets →
+zero steady-state re-jits), write interleaving (inserts/deletes fence
+reads but never recompile), bounded queues with explicit overload
+rejection, a multi-tenant collection registry, and ``/stats``-style
+metrics.
+
+>>> import numpy as np
+>>> from repro.serving import CollectionConfig, Scheduler
+>>> sched = Scheduler()
+>>> _ = sched.create_collection("docs", CollectionConfig(L=8, b=2))
+>>> fut = sched.submit_insert("docs", np.zeros((3, 8), np.uint8))
+>>> nn = sched.submit_topk("docs", np.zeros(8, np.uint8), k=2)
+>>> _ = sched.pump()            # synchronous drive (or .start() threads)
+>>> fut.result().tolist()
+[0, 1, 2]
+>>> nn.result().ids.tolist()
+[0, 1]
+"""
+
+from .batching import bucket_m, bucket_table, pad_to_bucket
+from .collections import Collection, CollectionConfig, CollectionRegistry
+from .metrics import LatencyWindow, ServingMetrics
+from .scheduler import (OverloadError, Scheduler, SchedulerConfig,
+                        SearchResponse, TopKResponse)
+
+__all__ = [
+    "bucket_m", "bucket_table", "pad_to_bucket",
+    "Collection", "CollectionConfig", "CollectionRegistry",
+    "LatencyWindow", "ServingMetrics",
+    "OverloadError", "Scheduler", "SchedulerConfig",
+    "SearchResponse", "TopKResponse",
+]

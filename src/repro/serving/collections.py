@@ -1,0 +1,119 @@
+"""Collection registry: multiple independent dynamic indexes behind one
+scheduler (DESIGN.md §5).
+
+A **collection** is one named corpus — its own ``SegmentedIndex`` (or
+``ShardedSegmentedIndex``), its own (b, L) sketch geometry, backend, and
+merge policy.  Tenants are isolated at the collection level: requests
+queue per collection, a merge or compaction in one collection never
+blocks another, and global ids are scoped per collection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional
+
+from ..core.segments import BACKENDS, SegmentedIndex, ShardedSegmentedIndex
+from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
+
+__all__ = ["CollectionConfig", "Collection", "CollectionRegistry"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectionConfig:
+    """Per-collection geometry + maintenance policy.
+
+    Attributes:
+      L, b:         sketch length / bits per character (Σ = [0, 2^b)).
+      backend:      segment backend — "bst" (default), "multi", "sharded".
+      delta_cap:    delta-buffer rows before a segment seals.
+      auto_merge:   run the size-tiered merge policy after auto-flushes.
+      compact_dead_frac: when set, the scheduler opportunistically
+                    compacts segments whose dead fraction exceeds this
+                    after a delete (None = manual compaction only).
+      n_stacks:     > 1 builds a ``ShardedSegmentedIndex`` with this many
+                    independent per-shard segment stacks.
+      mi_blocks / n_shards / lam / block_m: forwarded to the index.
+    """
+
+    L: int
+    b: int
+    backend: str = "bst"
+    delta_cap: int = 4096
+    auto_merge: bool = True
+    compact_dead_frac: Optional[float] = None
+    n_stacks: int = 1
+    mi_blocks: int = 2
+    n_shards: int = 4
+    lam: float = 0.5
+    block_m: int = DEFAULT_BLOCK_M
+
+    def create(self):
+        """Instantiate the configured dynamic index."""
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}")
+        kw = dict(delta_cap=self.delta_cap, backend=self.backend,
+                  lam=self.lam, auto_merge=self.auto_merge,
+                  block_m=self.block_m)
+        if self.n_stacks > 1:
+            return ShardedSegmentedIndex(self.L, self.b, self.n_stacks, **kw)
+        return SegmentedIndex(self.L, self.b, mi_blocks=self.mi_blocks,
+                              n_shards=self.n_shards, **kw)
+
+
+@dataclasses.dataclass
+class Collection:
+    """One registered collection: config + live index."""
+
+    name: str
+    config: CollectionConfig
+    index: object
+
+    def stats(self) -> Dict[str, object]:
+        return self.index.stats()
+
+
+class CollectionRegistry:
+    """Thread-safe name -> Collection map.
+
+    >>> reg = CollectionRegistry()
+    >>> _ = reg.create("docs", CollectionConfig(L=8, b=2))
+    >>> reg.names()
+    ['docs']
+    >>> reg.get("docs").config.b
+    2
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._collections: Dict[str, Collection] = {}
+
+    def create(self, name: str, config: CollectionConfig) -> Collection:
+        with self._lock:
+            if name in self._collections:
+                raise ValueError(f"collection {name!r} already exists")
+            coll = Collection(name=name, config=config, index=config.create())
+            self._collections[name] = coll
+            return coll
+
+    def get(self, name: str) -> Collection:
+        with self._lock:
+            try:
+                return self._collections[name]
+            except KeyError:
+                raise KeyError(f"unknown collection {name!r}") from None
+
+    def drop(self, name: str) -> None:
+        with self._lock:
+            self._collections.pop(name, None)
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._collections)
+
+    def stats(self) -> Dict[str, Dict[str, object]]:
+        """Per-collection index stats (occupancy, segments, tombstones)."""
+        with self._lock:
+            colls = list(self._collections.values())
+        return {c.name: c.stats() for c in colls}

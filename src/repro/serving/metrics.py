@@ -1,0 +1,157 @@
+"""Serving metrics: latency percentiles, throughput counters, batching
+efficiency, and a ``/stats``-style text dump (DESIGN.md §5).
+
+One ``ServingMetrics`` instance is shared by a scheduler and all its
+collections.  Latencies are kept in bounded per-op ring buffers (recent
+window, not full history) so a long-lived server's percentile cost stays
+O(window); counters are plain monotone integers.  All mutators take an
+internal lock — the scheduler records from its worker threads while
+``snapshot()`` / ``render_text()`` may be called from any thread.
+
+Cache efficiency is read straight from the process-level compiled-
+searcher cache (``repro.core.search.searcher_cache_info``): ``hits`` /
+``misses`` are Python-cache lookups, ``traces`` counts actual jit
+traces — the number that must stop growing once every shape bucket is
+warm.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.search import searcher_cache_info
+
+__all__ = ["LatencyWindow", "ServingMetrics"]
+
+
+class LatencyWindow:
+    """Bounded ring buffer of recent latency samples (seconds)."""
+
+    def __init__(self, window: int = 2048):
+        self.samples = collections.deque(maxlen=window)
+        self.count = 0          # total ever recorded (not windowed)
+        self.total = 0.0        # total seconds ever recorded
+
+    def add(self, seconds: float) -> None:
+        self.samples.append(seconds)
+        self.count += 1
+        self.total += seconds
+
+    def percentile(self, p: float) -> float:
+        if not self.samples:
+            return 0.0
+        return float(np.percentile(np.asarray(self.samples), p))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "count": self.count,
+            "mean_ms": (self.total / self.count * 1e3) if self.count else 0.0,
+            "p50_ms": self.percentile(50) * 1e3,
+            "p99_ms": self.percentile(99) * 1e3,
+        }
+
+
+class ServingMetrics:
+    """Counters + latency windows for one scheduler.
+
+    * ``record_latency(op, s)`` — end-to-end (enqueue -> complete).
+    * ``record_exec(op, s)``    — device dispatch only.
+    * ``record_batch(op, size, bucket)`` — one coalesced read dispatch;
+      feeds batches_total and the batch-fill ratio (Σsize / Σbucket).
+    * ``inc(name, n)``          — plain counters (``requests_total:<op>``,
+      ``rejected_total``, ``write_ops_total``, ...).
+    """
+
+    def __init__(self, window: int = 2048):
+        self._lock = threading.Lock()
+        self._window = window
+        self.latency: Dict[str, LatencyWindow] = {}
+        self.exec_latency: Dict[str, LatencyWindow] = {}
+        self.counters: Dict[str, int] = collections.defaultdict(int)
+        self.batch_sizes = 0
+        self.batch_buckets = 0
+
+    # -- recording -------------------------------------------------------
+
+    def _win(self, table: Dict[str, LatencyWindow], op: str) -> LatencyWindow:
+        win = table.get(op)
+        if win is None:
+            win = table[op] = LatencyWindow(self._window)
+        return win
+
+    def record_latency(self, op: str, seconds: float) -> None:
+        with self._lock:
+            self._win(self.latency, op).add(seconds)
+
+    def record_exec(self, op: str, seconds: float) -> None:
+        with self._lock:
+            self._win(self.exec_latency, op).add(seconds)
+
+    def record_batch(self, op: str, size: int, bucket: int) -> None:
+        with self._lock:
+            self.counters[f"batches_total:{op}"] += 1
+            self.batch_sizes += int(size)
+            self.batch_buckets += int(bucket)
+
+    def inc(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self.counters[name] += n
+
+    # -- export ----------------------------------------------------------
+
+    def batch_fill_ratio(self) -> float:
+        """Real queries / dispatched bucket rows across all read batches
+        (1.0 = every dispatch exactly filled its power-of-two bucket)."""
+        return self.batch_sizes / self.batch_buckets if self.batch_buckets \
+            else 0.0
+
+    def snapshot(self) -> Dict[str, object]:
+        """One coherent dict of everything: counters, per-op latency
+        summaries (count / mean / p50 / p99 ms), batch fill, and the
+        compiled-searcher cache counters."""
+        with self._lock:
+            out: Dict[str, object] = {
+                "counters": dict(self.counters),
+                "latency": {op: w.summary() for op, w in self.latency.items()},
+                "exec_latency": {op: w.summary()
+                                 for op, w in self.exec_latency.items()},
+                "batch_fill_ratio": self.batch_fill_ratio(),
+            }
+        cache = searcher_cache_info()
+        lookups = cache["hits"] + cache["misses"]
+        cache["hit_rate"] = cache["hits"] / lookups if lookups else 0.0
+        out["searcher_cache"] = cache
+        return out
+
+    def render_text(self, extra: Optional[Dict[str, object]] = None) -> str:
+        """``/stats``-style flat text dump: one ``name value`` line per
+        metric (Prometheus-exposition flavored; labels use ``{op="..."}``).
+        ``extra`` appends pre-flattened gauge lines (queue depths, index
+        occupancy) supplied by the scheduler."""
+        snap = self.snapshot()
+        lines: List[str] = []
+        for name, val in sorted(snap["counters"].items()):
+            if ":" in name:
+                base, op = name.split(":", 1)
+                lines.append(f'serving_{base}{{op="{op}"}} {val}')
+            else:
+                lines.append(f"serving_{name} {val}")
+        for table, label in ((snap["latency"], "latency"),
+                             (snap["exec_latency"], "exec_latency")):
+            for op, s in sorted(table.items()):
+                for stat in ("p50_ms", "p99_ms", "mean_ms"):
+                    lines.append(
+                        f'serving_{label}_{stat}{{op="{op}"}} '
+                        f"{s[stat]:.3f}")
+        lines.append(f"serving_batch_fill_ratio "
+                     f"{snap['batch_fill_ratio']:.4f}")
+        for k, v in sorted(snap["searcher_cache"].items()):
+            val = f"{v:.4f}" if isinstance(v, float) else str(v)
+            lines.append(f"searcher_cache_{k} {val}")
+        for k, v in sorted((extra or {}).items()):
+            lines.append(f"{k} {v}")
+        return "\n".join(lines) + "\n"

@@ -1,0 +1,416 @@
+"""Async micro-batching request scheduler over the segmented index
+(DESIGN.md §5).
+
+One ``Scheduler`` fronts a ``CollectionRegistry``: clients submit
+single-request ``search`` / ``topk`` / ``insert`` / ``delete`` ops and
+get a ``concurrent.futures.Future`` back.  Requests queue **per
+collection** (tenant isolation: one collection's merge or burst never
+blocks another's queue) and are executed by one worker per collection
+(threaded mode) or by an explicit ``pump()`` (synchronous mode — used by
+the deterministic property tests and single-threaded drivers).
+
+Execution model, per collection queue:
+
+  * **Reads coalesce, writes fence.**  The worker takes the longest
+    prefix of queued reads that share the head request's batch key
+    (``("search", τ)`` or ``("topk", k, τ0)``), up to
+    ``SchedulerConfig.max_batch`` queries; a queued write is a barrier —
+    reads behind it must observe it, so they stay queued.  Reads commute
+    with reads, which makes any coalescing order bit-identical to
+    sequential execution (the batched searchers are bit-identical per
+    row; this is the scheduler's core correctness property, held by
+    ``tests/test_serving.py``).
+  * **Shape buckets.**  A group of g queries is padded to the
+    power-of-two ``bucket_m(g)`` rows and results are sliced back, so
+    every dispatch hits an already-compiled ``(index, τ/k, block_m,
+    bucket)`` searcher after one warmup per bucket — a varying-size
+    request stream causes zero steady-state re-jits.
+  * **Max-wait flush.**  A partially filled read batch waits at most
+    ``max_wait_ms`` (measured from its oldest request) for more
+    arrivals; a write landing behind the read prefix flushes it
+    immediately (nothing can join the prefix anymore).
+  * **Admission control.**  Queues are bounded (``max_queue``); a full
+    queue rejects new work with ``OverloadError`` at submit time instead
+    of queueing unboundedly — overload is explicit, not silent latency.
+  * **Writes interleave re-jit-free.**  ``insert`` lands in the delta
+    buffer, ``delete`` flips traced tombstone bits; neither invalidates
+    a compiled searcher, so read batches stream on between writes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Deque, Dict, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from ..core.search import TopKResult
+from .batching import bucket_m, pad_to_bucket
+from .collections import Collection, CollectionConfig, CollectionRegistry
+from .metrics import ServingMetrics
+
+__all__ = ["OverloadError", "SchedulerConfig", "Scheduler",
+           "SearchResponse", "TopKResponse"]
+
+_WRITES = ("insert", "delete")
+
+
+class OverloadError(RuntimeError):
+    """Raised at submit time when a collection's queue is full."""
+
+
+class SearchResponse(NamedTuple):
+    mask: np.ndarray     # (n_ids,) bool — live ids within τ
+    dist: np.ndarray     # (n_ids,) int32 — exact distance where mask, BIG off
+    overflow: int        # total dropped frontier entries of the dispatch
+
+
+class TopKResponse(NamedTuple):
+    ids: np.ndarray      # (k,) int32 global ids, ascending (distance, id)
+    dists: np.ndarray    # (k,) int32 exact distances; BIG on pad
+    tau: int             # final ladder rung of the dispatch (batch-shared)
+    overflow: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Batching and admission-control knobs.
+
+    Attributes:
+      max_batch:   most queries coalesced into one read dispatch (the
+                   largest shape bucket is ``bucket_m(max_batch)``).
+      max_queue:   per-collection bound on queued requests; beyond it
+                   ``submit_*`` raises ``OverloadError``.
+      max_wait_ms: longest a partially filled read batch waits for more
+                   arrivals before flushing (threaded mode; ``pump()``
+                   always flushes immediately).
+    """
+
+    max_batch: int = 64
+    max_queue: int = 1024
+    max_wait_ms: float = 2.0
+
+
+@dataclasses.dataclass(eq=False)      # identity equality: requests are
+class _Request:                       # queue entries, never value-compared
+    op: str                       # "search" | "topk" | "insert" | "delete"
+    key: tuple                    # reads: batch key; writes: (op,)
+    payload: dict
+    future: Future
+    t_enq: float
+
+
+class _CollState:
+    """Per-collection queue + condition variable."""
+
+    def __init__(self):
+        self.queue: Deque[_Request] = deque()
+        self.cond = threading.Condition()
+
+
+class Scheduler:
+    """Micro-batching front end over a ``CollectionRegistry``.
+
+    Threaded mode: ``start()`` spawns one worker per collection;
+    ``stop()`` drains every queue and joins.  Synchronous mode: skip
+    ``start()`` and call ``pump()`` to drain queues deterministically on
+    the caller's thread (batching behaves identically, minus the
+    max-wait timer).
+    """
+
+    def __init__(self, registry: Optional[CollectionRegistry] = None,
+                 config: Optional[SchedulerConfig] = None,
+                 metrics: Optional[ServingMetrics] = None):
+        self.registry = registry if registry is not None \
+            else CollectionRegistry()
+        self.config = config if config is not None else SchedulerConfig()
+        self.metrics = metrics if metrics is not None else ServingMetrics()
+        self._states: Dict[str, _CollState] = {}
+        self._states_lock = threading.Lock()
+        self._workers: Dict[str, threading.Thread] = {}
+        self._started = False
+        self._stopping = False
+
+    # -- collection management -------------------------------------------
+
+    def create_collection(self, name: str,
+                          config: CollectionConfig) -> Collection:
+        """Register a collection and tap its index's write events into
+        the metrics (``maintenance_total:flush|merge|compact`` ...)."""
+        coll = self.registry.create(name, config)
+        for idx in getattr(coll.index, "shards", [coll.index]):
+            idx.event_hook = self._maintenance_hook
+        self._ensure_state(name)
+        return coll
+
+    def _maintenance_hook(self, event: str, info: dict) -> None:
+        self.metrics.inc(f"maintenance_total:{event}")
+
+    def _ensure_state(self, name: str) -> _CollState:
+        with self._states_lock:
+            state = self._states.get(name)
+            if state is None:
+                state = self._states[name] = _CollState()
+                if self._started and not self._stopping:
+                    self._spawn_worker(name)
+            return state
+
+    # -- submission ------------------------------------------------------
+
+    def _submit(self, name: str, op: str, key: tuple,
+                payload: dict) -> Future:
+        self.registry.get(name)            # raises KeyError if unknown
+        state = self._ensure_state(name)
+        fut: Future = Future()
+        req = _Request(op=op, key=key, payload=payload, future=fut,
+                       t_enq=time.perf_counter())
+        with state.cond:
+            if self._stopping:
+                raise RuntimeError("scheduler is stopped")
+            if len(state.queue) >= self.config.max_queue:
+                self.metrics.inc("rejected_total")
+                raise OverloadError(
+                    f"collection {name!r} queue full "
+                    f"({self.config.max_queue} requests)")
+            state.queue.append(req)
+            state.cond.notify_all()
+        self.metrics.inc(f"requests_total:{op}")
+        return fut
+
+    def submit_search(self, collection: str, q: np.ndarray,
+                      tau: int) -> Future:
+        """One range query -> Future[SearchResponse].  Coalesces with
+        other queued ``(collection, τ)`` searches."""
+        q = np.asarray(q, dtype=np.uint8)
+        return self._submit(collection, "search", ("search", int(tau)),
+                            {"q": q})
+
+    def submit_topk(self, collection: str, q: np.ndarray, k: int,
+                    tau0: Optional[int] = None) -> Future:
+        """One kNN query -> Future[TopKResponse].  Coalesces with other
+        queued ``(collection, k, τ0)`` lookups."""
+        q = np.asarray(q, dtype=np.uint8)
+        return self._submit(collection, "topk",
+                            ("topk", int(k),
+                             None if tau0 is None else int(tau0)),
+                            {"q": q})
+
+    def submit_insert(self, collection: str,
+                      sketches: np.ndarray) -> Future:
+        """Insert -> Future[(k,) int64 global ids]."""
+        return self._submit(collection, "insert", ("insert",),
+                            {"sketches": np.asarray(sketches,
+                                                    dtype=np.uint8)})
+
+    def submit_delete(self, collection: str, ids) -> Future:
+        """Delete -> Future[int newly-removed count]."""
+        return self._submit(collection, "delete", ("delete",),
+                            {"ids": np.atleast_1d(np.asarray(ids,
+                                                             np.int64))})
+
+    # -- batch formation -------------------------------------------------
+
+    def _peek_read_group(self, state: _CollState) \
+            -> Tuple[List[_Request], bool]:
+        """The coalescible read prefix: requests matching the head's
+        batch key, stopping the scan at the first write (a fence).
+        Returns (group, fence_seen)."""
+        head = state.queue[0]
+        group: List[_Request] = []
+        for req in state.queue:
+            if req.op in _WRITES:
+                return group, True
+            if req.key == head.key:
+                group.append(req)
+                if len(group) >= self.config.max_batch:
+                    break            # a full group flushes regardless
+        return group, False
+
+    def _next_batch(self, state: _CollState,
+                    block: bool) -> Optional[List[_Request]]:
+        """Pop the next executable batch (one write, or a coalesced read
+        group).  ``block=True`` (worker threads) waits for work and holds
+        partially filled read batches up to max_wait; ``block=False``
+        (``pump``) flushes whatever is queued and returns None on empty."""
+        max_wait = self.config.max_wait_ms / 1e3
+        with state.cond:
+            while True:
+                if not state.queue:
+                    if not block or self._stopping:
+                        return None
+                    state.cond.wait(timeout=0.1)
+                    continue
+                head = state.queue[0]
+                if head.op in _WRITES:
+                    state.queue.popleft()
+                    return [head]
+                group, fence = self._peek_read_group(state)
+                deadline = head.t_enq + max_wait
+                if (not block or fence or self._stopping
+                        or len(group) >= self.config.max_batch
+                        or time.perf_counter() >= deadline):
+                    picked = set(map(id, group))   # one O(queue) rebuild
+                    state.queue = deque(
+                        r for r in state.queue if id(r) not in picked)
+                    return group
+                state.cond.wait(
+                    timeout=max(deadline - time.perf_counter(), 0.0))
+
+    # -- execution -------------------------------------------------------
+
+    def _execute(self, name: str, batch: List[_Request]) -> None:
+        coll = self.registry.get(name)
+        op = batch[0].op
+        try:
+            if op in _WRITES:
+                self._execute_write(coll, batch[0])
+            else:
+                self._execute_reads(coll, batch)
+        except Exception as e:                     # noqa: BLE001
+            for req in batch:
+                if not req.future.done():
+                    req.future.set_exception(e)
+        for req in batch:
+            self.metrics.record_latency(
+                op, time.perf_counter() - req.t_enq)
+
+    def _execute_reads(self, coll: Collection,
+                       batch: List[_Request]) -> None:
+        op, key = batch[0].op, batch[0].key
+        g = len(batch)
+        qs = pad_to_bucket(np.stack([r.payload["q"] for r in batch]))
+        t0 = time.perf_counter()
+        if op == "search":
+            tau = key[1]
+            res = coll.index.search_batch(qs, tau)
+            self.metrics.record_exec(op, time.perf_counter() - t0)
+            overflow = int(res.overflow)
+            for i, req in enumerate(batch):
+                req.future.set_result(SearchResponse(
+                    mask=np.asarray(res.mask[i]),
+                    dist=np.asarray(res.dist[i]), overflow=overflow))
+        else:
+            k, tau0 = key[1], key[2]
+            res: TopKResult = coll.index.topk_batch(qs, k, tau0=tau0)
+            self.metrics.record_exec(op, time.perf_counter() - t0)
+            ids, dists = np.asarray(res.ids), np.asarray(res.dists)
+            for i, req in enumerate(batch):
+                req.future.set_result(TopKResponse(
+                    ids=ids[i], dists=dists[i], tau=int(res.tau),
+                    overflow=int(res.overflow)))
+        self.metrics.record_batch(op, g, bucket_m(g))
+
+    def _execute_write(self, coll: Collection, req: _Request) -> None:
+        t0 = time.perf_counter()
+        if req.op == "insert":
+            result = coll.index.insert(req.payload["sketches"])
+        else:
+            result = coll.index.delete(req.payload["ids"])
+            frac = coll.config.compact_dead_frac
+            if frac is not None:
+                coll.index.compact(min_dead_frac=frac)
+        self.metrics.record_exec(req.op, time.perf_counter() - t0)
+        self.metrics.inc("write_ops_total")
+        req.future.set_result(result)
+
+    # -- drive -----------------------------------------------------------
+
+    def start(self) -> "Scheduler":
+        """Spawn one worker thread per registered collection."""
+        # _started flips under _states_lock so a concurrent
+        # create_collection() cannot race us into spawning a second
+        # worker on one queue (which would let a read pass a write fence)
+        with self._states_lock:
+            if self._started:
+                return self
+            self._started = True
+            self._stopping = False
+            for name in self._states:
+                self._spawn_worker(name)
+        return self
+
+    def _spawn_worker(self, name: str) -> None:
+        prev = self._workers.get(name)
+        if prev is not None and prev.is_alive():
+            return                          # one worker per queue, ever
+        t = threading.Thread(target=self._worker, args=(name,),
+                             name=f"serving-{name}", daemon=True)
+        self._workers[name] = t
+        t.start()
+
+    def _worker(self, name: str) -> None:
+        state = self._ensure_state(name)
+        while True:
+            batch = self._next_batch(state, block=True)
+            if batch is None:
+                return                      # stopping and drained
+            if batch:
+                self._execute(name, batch)
+
+    def stop(self) -> None:
+        """Drain every queue (outstanding futures complete) and join the
+        workers.  Subsequent submits raise."""
+        self._stopping = True
+        with self._states_lock:
+            states = list(self._states.values())
+        for state in states:
+            with state.cond:
+                state.cond.notify_all()
+        for t in self._workers.values():
+            t.join(timeout=60.0)
+        self._workers.clear()
+        self._started = False
+        self.pump()                         # finish anything left behind
+
+    def pump(self) -> int:
+        """Synchronous drive: drain every collection queue on the calling
+        thread (deterministic — no timers).  Returns batches executed."""
+        executed = 0
+        progressed = True
+        while progressed:
+            progressed = False
+            with self._states_lock:
+                items = list(self._states.items())
+            for name, state in items:
+                while True:
+                    batch = self._next_batch(state, block=False)
+                    if not batch:
+                        break
+                    self._execute(name, batch)
+                    executed += 1
+                    progressed = True
+        return executed
+
+    # -- introspection ---------------------------------------------------
+
+    def queue_depth(self, collection: Optional[str] = None) -> int:
+        with self._states_lock:
+            states = [self._states[collection]] if collection is not None \
+                else list(self._states.values())
+        return sum(len(s.queue) for s in states)
+
+    def stats(self) -> Dict[str, object]:
+        """One dict: metrics snapshot + queue depths + per-collection
+        index occupancy (segments, tombstones, live counts)."""
+        with self._states_lock:
+            depths = {name: len(state.queue)
+                      for name, state in self._states.items()}
+        return {**self.metrics.snapshot(), "queue_depth": depths,
+                "collections": self.registry.stats()}
+
+    def render_stats(self) -> str:
+        """``/stats``-style text dump of everything ``stats()`` reports."""
+        extra: Dict[str, object] = {}
+        with self._states_lock:
+            for name, state in self._states.items():
+                extra[f'serving_queue_depth{{collection="{name}"}}'] = \
+                    len(state.queue)
+        for name, st in self.registry.stats().items():
+            for gauge in ("n_live", "tombstones", "n_segments", "n_ids"):
+                if gauge in st:
+                    extra[f'index_{gauge}{{collection="{name}"}}'] = st[gauge]
+        return self.metrics.render_text(extra=extra)

@@ -1,0 +1,98 @@
+"""Compiled-searcher cache behavior: the FIFO bound really evicts,
+``clear_searcher_cache`` resets every counter, and the power-of-two
+m-bucketing makes a varying-batch-size query stream hit one compiled
+trace per bucket (zero new misses AND zero new jit traces after
+warmup)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import importlib
+
+from repro.core import (build_bst, bucket_m, clear_searcher_cache,
+                        get_searcher, make_batch_searcher,
+                        searcher_cache_info)
+
+# the package re-exports the search() *function* under the same name, so
+# fetch the module itself for monkeypatching
+search_mod = importlib.import_module("repro.core.search")
+
+
+@pytest.fixture
+def idx():
+    rng = np.random.default_rng(5)
+    db = rng.integers(0, 4, size=(220, 14), dtype=np.uint8)
+    return build_bst(db, 2)
+
+
+def test_bucket_m_values():
+    assert [bucket_m(m) for m in (1, 2, 3, 4, 5, 7, 8, 9, 63, 64)] == \
+        [1, 2, 4, 4, 8, 8, 8, 16, 64, 64]
+    with pytest.raises(ValueError):
+        bucket_m(0)
+
+
+def test_fifo_bound_actually_evicts(idx, monkeypatch):
+    monkeypatch.setattr(search_mod, "_SEARCHER_CACHE_CAP", 3)
+    clear_searcher_cache()
+    for tau in range(5):                      # 5 distinct rungs, cap 3
+        get_searcher(idx, tau)
+    info = searcher_cache_info()
+    assert info["size"] == 3
+    assert info["misses"] == 5
+    # FIFO: the oldest rungs (tau=0, 1) were evicted -> fresh misses;
+    # the newest (tau=4) is still resident -> a hit
+    get_searcher(idx, 4)
+    assert searcher_cache_info()["hits"] == 1
+    get_searcher(idx, 0)
+    assert searcher_cache_info()["misses"] == 6
+
+
+def test_clear_resets_counters(idx):
+    get_searcher(idx, 1)(jnp.asarray(np.zeros(14, np.uint8)))
+    assert searcher_cache_info()["misses"] >= 1
+    clear_searcher_cache()
+    assert searcher_cache_info() == {"hits": 0, "misses": 0, "traces": 0,
+                                     "size": 0}
+
+
+def test_bucketed_dispatch_is_cache_hit_across_m(idx):
+    """Satellite bugfix: variable client batch sizes must not re-jit.
+    m ∈ {1, 3, 7, 8} covers buckets {1, 4, 8}; after one warmup per
+    bucket, every further dispatch is a Python-cache hit AND reuses an
+    existing jit trace (``traces`` frozen)."""
+    rng = np.random.default_rng(6)
+    qs_all = rng.integers(0, 4, size=(8, 14), dtype=np.uint8)
+    clear_searcher_cache()
+    for m in (1, 3, 7, 8):                    # warmup: buckets 1, 4, 8
+        make_batch_searcher(idx, 2, block_m=2)(jnp.asarray(qs_all[:m]))
+    warm = searcher_cache_info()
+    assert warm["misses"] == 1                # one (index, tau, ...) key
+    assert warm["traces"] == 3                # one trace per bucket
+    for _ in range(2):
+        for m in (1, 3, 7, 8):                # re-fetch per call, as a
+            # serving loop does: every fetch must be a Python-cache hit
+            res = make_batch_searcher(idx, 2, block_m=2)(
+                jnp.asarray(qs_all[:m]))
+            assert res.mask.shape[0] == m     # results sliced back to m
+    info = searcher_cache_info()
+    assert info["misses"] == warm["misses"]   # zero new misses
+    assert info["traces"] == warm["traces"]   # zero new jit traces
+    assert info["hits"] > warm["hits"]
+
+
+def test_bucketed_batch_bit_identical_to_per_query(idx):
+    """Padding rows up to the bucket and slicing back must not perturb
+    any real row (pad rows repeat the last query, results dropped)."""
+    rng = np.random.default_rng(7)
+    qs = rng.integers(0, 4, size=(5, 14), dtype=np.uint8)   # bucket 8
+    bres = make_batch_searcher(idx, 3, block_m=2)(jnp.asarray(qs))
+    single = get_searcher(idx, 3)
+    for i in range(len(qs)):
+        sres = single(jnp.asarray(qs[i]))
+        np.testing.assert_array_equal(np.asarray(bres.mask[i]),
+                                      np.asarray(sres.mask))
+        np.testing.assert_array_equal(np.asarray(bres.dist[i]),
+                                      np.asarray(sres.dist))
+        assert int(bres.overflow[i]) == int(sres.overflow)

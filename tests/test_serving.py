@@ -1,0 +1,325 @@
+"""Serving runtime: the micro-batching scheduler must be semantically
+invisible — for any interleaved request stream, per-request results
+(masks, dists, ids) are bit-identical to executing each request alone,
+in submission order, against the same index state — while coalescing
+reads into power-of-two shape buckets (zero new searcher-cache misses
+or jit traces after warmup), fencing reads on writes, and rejecting
+overload explicitly."""
+
+import threading
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: deterministic fallback shim
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import SegmentedIndex, clear_searcher_cache, \
+    searcher_cache_info
+from repro.serving import (CollectionConfig, OverloadError, Scheduler,
+                           SchedulerConfig, bucket_table)
+
+L, B, TAU, K = 10, 2, 2, 3
+
+
+def make_stream(rnd, n_ops=18):
+    """A deterministic interleaved request stream: bootstrap corpus
+    insert, then mixed reads/writes.  Returns [(op, payload), ...]."""
+    rng = np.random.default_rng(rnd.randint(0, 2**31))
+    corpus = rng.integers(0, 1 << B, size=(24, L), dtype=np.uint8)
+    stream = [("insert", corpus)]
+    n_inserted = len(corpus)
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.55:
+            q = corpus[rng.integers(0, len(corpus))] if rng.random() < 0.7 \
+                else rng.integers(0, 1 << B, size=L, dtype=np.uint8)
+            stream.append(("search", q) if rng.random() < 0.5
+                          else ("topk", q))
+        elif r < 0.8:
+            rows = rng.integers(0, 1 << B,
+                                size=(int(rng.integers(1, 4)), L),
+                                dtype=np.uint8)
+            stream.append(("insert", rows))
+            n_inserted += len(rows)
+        else:
+            stream.append(
+                ("delete", rng.integers(0, n_inserted, size=2)))
+    return stream
+
+
+def run_sequential(stream):
+    """The oracle: every request executed alone, in order, on a fresh
+    index."""
+    idx = SegmentedIndex(L, B, delta_cap=16)
+    out = []
+    for op, payload in stream:
+        if op == "insert":
+            out.append(idx.insert(payload))
+        elif op == "delete":
+            out.append(idx.delete(payload))
+        elif op == "search":
+            res = idx.search(payload, TAU)
+            out.append((np.asarray(res.mask), np.asarray(res.dist)))
+        else:
+            nn = idx.topk(payload, K)
+            out.append((np.asarray(nn.ids), np.asarray(nn.dists)))
+    return out
+
+
+def submit_stream(sched, stream):
+    futs = []
+    for op, payload in stream:
+        if op == "insert":
+            futs.append(sched.submit_insert("c", payload))
+        elif op == "delete":
+            futs.append(sched.submit_delete("c", payload))
+        elif op == "search":
+            futs.append(sched.submit_search("c", payload, TAU))
+        else:
+            futs.append(sched.submit_topk("c", payload, K))
+    return futs
+
+
+def check_results(stream, futs, want):
+    for (op, _), fut, ref in zip(stream, futs, want):
+        got = fut.result(timeout=300)
+        if op == "insert":
+            np.testing.assert_array_equal(got, ref)
+        elif op == "delete":
+            assert got == ref
+        elif op == "search":
+            np.testing.assert_array_equal(got.mask, ref[0])
+            np.testing.assert_array_equal(got.dist, ref[1])
+        else:  # topk: ids/dists exact; the tau rung is batch-shared
+            np.testing.assert_array_equal(got.ids, ref[0])
+            np.testing.assert_array_equal(got.dists, ref[1])
+
+
+def make_sched(**kw):
+    cfg = dict(max_batch=8, max_queue=10_000, max_wait_ms=1.0)
+    cfg.update(kw)
+    sched = Scheduler(config=SchedulerConfig(**cfg))
+    sched.create_collection("c", CollectionConfig(L=L, b=B, delta_cap=16))
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# the core property: scheduling is semantically invisible
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=3, deadline=None)
+@given(st.randoms())
+def test_interleaved_stream_bit_identical_to_sequential(rnd):
+    stream = make_stream(rnd)
+    want = run_sequential(stream)
+    sched = make_sched()
+    futs = submit_stream(sched, stream)     # whole stream queued at once
+    sched.pump()                            # sync drive: deterministic
+    check_results(stream, futs, want)
+
+
+def test_incremental_pumping_matches_sequential():
+    """Draining the queue in arbitrary chunks (pump between submits)
+    must not change any result."""
+    import random
+    stream = make_stream(random.Random(7), n_ops=12)
+    want = run_sequential(stream)
+    sched = make_sched()
+    futs = []
+    for i, item in enumerate(stream):
+        futs.extend(submit_stream(sched, [item]))
+        if i % 3 == 0:
+            sched.pump()
+    sched.pump()
+    check_results(stream, futs, want)
+
+
+def test_threaded_mode_matches_sequential():
+    """Same property with the worker thread + max-wait flush in play
+    (single producer, so submission order is still deterministic)."""
+    import random
+    stream = make_stream(random.Random(11), n_ops=10)
+    want = run_sequential(stream)
+    sched = make_sched(max_wait_ms=5.0).start()
+    futs = submit_stream(sched, stream)
+    check_results(stream, futs, want)
+    sched.stop()
+    assert sched.queue_depth() == 0
+
+
+# ---------------------------------------------------------------------------
+# batching mechanics
+# ---------------------------------------------------------------------------
+
+def test_reads_coalesce_into_one_bucketed_dispatch():
+    rng = np.random.default_rng(1)
+    sched = make_sched()
+    docs = rng.integers(0, 1 << B, size=(30, L), dtype=np.uint8)
+    sched.submit_insert("c", docs)
+    futs = [sched.submit_search("c", docs[i], TAU) for i in range(5)]
+    sched.pump()
+    snap = sched.stats()
+    # 5 same-key reads -> ONE dispatch, padded 5 -> bucket 8
+    assert snap["counters"]["batches_total:search"] == 1
+    assert snap["batch_fill_ratio"] == pytest.approx(5 / 8)
+    hits = [int(f.result().mask[i]) for i, f in enumerate(futs)]
+    assert hits == [1] * 5                  # each query finds itself
+
+
+def test_mixed_key_reads_split_into_separate_batches():
+    rng = np.random.default_rng(2)
+    sched = make_sched()
+    docs = rng.integers(0, 1 << B, size=(20, L), dtype=np.uint8)
+    sched.submit_insert("c", docs)
+    f1 = [sched.submit_search("c", docs[i], 1) for i in range(2)]
+    f2 = [sched.submit_search("c", docs[i], 2) for i in range(2)]
+    f3 = [sched.submit_topk("c", docs[i], K) for i in range(2)]
+    sched.pump()
+    snap = sched.stats()
+    assert snap["counters"]["batches_total:search"] == 2   # tau=1 and tau=2
+    assert snap["counters"]["batches_total:topk"] == 1
+    for i, f in enumerate(f1 + f2):
+        assert int(f.result().mask[i % 2]) == 1
+    for i, f in enumerate(f3):
+        assert int(f.result().ids[0]) == i
+
+
+def test_write_fences_reads():
+    """A read submitted before a write must not observe it; a read after
+    must."""
+    sched = make_sched()
+    base = np.zeros((4, L), np.uint8)
+    sched.submit_insert("c", base)
+    probe = np.full(L, 1, np.uint8)
+    before = sched.submit_search("c", probe, 0)
+    sched.submit_insert("c", probe[None])           # exact match lands
+    after = sched.submit_search("c", probe, 0)
+    sched.pump()
+    assert before.result().mask.sum() == 0          # pre-insert state
+    assert after.result().mask.sum() == 1
+    assert after.result().mask.shape[0] == 5        # plane grew
+
+
+def test_overload_rejection():
+    sched = make_sched(max_queue=3)
+    q = np.zeros(L, np.uint8)
+    for _ in range(3):
+        sched.submit_search("c", q, TAU)
+    with pytest.raises(OverloadError):
+        sched.submit_search("c", q, TAU)
+    assert sched.stats()["counters"]["rejected_total"] == 1
+    assert sched.queue_depth("c") == 3
+    sched.pump()                                    # queued work drains
+    assert sched.queue_depth("c") == 0
+
+
+def test_collection_registry_errors():
+    sched = make_sched()
+    with pytest.raises(KeyError):
+        sched.submit_search("nope", np.zeros(L, np.uint8), 1)
+    with pytest.raises(ValueError):
+        sched.create_collection("c", CollectionConfig(L=L, b=B))
+    assert sched.registry.names() == ["c"]
+    assert bucket_table(8) == [1, 2, 4, 8]
+
+
+# ---------------------------------------------------------------------------
+# steady state: varying-m traffic never re-jits (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_varying_batch_stream_zero_new_cache_misses():
+    rng = np.random.default_rng(3)
+    sched = make_sched()
+    docs = rng.integers(0, 1 << B, size=(64, L), dtype=np.uint8)
+    ids = sched.submit_insert("c", docs)
+    sched.pump()
+    ids = ids.result()
+    idx = sched.registry.get("c").index
+    idx.flush()                       # single sealed segment, empty delta
+
+    def burst(sizes, offset):
+        for g in sizes:
+            futs = [sched.submit_search("c", docs[(offset + j) % 60], TAU)
+                    for j in range(g)]
+            futs += [sched.submit_topk("c", docs[(offset + j) % 60], 1,
+                                       tau0=TAU) for j in range(g)]
+            sched.pump()
+            for f in futs:
+                f.result(timeout=300)
+
+    clear_searcher_cache()
+    burst((1, 2, 4, 8), offset=0)               # warm every bucket
+    sched.submit_delete("c", ids[60:62])        # tombstones are traced data
+    sched.pump()
+    warm = searcher_cache_info()
+    burst((1, 3, 5, 2, 7, 8, 4, 6), offset=5)   # varying-m steady state
+    sched.submit_delete("c", ids[62:64])
+    sched.pump()
+    burst((8, 1, 6, 3), offset=11)
+    info = searcher_cache_info()
+    assert info["misses"] == warm["misses"], (warm, info)
+    assert info["traces"] == warm["traces"], (warm, info)
+    assert info["hits"] > warm["hits"]
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_snapshot_and_text_dump():
+    sched = make_sched()
+    rng = np.random.default_rng(4)
+    docs = rng.integers(0, 1 << B, size=(16, L), dtype=np.uint8)
+    sched.submit_insert("c", docs)
+    for i in range(3):
+        sched.submit_topk("c", docs[i], K)
+    sched.pump()
+    snap = sched.stats()
+    assert snap["counters"]["requests_total:topk"] == 3
+    assert snap["latency"]["topk"]["count"] == 3
+    assert snap["latency"]["topk"]["p99_ms"] >= \
+        snap["latency"]["topk"]["p50_ms"]
+    assert snap["queue_depth"]["c"] == 0
+    assert snap["collections"]["c"]["n_live"] == 16
+    text = sched.render_stats()
+    for needle in ('serving_requests_total{op="topk"} 3',
+                   'serving_latency_p99_ms{op="topk"}',
+                   'index_n_live{collection="c"} 16',
+                   "serving_batch_fill_ratio",
+                   "searcher_cache_traces"):
+        assert needle in text, needle
+
+
+def test_concurrent_submitters_all_complete():
+    """Multiple producer threads against the threaded scheduler: every
+    future completes with a sane result (ordering across producers is
+    unspecified; completion and shape are not)."""
+    rng = np.random.default_rng(5)
+    sched = make_sched(max_queue=10_000).start()
+    docs = rng.integers(0, 1 << B, size=(40, L), dtype=np.uint8)
+    sched.submit_insert("c", docs).result(timeout=300)
+    results, errs = [], []
+
+    def client(seed):
+        try:
+            r = np.random.default_rng(seed)
+            for _ in range(5):
+                i = int(r.integers(0, len(docs)))
+                nn = sched.submit_topk("c", docs[i], 1).result(timeout=300)
+                results.append((i, int(nn.ids[0]), int(nn.dists[0])))
+        except Exception as e:              # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=client, args=(s,)) for s in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    sched.stop()
+    assert not errs
+    assert len(results) == 20
+    for i, nn_id, nn_dist in results:
+        assert nn_dist == 0                 # the doc itself (or a dup twin)
+        np.testing.assert_array_equal(docs[nn_id], docs[i])
