@@ -11,6 +11,12 @@ Rows:
   * ``ingest/<ds>/merge``         — one forced two-segment merge
   * ``ingest/<ds>/query_mid``     — batched topk with a live delta buffer
   * ``ingest/<ds>/query_postmerge`` — batched topk after merge+compact
+  * ``ingest/<ds>/sweep_seg{1,4,16}`` — fixed-corpus segment-count sweep:
+                                    batched topk µs/query and device
+                                    dispatches per query at 1/4/16 sealed
+                                    segments — the fused arena path must
+                                    keep both flat (DESIGN.md §6); the
+                                    non-smoke run asserts it
 
 Correctness ride-along (every mode, incl. --smoke): the post-merge top-k
 must be bit-identical to a fresh static build over the survivors."""
@@ -21,8 +27,10 @@ import time
 
 import numpy as np
 
-from repro.core import SegmentedIndex, build_bst, topk_batch
+from repro.core import (SegmentedIndex, build_bst, dispatch_stats,
+                        reset_dispatch_stats, topk_batch)
 
+from . import common
 from .common import Csv, cap_n, make_dataset, timeit
 
 
@@ -91,3 +99,29 @@ def run(csv: Csv, datasets=("review",), k: int = 10) -> None:
         np.testing.assert_array_equal(np.asarray(dyn.dists),
                                       np.asarray(static.dists))
         np.testing.assert_array_equal(np.asarray(dyn.ids), mapped)
+
+        # segment-count sweep (fixed corpus): the fused arena must keep
+        # query latency AND dispatch count flat in n_segments
+        n_sweep = min(n, cap_n(1 << 12))
+        sweep_t = {}
+        for n_seg in (1, 4, 16):
+            sw = SegmentedIndex(cfg.L, cfg.b, delta_cap=n_sweep + 1,
+                                auto_merge=False)
+            chunk = n_sweep // n_seg
+            for lo in range(0, n_seg * chunk, chunk):
+                sw.insert(db[lo:lo + chunk])
+                sw.flush()
+            assert len(sw.segments) == n_seg
+            nn = sw.topk_batch(qs, k)         # warm (arena + compiles)
+            reset_dispatch_stats()
+            sw.topk_batch(qs, k)
+            disp = dispatch_stats()["total"]
+            t_q = timeit(lambda: sw.topk_batch(qs, k))
+            sweep_t[n_seg] = t_q
+            csv.add(f"ingest/{name}/sweep_seg{n_seg}",
+                    t_q * 1e6 / len(qs),
+                    f"segments={n_seg};dispatches={disp};tau={nn.tau};"
+                    f"rows={n_sweep}")
+        if not common.SMOKE:
+            # flat, not linear: 16 segments may not cost 16x one segment
+            assert sweep_t[16] < 6 * sweep_t[1], sweep_t

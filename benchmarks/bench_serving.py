@@ -16,6 +16,11 @@ Rows:
   * ``serving/<ds>/search_p99``
   * ``serving/<ds>/fill``       — batch-fill ratio (coalesced queries /
                                   dispatched bucket rows)
+  * ``serving/<ds>/sweep_seg{1,4,16}_p99`` — fixed-corpus segment-count
+                                  sweep: end-to-end topk p99 through the
+                                  scheduler at 1/4/16 sealed segments —
+                                  flat under the fused arena
+                                  (DESIGN.md §6; asserted non-smoke)
 
 Standalone: ``PYTHONPATH=src python -m benchmarks.bench_serving
 [--smoke] [--clients C] [--ops N] [--out BENCH.json]``.
@@ -149,6 +154,45 @@ def run(csv: Csv, datasets=("review",), clients: int = 8,
             reads = sum(lat[op]["count"] for op in ("topk", "search")
                         if op in lat)
             assert batches < reads, (batches, reads)
+
+        # segment-count sweep: end-to-end read latency through the
+        # scheduler must stay flat (not linear) in the collection's
+        # sealed segment count — the fused arena's one-dispatch claim
+        # observed from the client side
+        n_sweep = min(n, cap_n(1 << 12))
+        sweep_ops = 8 if common.SMOKE else 24
+        sweep_p99 = {}
+        for n_seg in (1, 4, 16):
+            sw = Scheduler(config=SchedulerConfig(
+                max_batch=8, max_queue=1024, max_wait_ms=1.0))
+            sw.create_collection("sweep", CollectionConfig(
+                L=cfg.L, b=cfg.b, delta_cap=n_sweep + 1, auto_merge=False))
+            sidx = sw.registry.get("sweep").index
+            chunk = n_sweep // n_seg
+            for lo in range(0, n_seg * chunk, chunk):
+                sidx.insert(db[lo:lo + chunk])
+                sidx.flush()
+            for i in range(2):       # warm bucket 1 — the dispatch shape
+                f = sw.submit_topk("sweep", db[i], k)
+                sw.pump()
+                f.result(timeout=600)
+            sw.metrics.latency.clear()          # drop warmup samples
+            rng = np.random.default_rng(7)
+            for _ in range(sweep_ops):          # one dispatch per pump
+                f = sw.submit_topk("sweep",
+                                   db[rng.integers(0, n_sweep)], k)
+                sw.pump()
+                f.result(timeout=600)
+            lat = sw.stats()["latency"]["topk"]
+            sweep_p99[n_seg] = lat["p50_ms"]
+            csv.add(f"serving/{name}/sweep_seg{n_seg}_p99",
+                    lat["p99_ms"] * 1e3,
+                    f"segments={n_seg};p50_ms={lat['p50_ms']:.2f};"
+                    f"rows={n_sweep}")
+        if not common.SMOKE:
+            # flat, not linear, in n_segments (p50 — the p99 of a short
+            # run is a single sample and may catch a ladder escalation)
+            assert sweep_p99[16] < 6 * max(sweep_p99[1], 1e-3), sweep_p99
 
 
 def main(argv=None) -> int:

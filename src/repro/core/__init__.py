@@ -10,8 +10,10 @@ from .search import (SearchResult, TopKResult, bucket_m,
                      clear_searcher_cache, get_searcher, make_batch_searcher,
                      make_searcher, search, searcher_cache_info, topk,
                      topk_batch)
-from .segments import (Segment, SegmentedIndex, SegmentedSearchResult,
-                       ShardedSegmentedIndex, tombstone_bits)
+from .segments import (ColumnSearchResult, Segment, SegmentedIndex,
+                       SegmentedSearchResult, ShardedSegmentedIndex,
+                       clear_fused_cache, dispatch_stats,
+                       reset_dispatch_stats, tombstone_bits)
 
 __all__ = [
     "BitVector", "SketchIndex", "build_bst", "build_louds", "build_fst_style",
@@ -22,5 +24,6 @@ __all__ = [
     "make_mi_searcher", "clear_mi_searcher_cache",
     "choose_plan", "sigs", "cost_single", "cost_multi", "frontier_capacities",
     "Segment", "SegmentedIndex", "SegmentedSearchResult",
-    "ShardedSegmentedIndex", "tombstone_bits",
+    "ColumnSearchResult", "ShardedSegmentedIndex", "tombstone_bits",
+    "dispatch_stats", "reset_dispatch_stats", "clear_fused_cache",
 ]

@@ -474,6 +474,45 @@ def expected_caps(t: Tuple[int, ...], b: int, tau: int,
     return tuple(caps)
 
 
+def _shard_args(index: ShardedBST):
+    """The vmappable per-shard array stack of a ShardedBST (shared by
+    ``make_sharded_searcher`` and ``sharded_column_dists``)."""
+    level_arrays = tuple(
+        (lv.words, lv.cum, lv.labels) if lv.kind == "list"
+        else (lv.words, lv.cum) if lv.kind == "table" else ()
+        for lv in index.levels)
+    return (level_arrays, index.t, index.paths_vert, index.d_words,
+            index.d_cum, index.leaf_root, index.id_leaf, index.n_local)
+
+
+def sharded_column_dists(index: ShardedBST, queries: jnp.ndarray, tau: int,
+                         caps, block_m: int = DEFAULT_BLOCK_M,
+                         live: jnp.ndarray | None = None):
+    """Traced sharded search merged onto global columns — the sharded
+    backend's contribution to the one-dispatch segment arena
+    (DESIGN.md §6).
+
+    queries: (m, L) int/uint8 -> ((m, n) int32 exact global column
+    distances — BIG off-mask and on dead columns, int32 total overflow).
+    Runs the vmapped per-shard batched traversal+verify
+    (``_shard_search_batch``) and performs the shard→global merge **on
+    device** via the static ``shard_of``/``pos_of`` gathers (the host
+    path materializes the same merge in numpy per segment per rung —
+    this helper lets the dynamic segmented index inline a whole sharded
+    segment as a sub-trace of its single fused program).  ``live``:
+    optional (n,) bool tombstone lane over global rows."""
+    def per_shard(levels, t_row, pv, dw, dc, lr, il, nl):
+        return _shard_search_batch(index, levels, t_row, pv, dw, dc, lr,
+                                   il, nl, queries, tau, caps,
+                                   block_m=block_m)
+    _, dists, overflows = jax.vmap(per_shard)(*_shard_args(index))
+    dists = jnp.transpose(dists, (1, 0, 2))            # (m, S, n_max)
+    merged = dists[:, index.shard_of, index.pos_of]    # (m, n)
+    if live is not None:
+        merged = jnp.where(live[None, :], merged, BIG)
+    return merged, overflows.sum()
+
+
 def make_sharded_searcher(index: ShardedBST, tau: int,
                           cap_max: int = 1 << 14, verify: str = "scan",
                           caps_mode: str = "worst",
@@ -493,12 +532,7 @@ def make_sharded_searcher(index: ShardedBST, tau: int,
         caps = expected_caps(t_max, index.b, tau)
     else:
         caps = frontier_capacities(t_max, index.b, tau, cap_max)
-    level_arrays = tuple(
-        (lv.words, lv.cum, lv.labels) if lv.kind == "list"
-        else (lv.words, lv.cum) if lv.kind == "table" else ()
-        for lv in index.levels)
-    shard_args = (level_arrays, index.t, index.paths_vert, index.d_words,
-                  index.d_cum, index.leaf_root, index.id_leaf, index.n_local)
+    shard_args = _shard_args(index)
 
     if verify == "scan":
         def search(queries):

@@ -176,6 +176,37 @@ def _mi_search_trace_batch(mi: MultiIndex, qs: jnp.ndarray, *, tau: int,
                              overflow=overflow)
 
 
+def mi_trace_params(mi: MultiIndex, tau: int, cap_max: int = 1 << 17,
+                    cand_cap: int | None = None):
+    """The static parameters of one MI search trace: per-block frontier
+    capacities + the candidate-buffer capacity (Appendix-A estimate by
+    default).  Shared by ``make_mi_searcher`` and the dynamic segmented
+    index's fused one-dispatch program, which inlines
+    ``_mi_search_trace_batch`` per MI segment (DESIGN.md §6)."""
+    taus = cost_model.block_thresholds(tau, len(mi.blocks))
+    caps_per_block = tuple(
+        cost_model.frontier_capacities(blk.t, blk.b, tj, cap_max)
+        for blk, tj in zip(mi.blocks, taus))
+    cc = cand_cap if cand_cap is not None else candidate_capacity(mi, tau)
+    return caps_per_block, cc
+
+
+def mi_column_dists(mi: MultiIndex, qs: jnp.ndarray, tau: int,
+                    caps_per_block, cand_cap: int,
+                    block_m: int = DEFAULT_BLOCK_M,
+                    id_live: jnp.ndarray | None = None):
+    """Traced MI search reduced to the column contract: (m, L) queries ->
+    ((m, n) int32 exact distances — BIG off-mask/dead, (m,) int32
+    overflow).  A thin adapter over ``_mi_search_trace_batch`` so an
+    MI-backed segment drops into the fused arena program as a
+    sub-trace."""
+    res = _mi_search_trace_batch(mi, qs, tau=tau,
+                                 caps_per_block=caps_per_block,
+                                 cand_cap=cand_cap, block_m=block_m,
+                                 id_live=id_live)
+    return res.dist, res.overflow    # dist is already BIG off-mask
+
+
 # same discipline as search._SEARCHER_CACHE: the MultiIndex is pinned in
 # the value so the id key can never be recycled while the entry lives;
 # FIFO-bounded against benchmark sweeps.

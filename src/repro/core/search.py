@@ -194,22 +194,16 @@ def _search_trace(index: SketchIndex, q: jnp.ndarray, *, tau: int,
                         traversed=traversed)
 
 
-def _search_trace_batch(index: SketchIndex, qs: jnp.ndarray, *, tau: int,
-                        caps: Tuple[int, ...],
-                        block_m: int = DEFAULT_BLOCK_M,
-                        id_live: jnp.ndarray | None = None) -> SearchResult:
-    """Natively batched search body: ``qs`` is (m, L) and the frontier is
-    a (m, cap) 2D array compacted per query.  Each level issues ONE
-    shared ``children()`` gather over the flattened (m·cap,) frontier
-    instead of m separate traces, the tail scatter-min lands on a
-    (m, t_root) base-distance plane, and the sparse layer runs through
-    the query-tiled batch verify kernel — the collapsed-path array is
-    streamed ⌈m/block_m⌉ times instead of m.  Per-query masks, exact
-    distances, and overflow counts are bit-identical to ``_search_trace``
-    (compaction is row-independent).  ``id_live``: optional (n,) bool
-    tombstone mask shared by every query (DESIGN.md §4)."""
-    qs = qs.astype(jnp.int32)
-    live = _leaf_live(index, id_live) if id_live is not None else None
+def _traverse_frontier_batch(index: SketchIndex, qs: jnp.ndarray, *,
+                             tau: int, caps: Tuple[int, ...]):
+    """The shared 2D-frontier descent (levels 1..depth) of the natively
+    batched searcher: ``qs`` is (m, L) int32 and the level-ℓ frontier a
+    (m, cap_ℓ) array compacted per query — one ``children()`` gather per
+    level for the whole batch.  Returns the final frontier
+    ``(ids, dists, valid)`` (each (m, cap_depth)) plus per-query
+    ``overflow``/``traversed`` (m,) int32.  Reused by the fused
+    segment-arena program (DESIGN.md §6), which stops here and scatters
+    every segment's frontier onto one concatenated root plane."""
     m = qs.shape[0]
     ids = jnp.zeros((m, 1), jnp.int32)
     dists = jnp.zeros((m, 1), jnp.int32)
@@ -234,6 +228,48 @@ def _search_trace_batch(index: SketchIndex, qs: jnp.ndarray, *, tau: int,
             c_valid.reshape(m, -1), caps[lev])
         overflow = overflow + ov
         traversed = traversed + valid.sum(axis=1, dtype=jnp.int32)
+    return ids, dists, valid, overflow, traversed
+
+
+def select_topk_columns(dist: jnp.ndarray, col_ids: jnp.ndarray, k: int):
+    """Traced k-smallest selection over labeled column planes: the
+    on-device counterpart of ``distributed_search.topk_from_dists``.
+
+    dist: (m, R) int32 — one distance per (query, column), BIG on
+    non-results; col_ids: (R,) int32 global labels per column; returns
+    ((m, k) int32 ids, (m, k) int32 dists), each row ascending by
+    (distance, label) — an exact lexicographic two-key sort
+    (``lax.sort`` with ``num_keys=2``), so tie order matches the host
+    selection bit for bit; BIG lanes come back as (-1, BIG) pads.
+    Requires k <= R (the caller clamps k to the column count)."""
+    m, R = dist.shape
+    labels = jnp.broadcast_to(col_ids.astype(jnp.int32)[None, :], (m, R))
+    d_sorted, l_sorted = jax.lax.sort((dist, labels), dimension=-1,
+                                      num_keys=2)
+    d_k, l_k = d_sorted[:, :k], l_sorted[:, :k]
+    return jnp.where(d_k < BIG, l_k, -1), jnp.minimum(d_k, BIG)
+
+
+def _search_trace_batch(index: SketchIndex, qs: jnp.ndarray, *, tau: int,
+                        caps: Tuple[int, ...],
+                        block_m: int = DEFAULT_BLOCK_M,
+                        id_live: jnp.ndarray | None = None) -> SearchResult:
+    """Natively batched search body: ``qs`` is (m, L) and the frontier is
+    a (m, cap) 2D array compacted per query.  Each level issues ONE
+    shared ``children()`` gather over the flattened (m·cap,) frontier
+    instead of m separate traces (``_traverse_frontier_batch``), the
+    tail scatter-min lands on a (m, t_root) base-distance plane, and the
+    sparse layer runs through the query-tiled batch verify kernel — the
+    collapsed-path array is streamed ⌈m/block_m⌉ times instead of m.
+    Per-query masks, exact distances, and overflow counts are
+    bit-identical to ``_search_trace`` (compaction is row-independent).
+    ``id_live``: optional (n,) bool tombstone mask shared by every query
+    (DESIGN.md §4)."""
+    qs = qs.astype(jnp.int32)
+    live = _leaf_live(index, id_live) if id_live is not None else None
+    m = qs.shape[0]
+    ids, dists, valid, overflow, traversed = _traverse_frontier_batch(
+        index, qs, tau=tau, caps=caps)
 
     row = jnp.arange(m, dtype=jnp.int32)[:, None]
     safe_ids = jnp.where(valid, ids, 0)
@@ -287,6 +323,16 @@ def _search_trace_batch(index: SketchIndex, qs: jnp.ndarray, *, tau: int,
 _SEARCHER_CACHE: Dict[tuple, tuple] = {}
 _SEARCHER_CACHE_CAP = 128
 _CACHE_STATS = {"hits": 0, "misses": 0, "traces": 0}
+
+
+def _note_trace() -> None:
+    """Call from inside a jitted body: runs only while jit traces, so it
+    counts real traces (including per-shape re-specialization of one
+    cached fn).  Shared by the searchers here and the fused arena
+    programs (``core.segments``), so ``searcher_cache_info()['traces']``
+    stays the one number that must freeze once every shape bucket is
+    warm."""
+    _CACHE_STATS["traces"] += 1
 
 
 def _pin_cache_get(cache: dict, cap: int, key: tuple, obj, build):
@@ -344,10 +390,7 @@ def get_searcher(index: SketchIndex, tau: int,
     caps = frontier_capacities(index.t, index.b, tau, cap_max)
     key = (id(index), tau, caps, block_m if batch else None, with_live)
 
-    def traced():
-        # runs only while jit traces the body: counts real traces,
-        # including per-shape re-specialization of one cached fn
-        _CACHE_STATS["traces"] += 1
+    traced = _note_trace
 
     def build():
         if batch and with_live:

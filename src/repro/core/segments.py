@@ -19,11 +19,17 @@ machinery:
   * a size-tiered ``merge()`` rebuilds two segments into one via
     ``build_trie_levels`` (dropping tombstones as it goes) and
     ``compact()`` rebuilds a single segment to reclaim tombstoned rows;
-  * ``search``/``topk``/``topk_batch`` fan out over the delta buffer and
-    every segment, merge the per-segment distance planes onto the global
-    id space, and reuse the shard-merge selection
-    (``distributed_search.topk_from_dists``) — results are bit-identical
-    to a static bST built from the surviving sketches (ties by id, and
+  * queries run through the **fused one-dispatch segment arena**
+    (DESIGN.md §6): a device-resident column arena holds one verify
+    column per sealed physical row (plus base-offset, global-id, and
+    liveness lanes), and ONE jitted program per τ rung runs every
+    segment's traversal, the delta scan, the arena verify kernel, and
+    the on-device (distance, id) selection — serving latency is flat in
+    segment count, and the only per-request transfer is the final
+    (m, k) ids/dists (plus two ladder scalars per rung).  The
+    per-segment fan-out survives as the reference path
+    (``use_arena=False``); both are bit-identical to each other and to
+    a static bST built from the surviving sketches (ties by id, and
     global ids are assigned monotonically, so the tie order matches the
     static build's insertion order).
 
@@ -31,9 +37,11 @@ Ids are **stable**: ``insert`` assigns monotonically increasing global
 ids that survive merges and compactions.  Internally everything is
 column-compressed — fan-out planes are (m, R) over the *physical* rows
 currently held, labeled by global id, so churn cost tracks the live
-corpus (R is reclaimed by merge/compact).  Only the range-search result
-contract (``search_batch``'s (m, n_ids) mask/dist planes) materializes
-the full ever-assigned id axis; ``topk*`` never does.
+corpus (R is reclaimed by merge/compact).  The primary range-search
+contract is the column-compressed ``search_columns_batch``
+(``ColumnSearchResult``); only the opt-in dense contract
+(``search_batch``'s (m, n_ids) mask/dist planes) materializes the full
+ever-assigned id axis, and ``topk*`` never does.
 
 Shapes and dtypes: sketches are (n, L) uint8 over Σ=[0, 2^b); result
 masks are (m, n_ids) bool, distances (m, n_ids) int32 with BIG
@@ -44,25 +52,63 @@ int64 / int32 global ids.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
 from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
 from .bst import BIG, build_bst
-from .cost_model import tau_for_k
+from .cost_model import frontier_capacities, tau_for_k
 from .distributed_search import (build_sharded_bst, make_sharded_searcher,
-                                 topk_from_dists)
-from .hamming import pack_vertical
-from .multi_index import build_multi_index, mi_search_batch
+                                 sharded_column_dists, topk_from_dists)
+from .hamming import pack_vertical, pack_vertical_jax
+from .multi_index import (build_multi_index, mi_column_dists, mi_search_batch,
+                          mi_trace_params)
 from .search import (CAP_MAX_DEFAULT, LADDER_CAP_MAX, TopKResult,
-                     _pin_cache_get, get_searcher)
+                     _CACHE_STATS, _note_trace, _pad_rows, _pad_topk,
+                     _pin_cache_get, _traverse_frontier_batch, bucket_m,
+                     get_searcher, select_topk_columns)
 
 BIG_I = int(BIG)
 
 BACKENDS = ("bst", "multi", "sharded")
+
+# Monotonic segment serials: every sealed Segment gets the next value,
+# and merged/compacted replacements get fresh ones.  Serials key every
+# per-segment compiled-artifact cache (the sharded searcher pin, the
+# fused arena programs) — unlike ``id()``, a serial is never reused, so
+# a merged-away segment can never alias a live one's cached searcher.
+_SEG_SERIALS = itertools.count()
+
+# Host->device program launches issued by the segmented query path:
+# "fanout" counts the per-segment reference path (one per segment
+# searcher call, capacity-ladder retries included, plus one per
+# delta-buffer scan), "fused" the single-dispatch arena path (one per
+# τ-ladder rung).  The serving metrics snapshot exposes these — dispatch
+# accounting replaces per-segment accounting (DESIGN.md §6).
+_DISPATCH_STATS = {"total": 0, "fused": 0, "fanout": 0}
+
+
+def _dispatch(kind: str) -> None:
+    _DISPATCH_STATS["total"] += 1
+    _DISPATCH_STATS[kind] += 1
+
+
+def dispatch_stats() -> Dict[str, int]:
+    """Device-dispatch counters of the segmented query path: ``total``
+    host->device program launches, split into ``fused`` (arena path —
+    one per τ rung, independent of segment count) and ``fanout``
+    (per-segment reference path — one per segment per rung)."""
+    return dict(_DISPATCH_STATS)
+
+
+def reset_dispatch_stats() -> None:
+    for k in _DISPATCH_STATS:
+        _DISPATCH_STATS[k] = 0
 
 
 def tombstone_bits(n: int) -> int:
@@ -89,12 +135,17 @@ class Segment:
                 can rebuild without touching the encodings.
       ids:      (n_seg,) int64 global ids, sorted ascending.
       live:     (n_seg,) bool tombstone bitmap (False = deleted).
+      serial:   process-monotonic id (auto-assigned); keys every cached
+                compiled artifact for this segment — never reused, unlike
+                ``id()``.
     """
 
     index: object
     sketches: np.ndarray
     ids: np.ndarray
     live: np.ndarray
+    serial: int = dataclasses.field(
+        default_factory=lambda: next(_SEG_SERIALS))
 
     @property
     def n(self) -> int:
@@ -111,12 +162,83 @@ class SegmentedSearchResult(NamedTuple):
     overflow: int         # total dropped frontier entries (0 = exact)
 
 
+class ColumnSearchResult(NamedTuple):
+    """Column-compressed range-search result — the primary contract
+    (DESIGN.md §6): one column per *physical* row currently held (every
+    segment's rows in stack order, then the delta buffer's), labeled by
+    stable global id.  O(m · R) where R shrinks with merge/compact — it
+    never grows with ids-ever-assigned, unlike the opt-in dense plane of
+    ``search_batch``."""
+
+    mask: np.ndarray      # (m, R) bool — live columns within τ per query
+    dist: np.ndarray      # (m, R) int32 — exact distance where mask, BIG off
+    ids: np.ndarray       # (R,) int64 — global id per column
+    overflow: int         # total dropped frontier entries (0 = exact)
+
+
+class _ColumnArena:
+    """Device-resident verify state for the sealed segment stack
+    (DESIGN.md §6): everything the fused one-dispatch program streams,
+    maintained across queries and updated incrementally on lifecycle
+    writes instead of re-uploaded per query.
+
+    Attributes (R = total sealed physical rows, T = 1 + Σ per-segment
+    ℓ_s-root counts — slot 0 is the delta buffer's trivial base):
+      cols:      (b, W, R) uint32 — full-length vertical verify columns,
+                 segment blocks concatenated in stack order;
+      base_idx:  (R,) int32 device — per-column index into the
+                 concatenated root base plane (the segment-offset lane):
+                 ``1 + root_offset[s] + leaf_root[id_leaf[row]]``;
+      gids:      (R,) int32 device — global id per column (selection
+                 labels);
+      live:      (R,) bool device — liveness lanes; ``delete`` flips
+                 lanes in place (one scatter), never rebuilding;
+      col_ids:   (R,) int64 host — global id per column (result labels);
+      col_off:   dict serial -> first column of that segment's block;
+      root_off:  dict serial -> first root slot of that segment;
+      t_root_total: Σ per-segment root counts (plane width minus 1);
+      serials:   the segment-stack fingerprint this arena matches.
+    """
+
+    def __init__(self):
+        self.serials: Tuple[int, ...] = ()
+        self.cols: Optional[jnp.ndarray] = None
+        self.base_idx: Optional[jnp.ndarray] = None
+        self.gids: Optional[jnp.ndarray] = None
+        self.live: Optional[jnp.ndarray] = None
+        self.col_ids = np.zeros((0,), np.int64)
+        self.col_off: Dict[int, int] = {}
+        self.root_off: Dict[int, int] = {}
+        self.t_root_total = 0
+
+    def array_bytes(self) -> int:
+        """Device bytes held by the arena (space accounting, §6)."""
+        if self.cols is None:
+            return 0
+        return int(self.cols.nbytes + self.base_idx.nbytes
+                   + self.gids.nbytes + self.live.nbytes)
+
+
 # make_sharded_searcher has no process-level cache of its own (the static
 # pipeline jits once per program); segment stacks re-enter it per search,
 # so pin compiled sharded searchers here with the same discipline as
 # search._SEARCHER_CACHE.
 _SHARDED_SEARCHER_CACHE: Dict[tuple, tuple] = {}
 _SHARDED_SEARCHER_CACHE_CAP = 64
+
+# Fused one-dispatch arena programs, keyed on (index instance,
+# segment-serial fingerprint, kind, τ, capacity rung, k, block_m) —
+# serials are monotonic, so a rebuilt stack can never alias a stale
+# program; the closures pin the segment indexes and arena arrays they
+# stream, and an index drops its own dead-generation entries the moment
+# its fingerprint changes (``_fused_fn``).
+_FUSED_CACHE: Dict[tuple, object] = {}
+_FUSED_CACHE_CAP = 32
+
+
+def clear_fused_cache() -> None:
+    """Drop every compiled fused arena program (and its pinned arrays)."""
+    _FUSED_CACHE.clear()
 
 
 def _ladder_topk(columns_fn, n_live: int, b: int, L: int, qs: np.ndarray,
@@ -166,6 +288,10 @@ class SegmentedIndex:
       auto_merge: run the size-tiered merge policy after every automatic
                   flush (manual ``flush()`` never merges implicitly).
       block_m:    query-tile size forwarded to the batched verify kernel.
+      use_arena:  serve queries through the fused one-dispatch segment
+                  arena (DESIGN.md §6) — one device launch per τ-ladder
+                  rung regardless of segment count, bit-identical to the
+                  per-segment reference fan-out (False restores it).
 
     >>> import numpy as np
     >>> idx = SegmentedIndex(L=8, b=2, delta_cap=4)
@@ -181,7 +307,7 @@ class SegmentedIndex:
     def __init__(self, L: int, b: int, *, delta_cap: int = 4096,
                  backend: str = "bst", mi_blocks: int = 2, n_shards: int = 4,
                  lam: float = 0.5, auto_merge: bool = True,
-                 block_m: int = DEFAULT_BLOCK_M):
+                 block_m: int = DEFAULT_BLOCK_M, use_arena: bool = True):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}")
         self.L = int(L)
@@ -193,13 +319,17 @@ class SegmentedIndex:
         self.lam = float(lam)
         self.auto_merge = bool(auto_merge)
         self.block_m = int(block_m)
+        self.use_arena = bool(use_arena)
 
         self.segments: List[Segment] = []
         self.n_ids = 0                      # global ids ever assigned
         self._delta_sk = np.zeros((0, self.L), np.uint8)
         self._delta_ids = np.zeros((0,), np.int64)
         self._delta_live = np.zeros((0,), bool)
-        self._delta_vert: Optional[jnp.ndarray] = None  # cached (b, W, nd)
+        self._delta_vert: Optional[jnp.ndarray] = None  # cached (b, W, ndb)
+        self._arena: Optional[_ColumnArena] = None      # bst backend only
+        self._fused_id = next(_SEG_SERIALS)             # per-index cache scope
+        self._fused_serials: Tuple[int, ...] = ()       # last program gen
         self.counters = {"flushes": 0, "merges": 0, "compactions": 0,
                          "inserted": 0, "deleted": 0}
         # write hook: fn(event: str, info: dict) fired after every
@@ -247,13 +377,20 @@ class SegmentedIndex:
         """Tombstone global ids (scalar or (k,) array-like); returns the
         number of ids newly deleted (already-dead or unknown ids are
         ignored).  O(k log n) searchsorted per container — no index is
-        rebuilt and compiled searchers stay valid (liveness is traced)."""
+        rebuilt and compiled searchers stay valid (liveness is traced).
+        The arena's device liveness lanes are flipped in place with one
+        scatter (DESIGN.md §6) — deletes never re-upload columns."""
         ids = np.unique(np.atleast_1d(np.asarray(ids, dtype=np.int64)))
         newly = 0
-        containers: List[Tuple[np.ndarray, np.ndarray]] = [
-            (self._delta_ids, self._delta_live)]
-        containers += [(seg.ids, seg.live) for seg in self.segments]
-        for id_arr, live_arr in containers:
+        arena = self._arena
+        lanes: List[np.ndarray] = []     # arena columns going dead
+        containers: List[Tuple[np.ndarray, np.ndarray, Optional[int]]] = [
+            (self._delta_ids, self._delta_live, None)]
+        containers += [
+            (seg.ids, seg.live,
+             arena.col_off.get(seg.serial) if arena is not None else None)
+            for seg in self.segments]
+        for id_arr, live_arr, col0 in containers:
             if id_arr.size == 0:
                 continue
             pos = np.searchsorted(id_arr, ids)
@@ -262,6 +399,10 @@ class SegmentedIndex:
             sel = pos[ok]
             newly += int(live_arr[sel].sum())
             live_arr[sel] = False
+            if col0 is not None and sel.size:
+                lanes.append(col0 + sel)
+        if lanes:
+            arena.live = arena.live.at[np.concatenate(lanes)].set(False)
         self.counters["deleted"] += newly
         self._emit("delete", rows=newly)
         return newly
@@ -365,10 +506,36 @@ class SegmentedIndex:
 
     # -- queries ---------------------------------------------------------
 
+    def search_columns_batch(self, qs: np.ndarray,
+                             tau: int) -> ColumnSearchResult:
+        """Range search, column-compressed — the **primary** result
+        contract (DESIGN.md §6): ``qs`` (m, L) uint8 ->
+        ``ColumnSearchResult`` with (m, R) mask/dist planes over the
+        physical columns plus the (R,) global-id labels.  O(m · R)
+        where R = rows currently held (reclaimed by merge/compact) —
+        long-lived collections never pay O(ids-ever-assigned) per query;
+        the dense global-id plane is the opt-in ``search_batch``.  One
+        device dispatch end to end on the arena path."""
+        qs = np.asarray(qs, dtype=np.uint8)
+        if qs.ndim == 1:
+            qs = qs[None, :]
+        dist, col_ids, overflow = self._columns(qs, int(tau))
+        return ColumnSearchResult(mask=dist <= tau, dist=dist, ids=col_ids,
+                                  overflow=overflow)
+
+    def search_columns(self, q: np.ndarray, tau: int) -> ColumnSearchResult:
+        """Single-query ``search_columns_batch`` (m=1 planes squeezed)."""
+        res = self.search_columns_batch(np.asarray(q)[None], tau)
+        return ColumnSearchResult(mask=res.mask[0], dist=res.dist[0],
+                                  ids=res.ids, overflow=res.overflow)
+
     def search_batch(self, qs: np.ndarray, tau: int) -> SegmentedSearchResult:
-        """Range search, fanned out over the delta buffer and every
-        segment.  ``qs``: (m, L) uint8 queries -> (m, n_ids) global mask
-        and exact-distance planes (BIG off-mask / on dead ids)."""
+        """Range search on the **opt-in dense** contract: ``qs``: (m, L)
+        uint8 queries -> (m, n_ids) global mask and exact-distance
+        planes (BIG off-mask / on dead ids).  The scatter materializes
+        the full ever-assigned id axis — O(m · n_ids) host memory; use
+        ``search_columns_batch`` (the primary contract) when the corpus
+        is long-lived and churny."""
         qs = np.asarray(qs, dtype=np.uint8)
         if qs.ndim == 1:
             qs = qs[None, :]
@@ -384,18 +551,24 @@ class SegmentedIndex:
 
     def topk_batch(self, qs: np.ndarray, k: int,
                    tau0: Optional[int] = None) -> TopKResult:
-        """Exact k-nearest-neighbors over the live ids: the fan-out
-        planes of ``search_batch`` on a shared τ-escalation ladder, then
-        the shard-merge selection (``topk_from_dists``).  ``qs``: (m, L)
-        uint8 -> (m, k) int32 global ids / int32 exact distances,
-        ascending by (distance, id); (-1, BIG) pads past the live count.
+        """Exact k-nearest-neighbors over the live ids: the fused
+        one-dispatch arena program on a shared τ-escalation ladder —
+        traversal, delta scan, verify, and (distance, id) selection all
+        on device, so each rung costs one launch and transfers two
+        scalars; the final (m, k) ids/dists are the only per-request
+        result transfer (DESIGN.md §6).  ``qs``: (m, L) uint8 -> (m, k)
+        int32 global ids / int32 exact distances, ascending by
+        (distance, id); (-1, BIG) pads past the live count.
         Bit-identical to ``core.search.topk_batch`` on a static bST of
-        the surviving sketches (after the monotone global-id mapping).
+        the surviving sketches (after the monotone global-id mapping)
+        and to the per-segment reference fan-out (``use_arena=False``).
         Works over column-compressed planes — O(m · physical rows), not
         O(m · ids-ever-assigned)."""
         qs = np.asarray(qs, dtype=np.uint8)
         if qs.ndim == 1:
             qs = qs[None, :]
+        if self.use_arena:
+            return self._fused_topk(qs, int(k), tau0)
         return _ladder_topk(self._search_columns, self.n_live, self.b,
                             self.L, qs, k, tau0)
 
@@ -447,7 +620,10 @@ class SegmentedIndex:
             "delta_live": int(self._delta_live.sum()),
             "n_segments": len(self.segments),
             "segments": [(seg.n, seg.n_live) for seg in self.segments],
-            "space_bits": self.space_bits(), **self.counters,
+            "space_bits": self.space_bits(),
+            "arena_bytes": (self._arena.array_bytes()
+                            if self._arena is not None else 0),
+            **self.counters,
         }
 
     # -- internals -------------------------------------------------------
@@ -462,22 +638,37 @@ class SegmentedIndex:
         return build_bst(sk, self.b, self.lam)
 
     def _delta_planes(self) -> jnp.ndarray:
+        """(b, W, ndb) uint32 delta-buffer verify planes, with the row
+        axis padded up to the power-of-two bucket ``ndb = bucket_m(nd)``
+        (zero columns past nd — masked dead by every caller).  Bucketing
+        the brute-force scan's shape means a stream of single-row
+        inserts touches O(log delta_cap) compiled scan shapes instead of
+        re-jitting ``hamming_distances`` at every delta size."""
         if self._delta_vert is None:
+            nd = len(self._delta_ids)
+            ndb = bucket_m(nd)
             planes = pack_vertical(self._delta_sk, self.b)   # (nd, b, W)
-            self._delta_vert = jnp.asarray(
-                np.transpose(planes, (1, 2, 0)).copy())       # (b, W, nd)
+            vert = np.transpose(planes, (1, 2, 0))            # (b, W, nd)
+            if ndb != nd:
+                vert = np.concatenate(
+                    [vert, np.zeros(vert.shape[:2] + (ndb - nd,),
+                                    np.uint32)], axis=-1)
+            self._delta_vert = jnp.asarray(vert.copy())
         return self._delta_vert
 
     def _search_columns(self, qs: np.ndarray,
                         tau: int) -> Tuple[np.ndarray, np.ndarray, int]:
-        """(m, L) queries -> ((m, R) int32 distances over the physical
-        columns — BIG on non-results, (R,) int64 global id per column,
-        total overflow), where R = rows currently held (every segment's
-        rows, then the delta buffer's) — R shrinks with merge/compact,
-        unlike the ever-assigned global id space.  Every segment
-        contributes exact distances within τ; the delta buffer
-        contributes a brute-force scan clamped to the same τ so the
-        ladder logic sees one consistent contract."""
+        """Per-segment reference fan-out: (m, L) queries -> ((m, R) int32
+        distances over the physical columns — BIG on non-results, (R,)
+        int64 global id per column, total overflow), where R = rows
+        currently held (every segment's rows, then the delta buffer's) —
+        R shrinks with merge/compact, unlike the ever-assigned global id
+        space.  Every segment contributes exact distances within τ; the
+        delta buffer contributes a brute-force scan clamped to the same
+        τ so the ladder logic sees one consistent contract.  Costs one
+        device dispatch per segment plus one for the delta buffer; the
+        fused arena path (``_fused_columns``) is the bit-identical
+        single-dispatch replacement (DESIGN.md §6)."""
         m = qs.shape[0]
         dists: List[np.ndarray] = []
         col_ids: List[np.ndarray] = []
@@ -491,11 +682,13 @@ class SegmentedIndex:
                 dist = np.full((m, seg.n), BIG_I, np.int32)
             dists.append(dist)
             col_ids.append(seg.ids)
-        if len(self._delta_ids):
+        nd = len(self._delta_ids)
+        if nd:
             planes = pack_vertical(qs, self.b)                # (m, b, W)
             q_vert = jnp.asarray(np.transpose(planes, (1, 2, 0)).copy())
+            _dispatch("fanout")
             d = np.asarray(ops.hamming_distances(self._delta_planes(),
-                                                 q_vert))     # (m, nd)
+                                                 q_vert))[:, :nd]
             d = np.where(self._delta_live[None, :] & (d <= tau), d, BIG_I)
             dists.append(d.astype(np.int32))
             col_ids.append(self._delta_ids)
@@ -509,13 +702,21 @@ class SegmentedIndex:
                        tau: int) -> Tuple[np.ndarray, int]:
         """(m, L) queries -> ((m, n_ids) int32 global distance plane with
         BIG on non-results, total overflow): the column-compressed
-        fan-out scattered onto the full global-id axis (the range-search
-        result contract)."""
+        fan-out scattered onto the full global-id axis (the opt-in dense
+        range-search contract — O(m · ids-ever-assigned) memory)."""
         m = qs.shape[0]
-        dist, col_ids, overflow = self._search_columns(qs, tau)
+        dist, col_ids, overflow = self._columns(qs, tau)
         plane = np.full((m, self.n_ids), BIG_I, np.int32)
         plane[:, col_ids] = dist
         return plane, overflow
+
+    def _columns(self, qs: np.ndarray,
+                 tau: int) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Route to the fused arena path or the per-segment reference
+        fan-out (identical contracts, bit-identical results)."""
+        if self.use_arena:
+            return self._fused_columns(qs, tau)
+        return self._search_columns(qs, tau)
 
     def _search_segment(self, seg: Segment, qs_j: jnp.ndarray,
                         tau: int) -> Tuple[np.ndarray, int]:
@@ -524,6 +725,7 @@ class SegmentedIndex:
         backend's cached compiled searcher with the liveness bitmap as a
         traced argument, on the doubled capacity ladder until exact."""
         if self.backend == "multi":
+            _dispatch("fanout")
             res = mi_search_batch(seg.index, qs_j, tau,
                                   block_m=self.block_m, id_live=seg.live)
             return (np.asarray(res.dist, dtype=np.int32),
@@ -532,13 +734,17 @@ class SegmentedIndex:
             idx = seg.index
             cap = 1 << 14
             while True:
-                key = (id(idx), tau, cap)
+                # keyed on the monotonic segment serial, never id(): a
+                # serial is never reused, so a merged-away segment can
+                # never alias a live one's cached searcher
+                key = (seg.serial, tau, cap)
 
                 def build():
                     return make_sharded_searcher(idx, tau, cap_max=cap)
                 fn, _ = _pin_cache_get(_SHARDED_SEARCHER_CACHE,
                                        _SHARDED_SEARCHER_CACHE_CAP,
                                        key, idx, build)
+                _dispatch("fanout")
                 _, dists, ov = fn(qs_j)
                 if int(ov) == 0 or cap >= LADDER_CAP_MAX:
                     break
@@ -551,12 +757,335 @@ class SegmentedIndex:
         while True:
             fn = get_searcher(seg.index, tau, cap, batch=True,
                               block_m=self.block_m, with_live=True)
+            _dispatch("fanout")
             res = fn(qs_j, live_j)
             ov = int(np.asarray(res.overflow).sum())
             if ov == 0 or cap >= LADDER_CAP_MAX:
                 break
             cap *= 2
         return np.asarray(res.dist, dtype=np.int32), ov
+
+    # -- fused one-dispatch arena path (DESIGN.md §6) --------------------
+
+    def _seg_serials(self) -> Tuple[int, ...]:
+        return tuple(seg.serial for seg in self.segments)
+
+    def _refresh_arena(self) -> _ColumnArena:
+        """Bring the device-resident column arena (bst backend) up to
+        date with the segment stack.  A flush *appends* the new
+        segment's column block, base-offset lanes, id labels, and
+        liveness lanes to the existing device arrays (one concat per
+        flush, never per query); a merge or compact changes the stack's
+        serial fingerprint non-monotonically and triggers a full
+        rebuild — the same O(R) work as the index rebuild that caused
+        it."""
+        serials = self._seg_serials()
+        ar = self._arena
+        if ar is not None and ar.serials == serials:
+            return ar
+        incremental = (ar is not None and ar.cols is not None
+                       and len(serials) > len(ar.serials)
+                       and serials[:len(ar.serials)] == ar.serials)
+        if not incremental:
+            ar = _ColumnArena()
+        new_segs = self.segments[len(ar.serials):]
+        W = max(1, (self.L + 31) // 32)
+        cols_np, idx_np, gid_np, live_np, cid_np = [], [], [], [], []
+        col0 = int(ar.col_ids.shape[0])
+        root0 = 1 + ar.t_root_total          # slot 0: delta's trivial base
+        for seg in new_segs:
+            pv = pack_vertical(seg.sketches, self.b)          # (n, b, W)
+            cols_np.append(np.transpose(pv, (1, 2, 0)))
+            leaf_root = np.asarray(seg.index.tail.leaf_root)
+            id_leaf = np.asarray(seg.index.id_leaf)
+            idx_np.append((root0 + leaf_root[id_leaf]).astype(np.int32))
+            gid_np.append(seg.ids.astype(np.int32))
+            live_np.append(seg.live.copy())
+            cid_np.append(seg.ids)
+            ar.col_off[seg.serial] = col0
+            ar.root_off[seg.serial] = root0
+            col0 += seg.n
+            root0 += int(seg.index.tail.t_root)
+        empty_cols = jnp.zeros((self.b, W, 0), jnp.uint32)
+        old = ((ar.cols, ar.base_idx, ar.gids, ar.live)
+               if ar.cols is not None
+               else (empty_cols, jnp.zeros((0,), jnp.int32),
+                     jnp.zeros((0,), jnp.int32), jnp.zeros((0,), bool)))
+        if new_segs:
+            ar.cols = jnp.concatenate(
+                [old[0], jnp.asarray(np.concatenate(cols_np, axis=-1))],
+                axis=-1)
+            ar.base_idx = jnp.concatenate(
+                [old[1], jnp.asarray(np.concatenate(idx_np))])
+            ar.gids = jnp.concatenate(
+                [old[2], jnp.asarray(np.concatenate(gid_np))])
+            ar.live = jnp.concatenate(
+                [old[3], jnp.asarray(np.concatenate(live_np))])
+            ar.col_ids = np.concatenate([ar.col_ids] + cid_np)
+        else:
+            ar.cols, ar.base_idx, ar.gids, ar.live = old
+        ar.t_root_total = root0 - 1
+        ar.serials = serials
+        self._arena = ar
+        return ar
+
+    def _fused_fn(self, kind: str, tau: int, rung: int, kk: Optional[int]):
+        """Fetch (or build) the compiled fused program for this segment
+        stack: ``kind="cols"`` -> f(...) = ((mb, R) int32 dist plane,
+        overflow); ``kind="topk"`` -> ((mb, kk) ids, (mb, kk) dists,
+        min-survivors, overflow) — selection on device.  jit
+        re-specializes per (mb, ndb) shape bucket under one cache
+        entry."""
+        serials = self._seg_serials()
+        if serials != self._fused_serials:
+            # the stack changed generation: this index's programs keyed
+            # on the old fingerprint are permanently unreachable
+            # (serials are never reused) — drop them now so dead
+            # generations don't pin full column-arena copies until FIFO
+            # eviction
+            for stale in [k for k in _FUSED_CACHE
+                          if k[1] == self._fused_id]:
+                del _FUSED_CACHE[stale]
+            self._fused_serials = serials
+        key = (self.backend, self._fused_id, serials, kind, tau, rung, kk,
+               self.block_m)
+        fn = _FUSED_CACHE.get(key)
+        if fn is None:
+            build = {"bst": self._build_fused_bst,
+                     "multi": self._build_fused_multi,
+                     "sharded": self._build_fused_sharded}[self.backend]
+            fn = build(kind, tau, rung, kk)
+            while len(_FUSED_CACHE) >= _FUSED_CACHE_CAP:
+                _FUSED_CACHE.pop(next(iter(_FUSED_CACHE)))
+            _FUSED_CACHE[key] = fn
+            _CACHE_STATS["misses"] += 1   # same ledger as get_searcher
+        else:
+            _CACHE_STATS["hits"] += 1
+        return fn
+
+    def _build_fused_bst(self, kind: str, tau: int, rung: int,
+                         kk: Optional[int]):
+        """One jitted program for the whole bst stack: every segment's
+        2D-frontier traversal to its ℓ_s roots, a 0/BIG reach scatter
+        onto ONE concatenated root plane, the arena verify kernel over
+        sealed + delta columns (full-length paths, so the reach plane is
+        the only traversal output the verify needs), and the on-device
+        (distance, id) selection."""
+        arena = self._refresh_arena()
+        cap = CAP_MAX_DEFAULT << rung
+        indexes = [seg.index for seg in self.segments]
+        caps_list = [frontier_capacities(ix.t, self.b, tau, cap)
+                     for ix in indexes]
+        t_roots = [int(ix.tail.t_root) for ix in indexes]
+        cols0, idx0, gids0 = arena.cols, arena.base_idx, arena.gids
+        b_, block_m = self.b, self.block_m
+
+        @jax.jit
+        def run(qs, live_sealed, delta_vert, delta_live, delta_gids):
+            _note_trace()
+            qsi = qs.astype(jnp.int32)
+            m = qsi.shape[0]
+            row = jnp.arange(m, dtype=jnp.int32)[:, None]
+            planes = [jnp.zeros((m, 1), jnp.int32)]  # slot 0: delta base
+            overflow = jnp.zeros((m,), jnp.int32)
+            for ix, caps, t_root in zip(indexes, caps_list, t_roots):
+                ids, dists, valid, ov, _ = _traverse_frontier_batch(
+                    ix, qsi, tau=tau, caps=caps)
+                safe = jnp.where(valid, ids, 0)
+                reach = jnp.full((m, t_root + 1), BIG, jnp.int32).at[
+                    row, safe].min(jnp.where(valid, 0, BIG), mode="drop")
+                planes.append(reach[:, :t_root])
+                overflow = overflow + ov
+            base_plane = jnp.concatenate(planes, axis=1)
+            cols = jnp.concatenate([cols0, delta_vert], axis=-1)
+            live = jnp.concatenate([live_sealed, delta_live])
+            base_idx = jnp.concatenate(
+                [idx0, jnp.zeros((delta_vert.shape[-1],), jnp.int32)])
+            q_vert = jnp.transpose(pack_vertical_jax(qsi, b_), (1, 2, 0))
+            hm, dist = ops.sparse_verify_arena(
+                cols, q_vert, base_plane, base_idx, live, tau=tau,
+                block_m=block_m)
+            dist = jnp.where(hm > 0, dist, BIG)
+            if kind == "cols":
+                return dist, overflow.sum()
+            sel_ids, sel_d = select_topk_columns(
+                dist, jnp.concatenate([gids0, delta_gids]), kk)
+            min_surv = (dist < BIG).sum(axis=1).min()
+            return sel_ids, sel_d, min_surv, overflow.sum()
+        return run
+
+    def _build_fused_multi(self, kind: str, tau: int, rung: int,
+                           kk: Optional[int]):
+        """Fused stack program for MI segments: every segment's batched
+        MI trace (per-block traversal + candidate verify) inlined as a
+        sub-trace, delta scan and selection fused behind them."""
+        segs = list(self.segments)
+        cap_max = (1 << 15) << rung
+        mis = [seg.index for seg in segs]
+        params = []
+        for mi in mis:
+            caps_pb, cc = mi_trace_params(mi, tau, cap_max)
+            params.append((caps_pb, min(cc << rung, mi.n)))
+        gids_const = [jnp.asarray(seg.ids.astype(np.int32)) for seg in segs]
+        b_, block_m = self.b, self.block_m
+
+        @jax.jit
+        def run(qs, seg_lives, delta_vert, delta_live, delta_gids):
+            _note_trace()
+            qsi = qs.astype(jnp.int32)
+            dists: List[jnp.ndarray] = []
+            ov = jnp.int32(0)
+            for mi, (caps_pb, cc), live in zip(mis, params, seg_lives):
+                d, o = mi_column_dists(mi, qsi, tau, caps_pb, cc,
+                                       block_m=block_m, id_live=live)
+                dists.append(d)
+                ov = ov + o.sum()
+            q_vert = jnp.transpose(pack_vertical_jax(qsi, b_), (1, 2, 0))
+            dd = ops.hamming_distances(delta_vert, q_vert)
+            dd = jnp.where(delta_live[None, :] & (dd <= tau), dd, BIG)
+            dists.append(dd.astype(jnp.int32))
+            dist = jnp.concatenate(dists, axis=1)
+            if kind == "cols":
+                return dist, ov
+            sel_ids, sel_d = select_topk_columns(
+                dist, jnp.concatenate(gids_const + [delta_gids]), kk)
+            min_surv = (dist < BIG).sum(axis=1).min()
+            return sel_ids, sel_d, min_surv, ov
+        return run
+
+    def _build_fused_sharded(self, kind: str, tau: int, rung: int,
+                             kk: Optional[int]):
+        """Fused stack program for sharded-bST segments: each segment's
+        vmapped per-shard traversal+verify runs as a sub-trace and the
+        shard->global merge happens on device
+        (``sharded_column_dists``), so S shards × n_segments collapse
+        into the one launch."""
+        segs = list(self.segments)
+        cap = (1 << 14) << rung
+        idxs = [seg.index for seg in segs]
+        capss = []
+        for idx in idxs:
+            t_max = tuple(int(x) for x in np.asarray(idx.t).max(axis=0))
+            capss.append(frontier_capacities(t_max, idx.b, tau, cap))
+        gids_const = [jnp.asarray(seg.ids.astype(np.int32)) for seg in segs]
+        b_, block_m = self.b, self.block_m
+
+        @jax.jit
+        def run(qs, seg_lives, delta_vert, delta_live, delta_gids):
+            _note_trace()
+            qsi = qs.astype(jnp.int32)
+            dists: List[jnp.ndarray] = []
+            ov = jnp.int32(0)
+            for idx, caps, live in zip(idxs, capss, seg_lives):
+                d, o = sharded_column_dists(idx, qsi, tau, caps,
+                                            block_m=block_m, live=live)
+                dists.append(d.astype(jnp.int32))
+                ov = ov + o
+            q_vert = jnp.transpose(pack_vertical_jax(qsi, b_), (1, 2, 0))
+            dd = ops.hamming_distances(delta_vert, q_vert)
+            dd = jnp.where(delta_live[None, :] & (dd <= tau), dd, BIG)
+            dists.append(dd.astype(jnp.int32))
+            dist = jnp.concatenate(dists, axis=1)
+            if kind == "cols":
+                return dist, ov
+            sel_ids, sel_d = select_topk_columns(
+                dist, jnp.concatenate(gids_const + [delta_gids]), kk)
+            min_surv = (dist < BIG).sum(axis=1).min()
+            return sel_ids, sel_d, min_surv, ov
+        return run
+
+    def _fused_saturated(self, rung: int) -> bool:
+        start = {"bst": CAP_MAX_DEFAULT, "multi": 1 << 15,
+                 "sharded": 1 << 14}[self.backend]
+        if (start << rung) < LADDER_CAP_MAX:
+            return False
+        if self.backend == "multi":
+            # candidate caps floor at 1024 and double per rung alongside
+            # the frontier caps (mi_search_batch's ladder discipline)
+            return all((1024 << rung) >= seg.index.n
+                       for seg in self.segments)
+        return True
+
+    def _fused_call(self, kind: str, qs: np.ndarray, tau: int,
+                    kk: Optional[int] = None):
+        """Dispatch ONE fused program per capacity rung: pads the query
+        axis to its power-of-two bucket, assembles the (bucketed) delta
+        args, and escalates the frontier-capacity rung until the
+        traversal is exact — each retry is again a single launch."""
+        m = qs.shape[0]
+        mb = bucket_m(m)
+        qs_p = jnp.asarray(qs)
+        if mb != m:
+            qs_p = _pad_rows(qs_p, mb)
+        nd = len(self._delta_ids)
+        if nd:
+            delta_vert = self._delta_planes()
+            ndb = delta_vert.shape[-1]
+            delta_live = np.zeros(ndb, bool)
+            delta_live[:nd] = self._delta_live
+            delta_gids = np.zeros(ndb, np.int32)
+            delta_gids[:nd] = self._delta_ids.astype(np.int32)
+        else:
+            W = max(1, (self.L + 31) // 32)
+            delta_vert = jnp.zeros((self.b, W, 0), jnp.uint32)
+            delta_live = np.zeros(0, bool)
+            delta_gids = np.zeros(0, np.int32)
+        if self.backend == "bst":
+            seg_arg = self._refresh_arena().live
+        else:
+            seg_arg = tuple(jnp.asarray(seg.live) for seg in self.segments)
+        rung = 0
+        while True:
+            fn = self._fused_fn(kind, tau, rung, kk)
+            _dispatch("fused")
+            out = fn(jnp.asarray(qs_p), seg_arg, delta_vert,
+                     jnp.asarray(delta_live), jnp.asarray(delta_gids))
+            if int(out[-1]) == 0 or self._fused_saturated(rung):
+                return out
+            rung += 1
+
+    def _fused_columns(self, qs: np.ndarray,
+                       tau: int) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Arena-path ``_search_columns``: same ((m, R) dist, (R,) ids,
+        overflow) contract, one device dispatch per capacity rung."""
+        m = qs.shape[0]
+        r_sealed = sum(seg.n for seg in self.segments)
+        nd = len(self._delta_ids)
+        if r_sealed + nd == 0:
+            return (np.zeros((m, 0), np.int32), np.zeros((0,), np.int64),
+                    0)
+        dist, ov = self._fused_call("cols", qs, tau)
+        dist = np.asarray(dist)[:m, :r_sealed + nd]
+        col_ids = np.concatenate([seg.ids for seg in self.segments]
+                                 + [self._delta_ids])
+        return dist, col_ids, int(ov)
+
+    def _fused_topk(self, qs: np.ndarray, k: int,
+                    tau0: Optional[int]) -> TopKResult:
+        """The on-device τ-escalation ladder: each rung is one fused
+        launch whose selection already ran on device — the host reads
+        back two scalars (min survivor count, overflow) to steer the
+        ladder, and only the final (m, k) ids/dists when it stops."""
+        m = qs.shape[0]
+        n_live = self.n_live
+        if n_live == 0:
+            return TopKResult(ids=jnp.full((m, k), -1, jnp.int32),
+                              dists=jnp.full((m, k), BIG_I, jnp.int32),
+                              tau=0, overflow=0)
+        kk = min(int(k), n_live)
+        tau = tau0 if tau0 is not None else tau_for_k(self.b, self.L,
+                                                      n_live, kk)
+        tau = min(max(int(tau), 0), self.L)
+        while True:
+            ids, dists, min_surv, ov = self._fused_call("topk", qs, tau,
+                                                        kk=kk)
+            if int(min_surv) >= kk or tau >= self.L:
+                break
+            tau = min(self.L, max(tau + 1, 2 * tau))
+        dd, ids = _pad_topk(np.asarray(dists)[:m], np.asarray(ids)[:m],
+                            int(k))
+        return TopKResult(ids=jnp.asarray(ids), dists=jnp.asarray(dd),
+                          tau=tau, overflow=int(ov))
 
 
 class ShardedSegmentedIndex:
@@ -576,14 +1105,15 @@ class ShardedSegmentedIndex:
     def __init__(self, L: int, b: int, n_shards: int = 4, *,
                  delta_cap: int = 4096, backend: str = "bst",
                  lam: float = 0.5, auto_merge: bool = True,
-                 block_m: int = DEFAULT_BLOCK_M):
+                 block_m: int = DEFAULT_BLOCK_M, use_arena: bool = True):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         self.L, self.b = int(L), int(b)
         self.n_shards = int(n_shards)
         self.shards = [
             SegmentedIndex(L, b, delta_cap=delta_cap, backend=backend,
-                           lam=lam, auto_merge=auto_merge, block_m=block_m)
+                           lam=lam, auto_merge=auto_merge, block_m=block_m,
+                           use_arena=use_arena)
             for _ in range(self.n_shards)]
         self.n_ids = 0
         # global id -> shard is `id % S`; per-shard local ids are dense,
@@ -645,18 +1175,24 @@ class ShardedSegmentedIndex:
         return {"n_ids": self.n_ids, "n_live": self.n_live,
                 "tombstones": self.tombstones,
                 "n_segments": sum(len(s.segments) for s in self.shards),
+                "arena_bytes": sum(
+                    s._arena.array_bytes() if s._arena is not None else 0
+                    for s in self.shards),
                 "shards": [shard.stats() for shard in self.shards]}
 
     def _search_columns(self, qs: np.ndarray,
                         tau: int) -> Tuple[np.ndarray, np.ndarray, int]:
         """Column-compressed fan-out over every shard's stack: local
-        column ids relabel to global via ``gid = local * S + s``."""
+        column ids relabel to global via ``gid = local * S + s``.  Each
+        shard's stack answers through its own fused arena (one dispatch
+        per shard, flat in its segment count — DESIGN.md §6); the
+        per-shard merge stays on host like the static sharded path."""
         m = qs.shape[0]
         dists: List[np.ndarray] = []
         col_ids: List[np.ndarray] = []
         overflow = 0
         for s, shard in enumerate(self.shards):
-            dist, local_ids, ov = shard._search_columns(qs, tau)
+            dist, local_ids, ov = shard._columns(qs, tau)
             dists.append(dist)
             col_ids.append(local_ids * self.n_shards + s)
             overflow += ov

@@ -163,3 +163,88 @@ def sparse_verify_pallas(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
         paths_vert, q_vert[..., None], base_dist[None, :].astype(jnp.int32),
         tau=tau, block_m=1, block_n=block_n, interpret=interpret)
     return mask[0], dist[0]
+
+
+def _verify_arena_kernel(db_ref, q_ref, base_ref, idx_ref, live_ref,
+                         mask_ref, dist_ref, *, b: int, W: int, tau: int):
+    """One (query tile j, column block i) cell of the arena verify: the
+    per-column base distance is *gathered* through the segment-offset
+    lane instead of arriving as a dense (m, n) plane — ``base_ref`` is
+    the whole (BLOCK_M, T) concatenated per-root base plane for this
+    query tile, ``idx_ref`` the (BLOCK_N,) int32 plane index of each
+    column in the block, ``live_ref`` its (BLOCK_N,) int32 liveness lane
+    (0 = tombstoned; pruned exactly like an unreached subtrie)."""
+    dist = _tile_distances(db_ref[...], q_ref[...], b=b, W=W)
+    base = jnp.take(base_ref[...], idx_ref[...], axis=1)  # (BLOCK_M, BLOCK_N)
+    base = jnp.where(live_ref[...][None, :] != 0, base, BIG)
+    total = dist + base                                   # (BLOCK_M, BLOCK_N)
+    mask_ref[...] = (total <= tau).astype(jnp.int32)
+    dist_ref[...] = jnp.minimum(total, BIG)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tau", "block_m", "block_n", "interpret"))
+def sparse_verify_arena_pallas(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                               base_plane: jnp.ndarray,
+                               base_idx: jnp.ndarray, live: jnp.ndarray,
+                               *, tau: int,
+                               block_m: int = DEFAULT_BLOCK_M,
+                               block_n: int = DEFAULT_BLOCK_N,
+                               interpret: bool = False):
+    """Fused multi-segment verify over a **column arena** (DESIGN.md §6).
+
+    paths_vert: (b, W, n) uint32 — concatenated verify columns of every
+                segment plus the delta buffer (one column per physical
+                row, full-length vertical packing);
+    q_vert:     (b, W, m) uint32 query planes;
+    base_plane: (m, T) int32 — the concatenated per-(segment, ℓ_s-root)
+                base-distance plane (slot semantics are the caller's:
+                the segmented index stores 0 = reached / BIG = pruned,
+                with slot 0 the delta buffer's trivial base);
+    base_idx:   (n,) int32 — per-column index into ``base_plane``'s T
+                axis (segment columns point at segment_root_offset +
+                their ℓ_s root; delta columns at the trivial slot);
+    live:       (n,) int32 — per-column liveness lane (0 = tombstoned).
+
+    Returns ((m, n) int32 survival masks, (m, n) int32 totals clamped to
+    BIG).  Grid is the same (m/block_m, n/block_n) as
+    ``sparse_verify_batch_pallas`` — one launch sweeps every segment and
+    the delta buffer — but HBM traffic for the base term drops from an
+    (m, n) dense plane to (m, T) + (n,) int32 lanes (T = total ℓ_s
+    roots ≪ n).  The in-kernel gather is a lane-axis ``jnp.take`` per
+    (BLOCK_M, BLOCK_N) cell; on older Mosaic versions without dynamic
+    lane gathers, fall back to ``sparse_verify_batch_pallas`` with a
+    pre-gathered plane (``ops.sparse_verify_arena(use_kernel=False)``
+    takes that path through the oracle)."""
+    b, W, n = paths_vert.shape
+    m = q_vert.shape[-1]
+    T = base_plane.shape[-1]
+    assert n % block_n == 0, (n, block_n)
+    assert m % block_m == 0, (m, block_m)
+    assert base_plane.shape == (m, T), (base_plane.shape, m, T)
+    assert base_idx.shape == (n,), (base_idx.shape, n)
+    assert live.shape == (n,), (live.shape, n)
+    grid = (m // block_m, n // block_n)
+    kernel = functools.partial(_verify_arena_kernel, b=b, W=W, tau=tau)
+    mask, dist = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, W, block_n), lambda j, i: (0, 0, i)),
+            pl.BlockSpec((b, W, block_m), lambda j, i: (0, 0, j)),
+            pl.BlockSpec((block_m, T), lambda j, i: (j, 0)),
+            pl.BlockSpec((block_n,), lambda j, i: (i,)),
+            pl.BlockSpec((block_n,), lambda j, i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda j, i: (j, i)),
+            pl.BlockSpec((block_m, block_n), lambda j, i: (j, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(paths_vert, q_vert, base_plane.astype(jnp.int32),
+      base_idx.astype(jnp.int32), live.astype(jnp.int32))
+    return mask, dist

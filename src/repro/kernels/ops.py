@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from . import ref
 from .hamming_kernel import (BIG, DEFAULT_BLOCK_M, DEFAULT_BLOCK_N,
                              hamming_distances_pallas,
+                             sparse_verify_arena_pallas,
                              sparse_verify_batch_pallas, sparse_verify_pallas)
 
 
@@ -134,4 +135,52 @@ def sparse_verify_batch(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
     mask, dist = sparse_verify_batch_pallas(paths_p, q_p, base_p, tau=tau,
                                             block_m=block_m, block_n=block_n,
                                             interpret=not _on_tpu())
+    return mask[:m, :n], dist[:m, :n]
+
+
+def sparse_verify_arena(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                        base_plane: jnp.ndarray, base_idx: jnp.ndarray,
+                        live: jnp.ndarray, *, tau: int,
+                        block_m: int = DEFAULT_BLOCK_M,
+                        block_n: int = DEFAULT_BLOCK_N,
+                        use_kernel: bool | None = None):
+    """Fused multi-segment verify over a column arena (DESIGN.md §6).
+
+    paths_vert: (b, W, n) concatenated verify columns (all segments +
+                the delta buffer, one column per physical row);
+    q_vert:     (b, W, m) query planes;
+    base_plane: (m, T) per-(segment, root) base distances — T = total
+                ℓ_s roots across segments + 1 trivial slot, ≪ n;
+    base_idx:   (n,) int32 per-column index into the T axis (the
+                segment-offset lane);
+    live:       (n,) bool per-column liveness;
+    returns ((m, n) int32 masks, (m, n) int32 totals, BIG-clamped).
+
+    One launch sweeps every segment and the delta buffer: pads n to a
+    ``block_n`` multiple with dead lanes (live=False -> BIG, can never
+    survive), m to a ``block_m`` multiple with all-zero queries (rows
+    sliced off), and T to a lane multiple with BIG (never indexed)."""
+    n = paths_vert.shape[-1]
+    m = q_vert.shape[-1]
+    if use_kernel is None:
+        use_kernel = n >= block_n
+    if not use_kernel:
+        mask, dist = ref.sparse_verify_arena_ref(paths_vert, q_vert,
+                                                 base_plane, base_idx,
+                                                 live, tau)
+        return mask.astype(jnp.int32), dist
+    block_m = min(block_m, m)  # never compute more pad-query rows than m
+    paths_p = _pad_lanes(paths_vert, block_n)
+    q_p = _pad_lanes(q_vert, block_m)
+    pad_n = paths_p.shape[-1] - n
+    pad_m = q_p.shape[-1] - m
+    pad_t = (-base_plane.shape[-1]) % 128    # lane-align the plane axis
+    base_p = jnp.pad(base_plane.astype(jnp.int32),
+                     ((0, pad_m), (0, pad_t)),
+                     constant_values=jnp.int32(BIG))
+    idx_p = jnp.pad(base_idx.astype(jnp.int32), (0, pad_n))
+    live_p = jnp.pad(live.astype(jnp.int32), (0, pad_n))  # pads dead
+    mask, dist = sparse_verify_arena_pallas(
+        paths_p, q_p, base_p, idx_p, live_p, tau=tau, block_m=block_m,
+        block_n=block_n, interpret=not _on_tpu())
     return mask[:m, :n], dist[:m, :n]

@@ -57,6 +57,31 @@ def sparse_verify_batch_ref(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
     return total <= tau, jnp.minimum(total, BIG)
 
 
+def sparse_verify_arena_ref(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                            base_plane: jnp.ndarray, base_idx: jnp.ndarray,
+                            live: jnp.ndarray, tau: int):
+    """Arena verification oracle — the fused multi-segment contract
+    (DESIGN.md §6): the per-column base distance is an indirect lookup
+    through the segment-offset lane rather than a dense (m, n) plane.
+
+    paths_vert: (b, W, n) uint32 — concatenated per-row verify columns
+                of every segment + the delta buffer;
+    q_vert:     (b, W, m) uint32 — m query planes;
+    base_plane: (m, T) int32    — concatenated per-(segment, root) base
+                                  distances (BIG = pruned subtrie);
+    base_idx:   (n,) int32      — per-column index into the T axis;
+    live:       (n,) bool/int32 — per-column liveness (0 = tombstoned);
+    returns ((m, n) bool, (m, n) int32) — survival masks
+    (base + column dist <= tau) and totals, clamped to BIG on pruned or
+    dead lanes.
+    """
+    d = hamming_distances_ref(paths_vert, q_vert)        # (m, n)
+    base = base_plane.astype(jnp.int32)[:, base_idx]     # (m, n) gather
+    base = jnp.where(live.astype(bool)[None, :], base, BIG)
+    total = base + d
+    return total <= tau, jnp.minimum(total, BIG)
+
+
 def sparse_verify_ref(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
                       base_dist: jnp.ndarray, tau: int):
     """Single-query verification oracle: the m=1 row of the batch oracle.

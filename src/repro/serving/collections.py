@@ -34,6 +34,9 @@ class CollectionConfig:
                     after a delete (None = manual compaction only).
       n_stacks:     > 1 builds a ``ShardedSegmentedIndex`` with this many
                     independent per-shard segment stacks.
+      use_arena:    serve reads through the fused one-dispatch segment
+                    arena (DESIGN.md §6; default) — read latency stays
+                    flat in the collection's segment count.
       mi_blocks / n_shards / lam / block_m: forwarded to the index.
     """
 
@@ -48,6 +51,7 @@ class CollectionConfig:
     n_shards: int = 4
     lam: float = 0.5
     block_m: int = DEFAULT_BLOCK_M
+    use_arena: bool = True
 
     def create(self):
         """Instantiate the configured dynamic index."""
@@ -55,7 +59,7 @@ class CollectionConfig:
             raise ValueError(f"backend must be one of {BACKENDS}")
         kw = dict(delta_cap=self.delta_cap, backend=self.backend,
                   lam=self.lam, auto_merge=self.auto_merge,
-                  block_m=self.block_m)
+                  block_m=self.block_m, use_arena=self.use_arena)
         if self.n_stacks > 1:
             return ShardedSegmentedIndex(self.L, self.b, self.n_stacks, **kw)
         return SegmentedIndex(self.L, self.b, mi_blocks=self.mi_blocks,

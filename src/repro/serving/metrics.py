@@ -13,6 +13,13 @@ searcher cache (``repro.core.search.searcher_cache_info``): ``hits`` /
 ``misses`` are Python-cache lookups, ``traces`` counts actual jit
 traces — the number that must stop growing once every shape bucket is
 warm.
+
+Device-dispatch accounting comes from the segmented query path's
+process-level counters (``repro.core.segments.dispatch_stats``): the
+arena path costs one ``fused`` launch per τ rung regardless of segment
+count, while the reference path counts one ``fanout`` launch per
+segment — the dispatch counter is the per-segment accounting,
+aggregated where it is exact (DESIGN.md §6).
 """
 
 from __future__ import annotations
@@ -24,6 +31,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from ..core.search import searcher_cache_info
+from ..core.segments import dispatch_stats
 
 __all__ = ["LatencyWindow", "ServingMetrics"]
 
@@ -125,6 +133,7 @@ class ServingMetrics:
         lookups = cache["hits"] + cache["misses"]
         cache["hit_rate"] = cache["hits"] / lookups if lookups else 0.0
         out["searcher_cache"] = cache
+        out["device_dispatch"] = dispatch_stats()
         return out
 
     def render_text(self, extra: Optional[Dict[str, object]] = None) -> str:
@@ -152,6 +161,8 @@ class ServingMetrics:
         for k, v in sorted(snap["searcher_cache"].items()):
             val = f"{v:.4f}" if isinstance(v, float) else str(v)
             lines.append(f"searcher_cache_{k} {val}")
+        for k, v in sorted(snap["device_dispatch"].items()):
+            lines.append(f"device_dispatch_{k} {v}")
         for k, v in sorted((extra or {}).items()):
             lines.append(f"{k} {v}")
         return "\n".join(lines) + "\n"

@@ -410,7 +410,8 @@ class Scheduler:
                 extra[f'serving_queue_depth{{collection="{name}"}}'] = \
                     len(state.queue)
         for name, st in self.registry.stats().items():
-            for gauge in ("n_live", "tombstones", "n_segments", "n_ids"):
+            for gauge in ("n_live", "tombstones", "n_segments", "n_ids",
+                          "arena_bytes"):
                 if gauge in st:
                     extra[f'index_{gauge}{{collection="{name}"}}'] = st[gauge]
         return self.metrics.render_text(extra=extra)

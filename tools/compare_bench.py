@@ -1,0 +1,52 @@
+#!/usr/bin/env python3
+"""Compare a fresh ``benchmarks/run.py --out`` JSON against a committed
+seed baseline (``BENCH_*.json``) — the perf-trajectory check.
+
+Usage: ``python tools/compare_bench.py BASELINE.json CURRENT.json``
+
+Matches rows by name and prints the per-row us_per_call ratio
+(current / baseline).  Exits non-zero only on *structural* regressions —
+a baseline row that no longer exists in the current run (a benchmark
+silently dropped) — because absolute timings on shared CI runners are
+too noisy to gate on; the ratio table in the job log and the uploaded
+artifacts are the trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    return {row["name"]: row for row in doc.get("rows", [])}
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    base, cur = load_rows(argv[0]), load_rows(argv[1])
+    missing = sorted(set(base) - set(cur))
+    new = sorted(set(cur) - set(base))
+    print(f"# baseline {argv[0]}: {len(base)} rows; "
+          f"current {argv[1]}: {len(cur)} rows")
+    print("name,baseline_us,current_us,ratio")
+    for name in sorted(set(base) & set(cur)):
+        b = float(base[name]["us_per_call"]) or 1e-9
+        c = float(cur[name]["us_per_call"])
+        print(f"{name},{b:.2f},{c:.2f},{c / b:.2f}")
+    for name in new:
+        print(f"{name},-,{cur[name]['us_per_call']:.2f},new")
+    if missing:
+        print(f"STRUCTURAL REGRESSION: rows missing from current run: "
+              f"{missing}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
