@@ -17,6 +17,14 @@ Rows:
                                     segments — the fused arena path must
                                     keep both flat (DESIGN.md §6); the
                                     non-smoke run asserts it
+  * ``ingest/<ds>/capacity_{suffix,full}`` — fixed-corpus device/host
+                                    bytes per sealed row, tiered suffix
+                                    store vs full-length arena; asserts
+                                    the suffix layout at least halves
+                                    device column bytes (DESIGN.md §7)
+  * ``ingest/<ds>/tier_{hot,half,cold}`` — hot-budget sweep: column
+                                    bytes migrate to the host tier at an
+                                    unchanged fused dispatch count
 
 Correctness ride-along (every mode, incl. --smoke): the post-merge top-k
 must be bit-identical to a fresh static build over the survivors."""
@@ -125,3 +133,60 @@ def run(csv: Csv, datasets=("review",), k: int = 10) -> None:
         if not common.SMOKE:
             # flat, not linear: 16 segments may not cost 16x one segment
             assert sweep_t[16] < 6 * sweep_t[1], sweep_t
+
+        # capacity: tiered suffix column store vs the full-length arena
+        # on the same fixed corpus — device/host bytes per sealed row
+        # (DESIGN.md §7); the packed suffix must at least halve the
+        # device column bytes on every geometry with b*(L - l_s) <= 32
+        n_cap = min(n, cap_n(1 << 12))
+        cap_chunk = max(16, n_cap // 4)           # 4 sealed segments
+        cap_kw = dict(delta_cap=n_cap + 1, auto_merge=False)
+        col_bytes = {}
+        for layout in ("suffix", "full"):
+            ci = SegmentedIndex(cfg.L, cfg.b, layout=layout, **cap_kw)
+            for lo in range(0, n_cap, cap_chunk):
+                ci.insert(db[lo:lo + cap_chunk])
+                ci.flush()
+            ci.topk_batch(qs, k)              # builds the store + warms
+            st = ci.stats()
+            rows = sum(seg.n for seg in ci.segments)
+            store = ci._arena
+            col_bytes[layout] = store.col_bytes()
+            t_q = timeit(lambda: ci.topk_batch(qs, k))
+            csv.add(f"ingest/{name}/capacity_{layout}",
+                    t_q * 1e6 / len(qs),
+                    f"rows={rows};"
+                    f"bytes_per_row_device={store.col_bytes('hot') / rows:.2f};"
+                    f"bytes_per_row_host={store.host_bytes() / rows:.2f};"
+                    f"device_KiB={st['device_bytes'] / 1024:.1f};"
+                    f"host_KiB={st['host_bytes'] / 1024:.1f}")
+        assert col_bytes["full"] >= 2 * col_bytes["suffix"], col_bytes
+
+        # cold-tier sweep: shrink the hot budget full -> half -> zero;
+        # column bytes migrate to host while the query path must stay at
+        # the same fused dispatch count (staging is a transfer, not a
+        # launch)
+        disp_by_tag = {}
+        for frac, tag in ((1.0, "hot"), (0.5, "half"), (0.0, "cold")):
+            ti = SegmentedIndex(cfg.L, cfg.b, layout="suffix",
+                                hot_bytes=int(col_bytes["suffix"] * frac),
+                                **cap_kw)
+            for lo in range(0, n_cap, cap_chunk):
+                ti.insert(db[lo:lo + cap_chunk])
+                ti.flush()
+            ti.topk_batch(qs, k)              # warm (stage + compiles)
+            reset_dispatch_stats()
+            ti.topk_batch(qs, k)
+            disp = dispatch_stats()
+            disp_by_tag[tag] = disp["total"]
+            assert disp["fanout"] == 0, disp
+            rows = sum(seg.n for seg in ti.segments)
+            store = ti._arena
+            t_q = timeit(lambda: ti.topk_batch(qs, k))
+            csv.add(f"ingest/{name}/tier_{tag}", t_q * 1e6 / len(qs),
+                    f"hot_bytes={int(col_bytes['suffix'] * frac)};"
+                    f"dispatches={disp['total']};"
+                    f"bytes_per_row_device="
+                    f"{store.col_bytes('hot') / rows:.2f};"
+                    f"bytes_per_row_host={store.host_bytes() / rows:.2f}")
+        assert disp_by_tag["cold"] == disp_by_tag["hot"], disp_by_tag

@@ -2,7 +2,10 @@
 
 from .bitvector import BitVector
 from .bst import SketchIndex, build_bst, build_fst_style, build_louds
+from .column_store import (ColumnStore, SuffixGeometry, geometry_for,
+                           reset_tier_stats, tier_stats)
 from .cost_model import cost_multi, cost_single, frontier_capacities, sigs
+from .hamming import pack_suffix_words, pack_vertical, unpack_vertical
 from .multi_index import (MultiIndex, build_multi_index, choose_plan,
                           clear_mi_searcher_cache, make_mi_searcher,
                           mi_search, mi_search_batch)
@@ -26,4 +29,7 @@ __all__ = [
     "Segment", "SegmentedIndex", "SegmentedSearchResult",
     "ColumnSearchResult", "ShardedSegmentedIndex", "tombstone_bits",
     "dispatch_stats", "reset_dispatch_stats", "clear_fused_cache",
+    "ColumnStore", "SuffixGeometry", "geometry_for", "tier_stats",
+    "reset_tier_stats", "pack_vertical", "unpack_vertical",
+    "pack_suffix_words",
 ]

@@ -1,0 +1,330 @@
+"""Tiered suffix column store: the layout + placement layers of the
+segment data plane (DESIGN.md §7).
+
+The PR-5 arena (`segments._ColumnArena`) keeps one *full-length*
+(b, W, R) verify column per sealed row device-resident.  That is
+redundant: the fused program's traversal already computes the exact
+prefix distance down to every segment's collapse depth ℓ_s, and the
+verify kernel receives it through the gathered root base plane — so the
+columns only need the **suffix** below ℓ_s.  This module owns that
+observation end to end, split into two layers:
+
+**Layout** — per-segment packed suffix columns.  Each sealed segment
+gets a `_Block` whose geometry depends on its own ℓ_s: when the b bit
+planes of the S = L - ℓ_s suffix symbols fit one 32-bit word
+(b·S <= 32 — every paper dataset with b <= 2), the whole row packs into
+a single uint32 (`hamming.pack_suffix_words`, kernel
+`sparse_verify_arena_packed`); otherwise the block falls back to
+plane-packed (b, ceil(S/32), n) columns consumed by the unchanged
+full-length arena kernel with W = ceil(S/32).  Blocks with equal
+geometry share one kernel call inside the ONE jitted program per rung —
+the dispatch contract (`_DISPATCH_STATS`) counts program launches, not
+kernel bodies, so heterogeneous ℓ_s still costs one fused dispatch.
+
+**Placement** — per-block tier policy.  Hot blocks keep their columns
+device-resident (closed over by the compiled program, exactly like the
+PR-5 arena).  Cold blocks keep them host-packed only; before a rung
+executes, `stage()` copies every cold block's columns ahead into a
+device staging slab (one async `jax.device_put` per geometry group,
+bounded by the cold bytes of the current plan) that the program takes
+as a *traced* argument.  Demotion is LRU under the `hot_bytes` budget
+(`None` = unlimited: everything stays hot, byte-for-byte the PR-5
+behavior); freed budget promotes the most recently used cold block
+back.  Tier flips bump `gen`, which keys the fused-program cache — a
+stale program can never read a moved block.
+
+The store keeps the arena's maintenance surface (`serials`, `live`,
+`col_off`, `col_ids`, `array_bytes`) so `SegmentedIndex.delete` flips
+device liveness lanes in place and incremental flush appends work
+unchanged; `segments._ColumnArena` survives as the bit-identical
+full-length reference (`layout="full"`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hamming import n_words, pack_suffix_words, pack_vertical
+
+WORD_BYTES = 4
+TIER_HOT = "hot"
+TIER_COLD = "cold"
+
+# Process-wide placement counters (mirrors segments._DISPATCH_STATS):
+# promotions/demotions count tier flips, prefetches the cold blocks
+# staged to device, staged_bytes the bytes those copies moved.
+_TIER_STATS = {"promotions": 0, "demotions": 0, "prefetches": 0,
+               "staged_bytes": 0}
+
+
+def tier_stats() -> Dict[str, int]:
+    """Placement counters of the tiered column store: ``promotions`` /
+    ``demotions`` (tier flips under the ``hot_bytes`` budget),
+    ``prefetches`` (cold blocks copied ahead to the device staging slab)
+    and ``staged_bytes`` (bytes those copies moved)."""
+    return dict(_TIER_STATS)
+
+
+def reset_tier_stats() -> None:
+    for k in _TIER_STATS:
+        _TIER_STATS[k] = 0
+
+
+class SuffixGeometry(NamedTuple):
+    """Column geometry of one segment's suffix block: ``suffix_len`` =
+    L - ℓ_s symbols below the collapse depth; ``packed`` when all b bit
+    planes fit one uint32 word per row (b·suffix_len <= 32);
+    ``row_words`` the uint32 words per column (1 packed, b·ceil(S/32)
+    plane-packed)."""
+
+    suffix_len: int
+    packed: bool
+    row_words: int
+
+
+def geometry_for(L: int, b: int, ls: int) -> SuffixGeometry:
+    """Pick the layout for a segment collapsing at depth ``ls``."""
+    S = int(L) - int(ls)
+    if b * S <= 32:
+        return SuffixGeometry(S, True, 1)
+    return SuffixGeometry(S, False, b * n_words(S))
+
+
+@dataclasses.dataclass
+class _Block:
+    """One sealed segment's suffix columns + placement state.
+
+    ``cols_hot`` (device) and ``cols_cold`` (host) are mutually
+    exclusive — exactly one is set, per the block's ``tier``.  Packed
+    geometry stores (n,) uint32 words, plane geometry (b, W_sfx, n)
+    uint32.  ``base_idx`` (host, immutable once appended) is the
+    segment-offset lane into the global root base plane."""
+
+    serial: int
+    n: int
+    geom: SuffixGeometry
+    base_idx: np.ndarray
+    cols_hot: Optional[jnp.ndarray] = None
+    cols_cold: Optional[np.ndarray] = None
+    last_used: int = 0
+
+    @property
+    def tier(self) -> str:
+        return TIER_HOT if self.cols_hot is not None else TIER_COLD
+
+    @property
+    def col_bytes(self) -> int:
+        return self.n * self.geom.row_words * WORD_BYTES
+
+
+class _Group(NamedTuple):
+    """One geometry group of the current plan: the per-rung program runs
+    one verify kernel per group (inside the single fused dispatch).
+    ``perm`` maps the group's column order (hot blocks in stack order,
+    then cold blocks in stack order) back to global stack positions."""
+
+    geom: SuffixGeometry
+    cols_hot: Optional[jnp.ndarray]   # concatenated hot columns (device)
+    base_idx: jnp.ndarray             # (n_group,) int32 device constant
+    perm: np.ndarray                  # (n_group,) int64 stack positions
+    cold_blocks: Tuple[int, ...]      # indexes into store.blocks
+    cold_bytes: int
+
+
+class ColumnStore:
+    """Tiered suffix column store for one segment stack (bst backend).
+
+    Maintenance mirrors ``_ColumnArena``: a flush *appends* a block (and
+    its liveness/gid/id lanes) without touching existing ones; a merge
+    or compact changes the serial fingerprint non-monotonically and the
+    owner rebuilds from scratch.  ``delete`` flips the shared ``live``
+    lanes in place through ``col_off`` — liveness is a traced program
+    argument, so tier state never changes on delete.
+    """
+
+    def __init__(self, L: int, b: int, hot_bytes: Optional[int] = None):
+        self.L, self.b = int(L), int(b)
+        self.hot_bytes = hot_bytes
+        self.serials: Tuple[int, ...] = ()
+        self.blocks: List[_Block] = []
+        self.live: jnp.ndarray = jnp.zeros((0,), bool)
+        self.gids: jnp.ndarray = jnp.zeros((0,), jnp.int32)
+        self.col_ids = np.zeros((0,), np.int64)
+        self.col_off: Dict[int, int] = {}
+        self.root_off: Dict[int, int] = {}
+        self.t_root_total = 0
+        self.gen = 0                   # bumped on every tier flip
+        self._tick = 0                 # LRU clock
+        self._plan: Optional[Tuple[_Group, ...]] = None
+
+    @property
+    def n_cols(self) -> int:
+        return int(self.col_ids.shape[0])
+
+    # -- maintenance -----------------------------------------------------
+
+    def append_segment(self, seg) -> None:
+        """Append one sealed segment's block: suffix columns sliced below
+        its own ℓ_s, packed per :func:`geometry_for`, plus the shared
+        base-offset/gid/liveness/id lanes.  New blocks start hot; the
+        budget is enforced at :meth:`seal`."""
+        ls = int(seg.index.ls)
+        geom = geometry_for(self.L, self.b, ls)
+        sfx = seg.sketches[:, ls:]
+        if geom.packed:
+            cols = pack_suffix_words(sfx, self.b)            # (n,)
+        else:
+            cols = np.ascontiguousarray(
+                np.transpose(pack_vertical(sfx, self.b), (1, 2, 0)))
+        root0 = 1 + self.t_root_total        # slot 0: delta's trivial base
+        leaf_root = np.asarray(seg.index.tail.leaf_root)
+        id_leaf = np.asarray(seg.index.id_leaf)
+        base_idx = (root0 + leaf_root[id_leaf]).astype(np.int32)
+        self._tick += 1
+        self.blocks.append(_Block(
+            serial=seg.serial, n=seg.n, geom=geom, base_idx=base_idx,
+            cols_hot=jnp.asarray(cols), last_used=self._tick))
+        self.col_off[seg.serial] = self.n_cols
+        self.root_off[seg.serial] = root0
+        self.t_root_total += int(seg.index.tail.t_root)
+        self.live = jnp.concatenate([self.live, jnp.asarray(seg.live)])
+        self.gids = jnp.concatenate(
+            [self.gids, jnp.asarray(seg.ids.astype(np.int32))])
+        self.col_ids = np.concatenate([self.col_ids, seg.ids])
+        self._plan = None
+
+    def seal(self, serials: Tuple[int, ...]) -> None:
+        """Stamp the stack fingerprint and enforce the placement budget
+        (LRU demotion under pressure, promotion into freed room)."""
+        self.serials = serials
+        self._enforce_budget()
+
+    def _demote(self, blk: _Block) -> None:
+        blk.cols_cold = np.asarray(blk.cols_hot)
+        blk.cols_hot = None
+        _TIER_STATS["demotions"] += 1
+        self.gen += 1
+        self._plan = None
+
+    def _promote(self, blk: _Block) -> None:
+        blk.cols_hot = jnp.asarray(blk.cols_cold)
+        blk.cols_cold = None
+        self._tick += 1
+        blk.last_used = self._tick
+        _TIER_STATS["promotions"] += 1
+        self.gen += 1
+        self._plan = None
+
+    def _enforce_budget(self) -> None:
+        if self.hot_bytes is None:
+            return
+        budget = int(self.hot_bytes)
+        hot = lambda: [blk for blk in self.blocks if blk.tier == TIER_HOT]
+        used = sum(blk.col_bytes for blk in hot())
+        while used > budget:
+            victims = hot()
+            if not victims:
+                break
+            lru = min(victims, key=lambda blk: blk.last_used)
+            self._demote(lru)
+            used -= lru.col_bytes
+        # freed room (a merge shrank R, or the budget grew): pull the
+        # most recently used cold blocks back while they fit
+        cold = sorted((blk for blk in self.blocks if blk.tier == TIER_COLD),
+                      key=lambda blk: -blk.last_used)
+        for blk in cold:
+            if used + blk.col_bytes > budget:
+                continue
+            self._promote(blk)
+            used += blk.col_bytes
+
+    # -- plan / staging --------------------------------------------------
+
+    def plan(self) -> Tuple[_Group, ...]:
+        """Group blocks by geometry (one kernel call per group inside the
+        fused program): hot columns pre-concatenated device-side, cold
+        blocks listed for :meth:`stage`, base-offset lanes as one device
+        constant, and the stack-position permutation that restores the
+        global column order.  Cached until the stack or a tier changes."""
+        if self._plan is not None:
+            return self._plan
+        order: Dict[SuffixGeometry, List[int]] = {}
+        for bi, blk in enumerate(self.blocks):
+            order.setdefault(blk.geom, []).append(bi)
+        groups: List[_Group] = []
+        for geom, idxs in order.items():
+            hot = [i for i in idxs if self.blocks[i].tier == TIER_HOT]
+            cold = [i for i in idxs if self.blocks[i].tier == TIER_COLD]
+            perm = np.concatenate([
+                self.col_off[self.blocks[i].serial]
+                + np.arange(self.blocks[i].n)
+                for i in hot + cold]).astype(np.int64)
+            base_idx = np.concatenate(
+                [self.blocks[i].base_idx for i in hot + cold])
+            axis = 0 if geom.packed else -1
+            cols_hot = (jnp.concatenate(
+                [self.blocks[i].cols_hot for i in hot], axis=axis)
+                if hot else None)
+            groups.append(_Group(
+                geom=geom, cols_hot=cols_hot,
+                base_idx=jnp.asarray(base_idx), perm=perm,
+                cold_blocks=tuple(cold),
+                cold_bytes=sum(self.blocks[i].col_bytes for i in cold)))
+        self._plan = tuple(groups)
+        return self._plan
+
+    def stage(self) -> Tuple[Optional[jnp.ndarray], ...]:
+        """Copy-ahead: upload every cold block's columns into one device
+        staging slab per geometry group (async ``jax.device_put`` — the
+        transfers overlap the traversal that runs before the verify
+        consumes them).  Returns one traced-arg slab per plan group
+        (None where the group is fully hot); call once per fused query,
+        before the rung loop."""
+        slabs: List[Optional[jnp.ndarray]] = []
+        for g in self.plan():
+            if not g.cold_blocks:
+                slabs.append(None)
+                continue
+            axis = 0 if g.geom.packed else -1
+            cols = np.concatenate(
+                [self.blocks[i].cols_cold for i in g.cold_blocks], axis=axis)
+            slabs.append(jax.device_put(cols))
+            _TIER_STATS["prefetches"] += len(g.cold_blocks)
+            _TIER_STATS["staged_bytes"] += int(cols.nbytes)
+        return tuple(slabs)
+
+    # -- accounting ------------------------------------------------------
+
+    def array_bytes(self) -> int:
+        """Resident device bytes: hot columns + the shared gid/liveness
+        lanes + the per-group base-offset lanes (the staging slab is
+        transient and accounted by ``tier_stats()['staged_bytes']``)."""
+        by = int(self.live.nbytes + self.gids.nbytes)
+        by += sum(blk.col_bytes for blk in self.blocks
+                  if blk.tier == TIER_HOT)
+        by += sum(blk.base_idx.nbytes for blk in self.blocks)
+        return by
+
+    def host_bytes(self) -> int:
+        """Resident host bytes: cold columns (the host master copies)."""
+        return sum(blk.col_bytes for blk in self.blocks
+                   if blk.tier == TIER_COLD)
+
+    def col_bytes(self, tier: Optional[str] = None) -> int:
+        """Column payload bytes, optionally restricted to one tier —
+        the bytes-per-row numerator of the capacity benchmarks."""
+        return sum(blk.col_bytes for blk in self.blocks
+                   if tier is None or blk.tier == tier)
+
+    def tier_summary(self) -> Dict[str, int]:
+        """Per-store placement snapshot for ``SegmentedIndex.stats()``."""
+        hot = [blk for blk in self.blocks if blk.tier == TIER_HOT]
+        cold = [blk for blk in self.blocks if blk.tier == TIER_COLD]
+        return {"hot_blocks": len(hot), "cold_blocks": len(cold),
+                "hot_bytes": sum(blk.col_bytes for blk in hot),
+                "cold_bytes": sum(blk.col_bytes for blk in cold)}

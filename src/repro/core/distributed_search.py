@@ -117,6 +117,31 @@ class ShardedBST(NamedTuple):
     n_max: int
     max_leaves_per_root: int
 
+    def array_bytes(self, include_ids: bool = True) -> int:
+        """Resident device bytes of the SPMD pytree (the per-shard
+        padded arrays every shard's program closes over) — the sharded
+        entry of ``SegmentedIndex.space_ledger()``'s device column.
+        ``include_ids=False`` drops the id_leaf map, mirroring
+        ``SketchIndex.array_bytes``."""
+        by = 0
+        for lv in self.levels:
+            for arr in (lv.words, lv.cum, lv.labels):
+                if arr is not None:
+                    by += int(arr.nbytes)
+        for arr in (self.t, self.paths_vert, self.d_words, self.d_cum,
+                    self.leaf_root, self.n_local):
+            by += int(arr.nbytes)
+        if include_ids:
+            by += int(self.id_leaf.nbytes)
+        return by
+
+    def model_bits(self) -> int:
+        """Model-space accounting of the sharded layout: in this padded
+        SPMD form the device arrays ARE the model (shard-uniform shapes
+        are the price of the single vmapped program), so the bit count
+        is the padded-array payload minus the host-side routing maps."""
+        return 8 * self.array_bytes(include_ids=False)
+
 
 def _pad_to(arr: np.ndarray, n: int, fill=0) -> np.ndarray:
     pad = n - arr.shape[0]

@@ -60,6 +60,75 @@ def pack_vertical(sketches: np.ndarray, b: int) -> np.ndarray:
     return planes
 
 
+def unpack_vertical(planes: np.ndarray, b: int, L: int) -> np.ndarray:
+    """Inverse of :func:`pack_vertical`: (n, b, W) uint32 bit planes ->
+    (n, L) uint8 sketches (host-side).
+
+    The segment stack stores sealed sketches packed (b bits per symbol
+    instead of 8) and unpacks only when a merge/compact needs the raw
+    characters back (DESIGN.md §7).
+
+    >>> sk = np.array([[3, 0, 1, 2]], np.uint8)
+    >>> bool((unpack_vertical(pack_vertical(sk, 2), 2, 4) == sk).all())
+    True
+    """
+    planes = np.asarray(planes, dtype=np.uint32)
+    n = planes.shape[0]
+    pos = np.arange(L)
+    word_idx = pos // WORD_BITS
+    bit_idx = (pos % WORD_BITS).astype(np.uint32)
+    out = np.zeros((n, L), np.uint8)
+    for i in range(b):
+        bits = (planes[:, i, word_idx] >> bit_idx) & np.uint32(1)  # (n, L)
+        out |= (bits.astype(np.uint8) << i)
+    return out
+
+
+def pack_suffix_words(sketches: np.ndarray, b: int) -> np.ndarray:
+    """(n, S) uint8 suffixes with b·S <= 32 -> (n,) uint32, all b bit
+    planes of one row packed into a single word (host-side).
+
+    Plane ``i``'s S bits occupy bit offsets [i·S, (i+1)·S) LSB-first —
+    the layout of the packed suffix column store (DESIGN.md §7):
+    XOR-ing two words and OR-folding the b S-bit fields reproduces the
+    vertical-format Hamming distance of the suffixes.
+    """
+    sketches = np.asarray(sketches)
+    if sketches.ndim == 1:
+        sketches = sketches[None, :]
+    n, S = sketches.shape
+    if b * S > WORD_BITS:
+        raise ValueError(f"b*S = {b * S} exceeds one {WORD_BITS}-bit word")
+    out = np.zeros((n,), np.uint64)
+    for i in range(b):
+        bits = ((sketches >> i) & 1).astype(np.uint64)        # (n, S)
+        shifts = (np.arange(S) + i * S).astype(np.uint64)
+        out |= (bits << shifts).sum(axis=1, dtype=np.uint64)
+    return out.astype(np.uint32)
+
+
+def pack_suffix_words_jax(sketches: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Traceable :func:`pack_suffix_words` — packs the (m, S) query
+    suffixes inside the fused program so the packed-suffix verify kernel
+    sees queries in the exact column layout."""
+    if sketches.ndim == 1:
+        sketches = sketches[None, :]
+    m, S = sketches.shape
+    if b * S > WORD_BITS:
+        raise ValueError(f"b*S = {b * S} exceeds one {WORD_BITS}-bit word")
+    if S == 0:
+        return jnp.zeros((m,), jnp.uint32)
+    s = sketches.astype(jnp.uint32)
+    out = jnp.zeros((m,), jnp.uint32)
+    for i in range(b):
+        bits = (s >> jnp.uint32(i)) & jnp.uint32(1)           # (m, S)
+        shifts = (jnp.arange(S, dtype=jnp.uint32)
+                  + jnp.uint32(i * S))
+        # disjoint bit positions: the sum is an exact OR
+        out = out | (bits << shifts[None, :]).sum(axis=1, dtype=jnp.uint32)
+    return out
+
+
 def pack_vertical_jax(sketches: jnp.ndarray, b: int) -> jnp.ndarray:
     """Traceable version of :func:`pack_vertical` — used when sketches are
     produced on-device (e.g. dedup inside the data pipeline)."""

@@ -231,6 +231,26 @@ def _traverse_frontier_batch(index: SketchIndex, qs: jnp.ndarray, *,
     return ids, dists, valid, overflow, traversed
 
 
+def scatter_root_plane(ids: jnp.ndarray, vals: jnp.ndarray,
+                       valid: jnp.ndarray, m: int,
+                       t_root: int) -> jnp.ndarray:
+    """Scatter one segment's final frontier onto its (m, t_root) slice of
+    the concatenated ℓ_s-root base plane (the fused programs' traversal →
+    verify hand-off, DESIGN.md §6/§7): per-root minimum of ``vals`` over
+    the valid frontier entries, BIG where the traversal pruned the root.
+    The full-length arena passes ``vals = 0`` (reached/pruned only — its
+    columns recompute the prefix inside the XOR); the suffix store passes
+    ``vals = dists``, the traversal's exact prefix distances, which the
+    suffix verify adds to complete the full-length Hamming distance bit
+    for bit.  The scratch slot ``t_root`` absorbs ``mode="drop"`` pads
+    and is sliced off."""
+    row = jnp.arange(m, dtype=jnp.int32)[:, None]
+    safe = jnp.where(valid, ids, 0)
+    reach = jnp.full((m, t_root + 1), BIG, jnp.int32).at[
+        row, safe].min(jnp.where(valid, vals, BIG), mode="drop")
+    return reach[:, :t_root]
+
+
 def select_topk_columns(dist: jnp.ndarray, col_ids: jnp.ndarray, k: int):
     """Traced k-smallest selection over labeled column planes: the
     on-device counterpart of ``distributed_search.topk_from_dists``.

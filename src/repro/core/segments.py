@@ -62,20 +62,29 @@ import numpy as np
 from ..kernels import ops
 from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
 from .bst import BIG, build_bst
+from .column_store import ColumnStore
 from .cost_model import frontier_capacities, tau_for_k
 from .distributed_search import (build_sharded_bst, make_sharded_searcher,
                                  sharded_column_dists, topk_from_dists)
-from .hamming import pack_vertical, pack_vertical_jax
+from .hamming import (n_words, pack_suffix_words_jax, pack_vertical,
+                      pack_vertical_jax, unpack_vertical)
 from .multi_index import (build_multi_index, mi_column_dists, mi_search_batch,
                           mi_trace_params)
 from .search import (CAP_MAX_DEFAULT, LADDER_CAP_MAX, TopKResult,
                      _CACHE_STATS, _note_trace, _pad_rows, _pad_topk,
                      _pin_cache_get, _traverse_frontier_batch, bucket_m,
-                     get_searcher, select_topk_columns)
+                     get_searcher, scatter_root_plane, select_topk_columns)
 
 BIG_I = int(BIG)
 
 BACKENDS = ("bst", "multi", "sharded")
+
+# Column-store layouts of the fused arena path (bst backend,
+# DESIGN.md §7): "suffix" (default) stores per-segment packed suffix
+# columns below each segment's ℓ_s in the tiered ``ColumnStore``;
+# "full" keeps the PR-5 full-length ``_ColumnArena`` — the bit-identical
+# always-hot reference.
+LAYOUTS = ("suffix", "full")
 
 # Monotonic segment serials: every sealed Segment gets the next value,
 # and merged/compacted replacements get fresh ones.  Serials key every
@@ -131,21 +140,33 @@ class Segment:
     Attributes:
       index:    the queryable structure (``SketchIndex``, ``MultiIndex``,
                 or ``ShardedBST`` depending on the stack's backend).
-      sketches: (n_seg, L) uint8 — retained host-side so merges/compacts
-                can rebuild without touching the encodings.
+      packed:   (n_seg, b, W) uint32 — the sealed sketches retained
+                host-side in ``pack_vertical`` bit-plane form (b bits per
+                symbol instead of 8 — an 8/b× host-RAM saving,
+                DESIGN.md §7); merges/compacts unpack on demand through
+                :attr:`sketches`.
       ids:      (n_seg,) int64 global ids, sorted ascending.
       live:     (n_seg,) bool tombstone bitmap (False = deleted).
+      L, b:     the sketch geometry ``packed`` was packed with.
       serial:   process-monotonic id (auto-assigned); keys every cached
                 compiled artifact for this segment — never reused, unlike
                 ``id()``.
     """
 
     index: object
-    sketches: np.ndarray
+    packed: np.ndarray
     ids: np.ndarray
     live: np.ndarray
+    L: int
+    b: int
     serial: int = dataclasses.field(
         default_factory=lambda: next(_SEG_SERIALS))
+
+    @property
+    def sketches(self) -> np.ndarray:
+        """(n_seg, L) uint8 — unpacked on demand (merge/compact rebuilds
+        and the suffix column slicing are the only consumers)."""
+        return unpack_vertical(self.packed, self.b, self.L)
 
     @property
     def n(self) -> int:
@@ -211,12 +232,35 @@ class _ColumnArena:
         self.root_off: Dict[int, int] = {}
         self.t_root_total = 0
 
+    @property
+    def n_cols(self) -> int:
+        """Columns currently held (the shared maintenance surface with
+        ``column_store.ColumnStore``)."""
+        return int(self.col_ids.shape[0])
+
     def array_bytes(self) -> int:
         """Device bytes held by the arena (space accounting, §6)."""
         if self.cols is None:
             return 0
         return int(self.cols.nbytes + self.base_idx.nbytes
                    + self.gids.nbytes + self.live.nbytes)
+
+    def host_bytes(self) -> int:
+        """The full-length arena keeps no host master copies (it is the
+        always-hot reference layout)."""
+        return 0
+
+    def col_bytes(self, tier: Optional[str] = None) -> int:
+        """Column payload bytes (all device-resident — the full-length
+        baseline of the bytes-per-row benchmarks)."""
+        if self.cols is None or tier == "cold":
+            return 0
+        return int(self.cols.nbytes)
+
+    def tier_summary(self) -> Dict[str, int]:
+        n_blocks = len(self.col_off)
+        return {"hot_blocks": n_blocks, "cold_blocks": 0,
+                "hot_bytes": self.col_bytes(), "cold_bytes": 0}
 
 
 # make_sharded_searcher has no process-level cache of its own (the static
@@ -292,6 +336,16 @@ class SegmentedIndex:
                   arena (DESIGN.md §6) — one device launch per τ-ladder
                   rung regardless of segment count, bit-identical to the
                   per-segment reference fan-out (False restores it).
+      layout:     column layout of the arena path (bst backend,
+                  DESIGN.md §7): "suffix" (default) stores packed
+                  per-segment suffix columns below each segment's ℓ_s in
+                  the tiered ``ColumnStore``; "full" keeps the
+                  full-length ``_ColumnArena`` — the bit-identical
+                  always-hot reference.
+      hot_bytes:  device budget (bytes) for hot suffix-column blocks;
+                  cold blocks stay host-packed and are staged per query
+                  (LRU demotion under pressure).  None = unlimited
+                  (everything hot — the PR-5 placement).
 
     >>> import numpy as np
     >>> idx = SegmentedIndex(L=8, b=2, delta_cap=4)
@@ -307,9 +361,13 @@ class SegmentedIndex:
     def __init__(self, L: int, b: int, *, delta_cap: int = 4096,
                  backend: str = "bst", mi_blocks: int = 2, n_shards: int = 4,
                  lam: float = 0.5, auto_merge: bool = True,
-                 block_m: int = DEFAULT_BLOCK_M, use_arena: bool = True):
+                 block_m: int = DEFAULT_BLOCK_M, use_arena: bool = True,
+                 layout: str = "suffix",
+                 hot_bytes: Optional[int] = None):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}")
+        if layout not in LAYOUTS:
+            raise ValueError(f"layout must be one of {LAYOUTS}")
         self.L = int(L)
         self.b = int(b)
         self.delta_cap = int(delta_cap)
@@ -320,6 +378,8 @@ class SegmentedIndex:
         self.auto_merge = bool(auto_merge)
         self.block_m = int(block_m)
         self.use_arena = bool(use_arena)
+        self.layout = layout
+        self.hot_bytes = hot_bytes
 
         self.segments: List[Segment] = []
         self.n_ids = 0                      # global ids ever assigned
@@ -327,9 +387,13 @@ class SegmentedIndex:
         self._delta_ids = np.zeros((0,), np.int64)
         self._delta_live = np.zeros((0,), bool)
         self._delta_vert: Optional[jnp.ndarray] = None  # cached (b, W, ndb)
-        self._arena: Optional[_ColumnArena] = None      # bst backend only
+        # bst backend only: the tiered suffix ColumnStore (layout
+        # "suffix") or the full-length _ColumnArena reference ("full") —
+        # both expose the same maintenance surface (serials / live /
+        # col_off / col_ids / array_bytes)
+        self._arena: Optional[object] = None
         self._fused_id = next(_SEG_SERIALS)             # per-index cache scope
-        self._fused_serials: Tuple[int, ...] = ()       # last program gen
+        self._fused_stamp: Tuple = ()                   # (serials, gen)
         self.counters = {"flushes": 0, "merges": 0, "compactions": 0,
                          "inserted": 0, "deleted": 0}
         # write hook: fn(event: str, info: dict) fired after every
@@ -416,8 +480,9 @@ class SegmentedIndex:
         if live.any():
             sk = self._delta_sk[live]
             ids = self._delta_ids[live]
-            seg = Segment(index=self._build(sk), sketches=sk, ids=ids,
-                          live=np.ones(len(ids), bool))
+            seg = Segment(index=self._build(sk),
+                          packed=pack_vertical(sk, self.b), ids=ids,
+                          live=np.ones(len(ids), bool), L=self.L, b=self.b)
             self.segments.append(seg)
             self.counters["flushes"] += 1
             self._emit("flush", rows=seg.n)
@@ -450,8 +515,8 @@ class SegmentedIndex:
         del self.segments[hi], self.segments[lo]
         if len(ids):
             self.segments.insert(lo, Segment(
-                index=self._build(sk), sketches=sk, ids=ids,
-                live=np.ones(len(ids), bool)))
+                index=self._build(sk), packed=pack_vertical(sk, self.b),
+                ids=ids, live=np.ones(len(ids), bool), L=self.L, b=self.b))
         self.counters["merges"] += 1
         self._emit("merge", rows=int(len(ids)))
         return True
@@ -495,8 +560,10 @@ class SegmentedIndex:
                 out[si] = None
             else:
                 sk, ids = seg.sketches[seg.live], seg.ids[seg.live]
-                out[si] = Segment(index=self._build(sk), sketches=sk,
-                                  ids=ids, live=np.ones(len(ids), bool))
+                out[si] = Segment(index=self._build(sk),
+                                  packed=pack_vertical(sk, self.b), ids=ids,
+                                  live=np.ones(len(ids), bool), L=self.L,
+                                  b=self.b)
             done += 1
         self.segments = [s for s in out if s is not None]
         self.counters["compactions"] += done
@@ -597,22 +664,63 @@ class SegmentedIndex:
     def __len__(self) -> int:
         return self.n_live
 
-    def space_bits(self) -> int:
-        """Model-space accounting: per-segment index bits + one tombstone
-        bitmap per segment and one for the delta buffer (DESIGN.md §4 —
-        the dynamic overhead next to ``BitVector.nbits``'s static
-        accounting), + raw delta rows at b bits per character."""
-        bits = 0
+    def space_ledger(self) -> Dict[str, int]:
+        """The one consistent space ledger (DESIGN.md §7):
+
+        ``model_bits``   — the succinct model: per-segment index bits +
+          tombstone bitmaps, PLUS everything the dynamic machinery
+          allocates per row that the old ``space_bits`` drifted away
+          from: the arena's base_idx/gids/live lanes (9 bytes per sealed
+          column) and the delta verify planes at the power-of-two bucket
+          size ``_delta_planes()`` actually allocates (not the raw row
+          count).  Deterministic in the lifecycle state — lazily built
+          arrays are accounted at their steady-state size.
+        ``device_bytes`` — resident device arrays: the column store /
+          arena (hot columns + lanes), the materialized delta planes,
+          and every segment's static index pytree.
+        ``host_bytes``   — resident host arrays: packed sealed sketches,
+          id/liveness lanes, raw delta rows, and cold column blocks.
+        """
+        model = 0
+        r_sealed = 0
         for seg in self.segments:
-            bits += int(seg.index.model_bits()) + tombstone_bits(seg.n)
+            model += int(seg.index.model_bits()) + tombstone_bits(seg.n)
+            r_sealed += seg.n
         nd = len(self._delta_ids)
+        W = n_words(self.L)
         if nd:
-            bits += nd * self.L * self.b + tombstone_bits(nd)
-        return bits
+            model += bucket_m(nd) * self.b * W * 32 + tombstone_bits(nd)
+        if r_sealed and self.use_arena and self.backend == "bst":
+            model += r_sealed * (4 + 4 + 1) * 8   # base_idx/gids/live lanes
+        device = 0
+        host = 0
+        ar = self._arena
+        if ar is not None:
+            device += ar.array_bytes()
+            host += ar.host_bytes()
+        if self._delta_vert is not None:
+            device += int(self._delta_vert.nbytes)
+        for seg in self.segments:
+            device += int(seg.index.array_bytes())
+            host += int(seg.packed.nbytes + seg.ids.nbytes
+                        + seg.live.nbytes)
+        host += int(self._delta_sk.nbytes + self._delta_ids.nbytes
+                    + self._delta_live.nbytes)
+        return {"model_bits": model, "device_bytes": device,
+                "host_bytes": host}
+
+    def space_bits(self) -> int:
+        """Model-space accounting — ``space_ledger()['model_bits']``:
+        per-segment index bits + tombstone bitmaps (DESIGN.md §4) + the
+        arena lanes and bucket-padded delta planes the dynamic path
+        allocates per row."""
+        return self.space_ledger()["model_bits"]
 
     def stats(self) -> Dict[str, object]:
-        """Lifecycle counters and per-segment occupancy (for dashboards
-        and the ingest benchmark)."""
+        """Lifecycle counters, per-segment occupancy, and the space
+        ledger (for dashboards and the ingest benchmark)."""
+        led = self.space_ledger()
+        ar = self._arena
         return {
             "n_ids": self.n_ids, "n_live": self.n_live,
             "tombstones": self.tombstones,
@@ -620,9 +728,13 @@ class SegmentedIndex:
             "delta_live": int(self._delta_live.sum()),
             "n_segments": len(self.segments),
             "segments": [(seg.n, seg.n_live) for seg in self.segments],
-            "space_bits": self.space_bits(),
-            "arena_bytes": (self._arena.array_bytes()
-                            if self._arena is not None else 0),
+            "space_bits": led["model_bits"],
+            "device_bytes": led["device_bytes"],
+            "host_bytes": led["host_bytes"],
+            "arena_bytes": ar.array_bytes() if ar is not None else 0,
+            "tier": (ar.tier_summary() if ar is not None else
+                     {"hot_blocks": 0, "cold_blocks": 0, "hot_bytes": 0,
+                      "cold_bytes": 0}),
             **self.counters,
         }
 
@@ -794,8 +906,7 @@ class SegmentedIndex:
         col0 = int(ar.col_ids.shape[0])
         root0 = 1 + ar.t_root_total          # slot 0: delta's trivial base
         for seg in new_segs:
-            pv = pack_vertical(seg.sketches, self.b)          # (n, b, W)
-            cols_np.append(np.transpose(pv, (1, 2, 0)))
+            cols_np.append(np.transpose(seg.packed, (1, 2, 0)))
             leaf_root = np.asarray(seg.index.tail.leaf_root)
             id_leaf = np.asarray(seg.index.id_leaf)
             idx_np.append((root0 + leaf_root[id_leaf]).astype(np.int32))
@@ -829,6 +940,29 @@ class SegmentedIndex:
         self._arena = ar
         return ar
 
+    def _refresh_store(self) -> ColumnStore:
+        """Bring the tiered suffix ``ColumnStore`` (bst backend,
+        ``layout="suffix"``) up to date with the segment stack — the
+        same incremental discipline as ``_refresh_arena``: a flush
+        appends one block, a merge/compact triggers a rebuild.  Sealing
+        enforces the ``hot_bytes`` placement budget (LRU demotion /
+        promotion), so tier flips happen here, between queries — never
+        inside a compiled program."""
+        serials = self._seg_serials()
+        st = self._arena
+        if isinstance(st, ColumnStore) and st.serials == serials:
+            return st
+        incremental = (isinstance(st, ColumnStore)
+                       and len(serials) > len(st.serials)
+                       and serials[:len(st.serials)] == st.serials)
+        if not incremental:
+            st = ColumnStore(self.L, self.b, hot_bytes=self.hot_bytes)
+        for seg in self.segments[len(st.serials):]:
+            st.append_segment(seg)
+        st.seal(serials)
+        self._arena = st
+        return st
+
     def _fused_fn(self, kind: str, tau: int, rung: int, kk: Optional[int]):
         """Fetch (or build) the compiled fused program for this segment
         stack: ``kind="cols"`` -> f(...) = ((mb, R) int32 dist plane,
@@ -837,21 +971,27 @@ class SegmentedIndex:
         re-specializes per (mb, ndb) shape bucket under one cache
         entry."""
         serials = self._seg_serials()
-        if serials != self._fused_serials:
-            # the stack changed generation: this index's programs keyed
-            # on the old fingerprint are permanently unreachable
-            # (serials are never reused) — drop them now so dead
-            # generations don't pin full column-arena copies until FIFO
-            # eviction
+        suffix_store = self.backend == "bst" and self.layout == "suffix"
+        # the placement generation joins the fingerprint: a tier flip
+        # moves columns between device closure and staged slab, so a
+        # pre-flip program must never be reused
+        gen = self._refresh_store().gen if suffix_store else 0
+        if (serials, gen) != self._fused_stamp:
+            # the stack or placement changed generation: this index's
+            # programs keyed on the old fingerprint are permanently
+            # unreachable (serials/gen are monotonic) — drop them now so
+            # dead generations don't pin full column-arena copies until
+            # FIFO eviction
             for stale in [k for k in _FUSED_CACHE
-                          if k[1] == self._fused_id]:
+                          if k[2] == self._fused_id]:
                 del _FUSED_CACHE[stale]
-            self._fused_serials = serials
-        key = (self.backend, self._fused_id, serials, kind, tau, rung, kk,
-               self.block_m)
+            self._fused_stamp = (serials, gen)
+        key = (self.backend, self.layout, self._fused_id, serials, gen,
+               kind, tau, rung, kk, self.block_m)
         fn = _FUSED_CACHE.get(key)
         if fn is None:
-            build = {"bst": self._build_fused_bst,
+            build = {"bst": (self._build_fused_bst_suffix if suffix_store
+                             else self._build_fused_bst),
                      "multi": self._build_fused_multi,
                      "sharded": self._build_fused_sharded}[self.backend]
             fn = build(kind, tau, rung, kk)
@@ -885,16 +1025,15 @@ class SegmentedIndex:
             _note_trace()
             qsi = qs.astype(jnp.int32)
             m = qsi.shape[0]
-            row = jnp.arange(m, dtype=jnp.int32)[:, None]
             planes = [jnp.zeros((m, 1), jnp.int32)]  # slot 0: delta base
             overflow = jnp.zeros((m,), jnp.int32)
             for ix, caps, t_root in zip(indexes, caps_list, t_roots):
                 ids, dists, valid, ov, _ = _traverse_frontier_batch(
                     ix, qsi, tau=tau, caps=caps)
-                safe = jnp.where(valid, ids, 0)
-                reach = jnp.full((m, t_root + 1), BIG, jnp.int32).at[
-                    row, safe].min(jnp.where(valid, 0, BIG), mode="drop")
-                planes.append(reach[:, :t_root])
+                # full-length columns recompute the prefix in the XOR:
+                # the plane only carries reached (0) / pruned (BIG)
+                planes.append(scatter_root_plane(
+                    ids, jnp.zeros_like(dists), valid, m, t_root))
                 overflow = overflow + ov
             base_plane = jnp.concatenate(planes, axis=1)
             cols = jnp.concatenate([cols0, delta_vert], axis=-1)
@@ -906,6 +1045,89 @@ class SegmentedIndex:
                 cols, q_vert, base_plane, base_idx, live, tau=tau,
                 block_m=block_m)
             dist = jnp.where(hm > 0, dist, BIG)
+            if kind == "cols":
+                return dist, overflow.sum()
+            sel_ids, sel_d = select_topk_columns(
+                dist, jnp.concatenate([gids0, delta_gids]), kk)
+            min_surv = (dist < BIG).sum(axis=1).min()
+            return sel_ids, sel_d, min_surv, overflow.sum()
+        return run
+
+    def _build_fused_bst_suffix(self, kind: str, tau: int, rung: int,
+                                kk: Optional[int]):
+        """The suffix-layout fused program (DESIGN.md §7): same shape as
+        ``_build_fused_bst`` — every segment's traversal, ONE root
+        plane, verify, selection, one jitted launch — but the scatter
+        carries the traversal's exact *prefix distances* (not 0/BIG) and
+        the verify runs over per-geometry suffix column groups, so
+        prefix + suffix reproduces the full-length Hamming distance bit
+        for bit.  Hot groups close over device columns; cold columns
+        arrive through the staged slabs (traced args, uploaded by
+        ``ColumnStore.stage`` before the rung loop).  Multiple geometry
+        groups mean multiple verify kernel bodies INSIDE the one
+        program — still one fused dispatch per rung."""
+        store = self._refresh_store()
+        plan = store.plan()
+        cap = CAP_MAX_DEFAULT << rung
+        indexes = [seg.index for seg in self.segments]
+        caps_list = [frontier_capacities(ix.t, self.b, tau, cap)
+                     for ix in indexes]
+        t_roots = [int(ix.tail.t_root) for ix in indexes]
+        gids0 = store.gids
+        r_sealed = store.n_cols
+        b_, L, block_m = self.b, self.L, self.block_m
+
+        @jax.jit
+        def run(qs, live_sealed, staged, delta_vert, delta_live,
+                delta_gids):
+            _note_trace()
+            qsi = qs.astype(jnp.int32)
+            m = qsi.shape[0]
+            planes = [jnp.zeros((m, 1), jnp.int32)]  # slot 0: delta base
+            overflow = jnp.zeros((m,), jnp.int32)
+            for ix, caps, t_root in zip(indexes, caps_list, t_roots):
+                ids, dists, valid, ov, _ = _traverse_frontier_batch(
+                    ix, qsi, tau=tau, caps=caps)
+                planes.append(scatter_root_plane(
+                    ids, dists, valid, m, t_root))
+                overflow = overflow + ov
+            base_plane = jnp.concatenate(planes, axis=1)
+            dist_parts: List[jnp.ndarray] = []
+            order_parts: List[np.ndarray] = []
+            for g, slab in zip(plan, staged):
+                axis = 0 if g.geom.packed else -1
+                parts = [p for p in (g.cols_hot, slab) if p is not None]
+                cols_g = (parts[0] if len(parts) == 1
+                          else jnp.concatenate(parts, axis=axis))
+                live_g = live_sealed[g.perm]
+                S = g.geom.suffix_len
+                if g.geom.packed:
+                    qw = pack_suffix_words_jax(qsi[:, L - S:], b_)
+                    hm, d = ops.sparse_verify_arena_packed(
+                        cols_g, qw, base_plane, g.base_idx, live_g, b=b_,
+                        S=S, tau=tau, block_m=block_m)
+                else:
+                    qv = jnp.transpose(
+                        pack_vertical_jax(qsi[:, L - S:], b_), (1, 2, 0))
+                    hm, d = ops.sparse_verify_arena(
+                        cols_g, qv, base_plane, g.base_idx, live_g,
+                        tau=tau, block_m=block_m)
+                dist_parts.append(jnp.where(hm > 0, d, BIG))
+                order_parts.append(g.perm)
+            # the delta buffer scans full-length (its rows have no trie,
+            # hence no ℓ_s to slice at) — same arithmetic as the full
+            # arena's trivial base slot 0
+            q_vert = jnp.transpose(pack_vertical_jax(qsi, b_), (1, 2, 0))
+            dd = ops.hamming_distances(delta_vert, q_vert)
+            dd = jnp.where(delta_live[None, :] & (dd <= tau), dd, BIG)
+            dist_parts.append(dd.astype(jnp.int32))
+            ndb = delta_vert.shape[-1]
+            order_parts.append(np.arange(r_sealed, r_sealed + ndb))
+            # restore global stack order with a static inverse
+            # permutation (ndb is trace-static), so the column contract
+            # and tie order match the full-length arena exactly
+            inv = np.argsort(np.concatenate(order_parts))
+            dist = jnp.concatenate(dist_parts, axis=1)[:, inv]
             if kind == "cols":
                 return dist, overflow.sum()
             sel_ids, sel_d = select_topk_columns(
@@ -1030,16 +1252,30 @@ class SegmentedIndex:
             delta_vert = jnp.zeros((self.b, W, 0), jnp.uint32)
             delta_live = np.zeros(0, bool)
             delta_gids = np.zeros(0, np.int32)
+        staged = None
         if self.backend == "bst":
-            seg_arg = self._refresh_arena().live
+            if self.layout == "suffix":
+                store = self._refresh_store()
+                # copy-ahead: upload every cold block's staging slab
+                # ONCE per query, before the rung loop — the async
+                # device_put overlaps the first rung's traversal, and
+                # ladder retries reuse the same slabs
+                staged = store.stage()
+                seg_arg = store.live
+            else:
+                seg_arg = self._refresh_arena().live
         else:
             seg_arg = tuple(jnp.asarray(seg.live) for seg in self.segments)
         rung = 0
         while True:
             fn = self._fused_fn(kind, tau, rung, kk)
             _dispatch("fused")
-            out = fn(jnp.asarray(qs_p), seg_arg, delta_vert,
-                     jnp.asarray(delta_live), jnp.asarray(delta_gids))
+            if staged is not None:
+                out = fn(jnp.asarray(qs_p), seg_arg, staged, delta_vert,
+                         jnp.asarray(delta_live), jnp.asarray(delta_gids))
+            else:
+                out = fn(jnp.asarray(qs_p), seg_arg, delta_vert,
+                         jnp.asarray(delta_live), jnp.asarray(delta_gids))
             if int(out[-1]) == 0 or self._fused_saturated(rung):
                 return out
             rung += 1
@@ -1105,15 +1341,21 @@ class ShardedSegmentedIndex:
     def __init__(self, L: int, b: int, n_shards: int = 4, *,
                  delta_cap: int = 4096, backend: str = "bst",
                  lam: float = 0.5, auto_merge: bool = True,
-                 block_m: int = DEFAULT_BLOCK_M, use_arena: bool = True):
+                 block_m: int = DEFAULT_BLOCK_M, use_arena: bool = True,
+                 layout: str = "suffix", hot_bytes: Optional[int] = None):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         self.L, self.b = int(L), int(b)
         self.n_shards = int(n_shards)
+        # a per-stack hot budget: the device budget splits evenly across
+        # the independent stacks (each stack places its own blocks)
+        per_stack = (None if hot_bytes is None
+                     else max(0, int(hot_bytes) // self.n_shards))
         self.shards = [
             SegmentedIndex(L, b, delta_cap=delta_cap, backend=backend,
                            lam=lam, auto_merge=auto_merge, block_m=block_m,
-                           use_arena=use_arena)
+                           use_arena=use_arena, layout=layout,
+                           hot_bytes=per_stack)
             for _ in range(self.n_shards)]
         self.n_ids = 0
         # global id -> shard is `id % S`; per-shard local ids are dense,
@@ -1171,13 +1413,23 @@ class ShardedSegmentedIndex:
     def tombstones(self) -> int:
         return sum(shard.tombstones for shard in self.shards)
 
+    def space_ledger(self) -> Dict[str, int]:
+        led = {"model_bits": 0, "device_bytes": 0, "host_bytes": 0}
+        for shard in self.shards:
+            for k, v in shard.space_ledger().items():
+                led[k] += v
+        return led
+
     def stats(self) -> Dict[str, object]:
+        led = self.space_ledger()
         return {"n_ids": self.n_ids, "n_live": self.n_live,
                 "tombstones": self.tombstones,
                 "n_segments": sum(len(s.segments) for s in self.shards),
                 "arena_bytes": sum(
                     s._arena.array_bytes() if s._arena is not None else 0
                     for s in self.shards),
+                "device_bytes": led["device_bytes"],
+                "host_bytes": led["host_bytes"],
                 "shards": [shard.stats() for shard in self.shards]}
 
     def _search_columns(self, qs: np.ndarray,

@@ -165,6 +165,97 @@ def sparse_verify_pallas(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
     return mask[0], dist[0]
 
 
+def _packed_tile_distances(db, q, *, b: int, S: int):
+    """(BLOCK_N,) uint32 packed suffixes x (BLOCK_M,) uint32 packed query
+    suffixes -> (BLOCK_M, BLOCK_N) int32 Hamming distances over the S
+    suffix positions.  All b planes of a row live in ONE word (plane i at
+    bit offset i·S, see ``hamming.pack_suffix_words``), so the XOR/OR
+    fold runs as b-1 shift+mask+OR word ops before a single popcount —
+    the vertical-format identity at 1/W·b of the full-length traffic."""
+    x = db[None, :] ^ q[:, None]                  # (BLOCK_M, BLOCK_N)
+    field = jnp.uint32((1 << S) - 1) if S else jnp.uint32(0)
+    acc = x & field
+    for i in range(1, b):
+        acc = acc | ((x >> jnp.uint32(i * S)) & field)
+    return jax.lax.population_count(acc).astype(jnp.int32)
+
+
+def _verify_arena_packed_kernel(db_ref, q_ref, base_ref, idx_ref, live_ref,
+                                mask_ref, dist_ref, *, b: int, S: int,
+                                tau: int):
+    """Packed-suffix twin of ``_verify_arena_kernel``: identical base
+    gather / liveness / threshold semantics, but the per-column payload
+    is one uint32 word (the b bit planes of the S-symbol suffix below
+    the segment's ℓ_s collapse depth) instead of (b, W) full-length
+    words — the prefix part of the distance arrives through the gathered
+    base plane (DESIGN.md §7)."""
+    dist = _packed_tile_distances(db_ref[...], q_ref[...], b=b, S=S)
+    base = jnp.take(base_ref[...], idx_ref[...], axis=1)  # (BLOCK_M, BLOCK_N)
+    base = jnp.where(live_ref[...][None, :] != 0, base, BIG)
+    total = dist + base
+    mask_ref[...] = (total <= tau).astype(jnp.int32)
+    dist_ref[...] = jnp.minimum(total, BIG)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b", "S", "tau", "block_m", "block_n",
+                                    "interpret"))
+def sparse_verify_arena_packed_pallas(db_words: jnp.ndarray,
+                                      q_words: jnp.ndarray,
+                                      base_plane: jnp.ndarray,
+                                      base_idx: jnp.ndarray,
+                                      live: jnp.ndarray, *, b: int, S: int,
+                                      tau: int,
+                                      block_m: int = DEFAULT_BLOCK_M,
+                                      block_n: int = DEFAULT_BLOCK_N,
+                                      interpret: bool = False):
+    """Arena verify over **single-word packed suffix columns**
+    (DESIGN.md §7; requires b·S <= 32).
+
+    db_words:   (n,) uint32 — one packed suffix word per column;
+    q_words:    (m,) uint32 — the query suffixes in the same packing;
+    base_plane: (m, T) int32 — concatenated per-(segment, root) *prefix*
+                distances (BIG = pruned), slot 0 the delta's trivial 0;
+    base_idx:   (n,) int32 segment-offset lane; live: (n,) int32.
+
+    Same (m/block_m, n/block_n) query-tiled grid and return contract as
+    ``sparse_verify_arena_pallas`` — only the column payload shrinks,
+    from b·W words to one."""
+    n = db_words.shape[-1]
+    m = q_words.shape[-1]
+    T = base_plane.shape[-1]
+    assert n % block_n == 0, (n, block_n)
+    assert m % block_m == 0, (m, block_m)
+    assert base_plane.shape == (m, T), (base_plane.shape, m, T)
+    assert base_idx.shape == (n,), (base_idx.shape, n)
+    assert live.shape == (n,), (live.shape, n)
+    grid = (m // block_m, n // block_n)
+    kernel = functools.partial(_verify_arena_packed_kernel, b=b, S=S, tau=tau)
+    mask, dist = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda j, i: (i,)),
+            pl.BlockSpec((block_m,), lambda j, i: (j,)),
+            pl.BlockSpec((block_m, T), lambda j, i: (j, 0)),
+            pl.BlockSpec((block_n,), lambda j, i: (i,)),
+            pl.BlockSpec((block_n,), lambda j, i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda j, i: (j, i)),
+            pl.BlockSpec((block_m, block_n), lambda j, i: (j, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(db_words.astype(jnp.uint32), q_words.astype(jnp.uint32),
+      base_plane.astype(jnp.int32), base_idx.astype(jnp.int32),
+      live.astype(jnp.int32))
+    return mask, dist
+
+
 def _verify_arena_kernel(db_ref, q_ref, base_ref, idx_ref, live_ref,
                          mask_ref, dist_ref, *, b: int, W: int, tau: int):
     """One (query tile j, column block i) cell of the arena verify: the

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from . import ref
 from .hamming_kernel import (BIG, DEFAULT_BLOCK_M, DEFAULT_BLOCK_N,
                              hamming_distances_pallas,
+                             sparse_verify_arena_packed_pallas,
                              sparse_verify_arena_pallas,
                              sparse_verify_batch_pallas, sparse_verify_pallas)
 
@@ -183,4 +184,51 @@ def sparse_verify_arena(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
     mask, dist = sparse_verify_arena_pallas(
         paths_p, q_p, base_p, idx_p, live_p, tau=tau, block_m=block_m,
         block_n=block_n, interpret=not _on_tpu())
+    return mask[:m, :n], dist[:m, :n]
+
+
+def sparse_verify_arena_packed(db_words: jnp.ndarray, q_words: jnp.ndarray,
+                               base_plane: jnp.ndarray,
+                               base_idx: jnp.ndarray, live: jnp.ndarray,
+                               *, b: int, S: int, tau: int,
+                               block_m: int = DEFAULT_BLOCK_M,
+                               block_n: int = DEFAULT_BLOCK_N,
+                               use_kernel: bool | None = None):
+    """Arena verify over single-word packed suffix columns
+    (DESIGN.md §7; requires b·S <= 32).
+
+    db_words:   (n,) uint32 — one packed suffix word per column (the b
+                bit planes of the S symbols below the segment's ℓ_s);
+    q_words:    (m,) uint32 query suffixes in the same packing;
+    base_plane: (m, T) per-(segment, root) *prefix* distances (BIG =
+                pruned; the traversal's exact distance, not 0/BIG —
+                total = prefix + suffix is the full-length Hamming
+                distance bit for bit);
+    base_idx:   (n,) int32 segment-offset lane;  live: (n,) bool;
+    returns ((m, n) int32 masks, (m, n) int32 totals, BIG-clamped).
+
+    Same padding discipline as ``sparse_verify_arena``: n pads with dead
+    lanes, m with all-zero queries, T to a lane multiple with BIG."""
+    n = db_words.shape[-1]
+    m = q_words.shape[-1]
+    if use_kernel is None:
+        use_kernel = n >= block_n
+    if not use_kernel:
+        mask, dist = ref.sparse_verify_arena_packed_ref(
+            db_words, q_words, base_plane, base_idx, live, b, S, tau)
+        return mask.astype(jnp.int32), dist
+    block_m = min(block_m, m)  # never compute more pad-query rows than m
+    db_p = _pad_lanes(db_words.astype(jnp.uint32), block_n)
+    q_p = _pad_lanes(q_words.astype(jnp.uint32), block_m)
+    pad_n = db_p.shape[-1] - n
+    pad_m = q_p.shape[-1] - m
+    pad_t = (-base_plane.shape[-1]) % 128    # lane-align the plane axis
+    base_p = jnp.pad(base_plane.astype(jnp.int32),
+                     ((0, pad_m), (0, pad_t)),
+                     constant_values=jnp.int32(BIG))
+    idx_p = jnp.pad(base_idx.astype(jnp.int32), (0, pad_n))
+    live_p = jnp.pad(live.astype(jnp.int32), (0, pad_n))  # pads dead
+    mask, dist = sparse_verify_arena_packed_pallas(
+        db_p, q_p, base_p, idx_p, live_p, b=b, S=S, tau=tau,
+        block_m=block_m, block_n=block_n, interpret=not _on_tpu())
     return mask[:m, :n], dist[:m, :n]

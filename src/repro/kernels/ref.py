@@ -82,6 +82,35 @@ def sparse_verify_arena_ref(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
     return total <= tau, jnp.minimum(total, BIG)
 
 
+def sparse_verify_arena_packed_ref(db_words: jnp.ndarray,
+                                   q_words: jnp.ndarray,
+                                   base_plane: jnp.ndarray,
+                                   base_idx: jnp.ndarray, live: jnp.ndarray,
+                                   b: int, S: int, tau: int):
+    """Packed-suffix arena oracle (DESIGN.md §7): columns carry ONE
+    uint32 word holding all b bit planes of the S-symbol suffix below a
+    segment's ℓ_s collapse depth (plane i at bit offset i·S — see
+    ``hamming.pack_suffix_words``; requires b·S <= 32).  XOR then
+    OR-fold the b S-bit fields and popcount: the vertical-format
+    identity restricted to the suffix.  Base-gather/liveness/threshold
+    semantics are exactly ``sparse_verify_arena_ref``'s.
+
+    db_words: (n,) uint32;  q_words: (m,) uint32;  base_plane: (m, T);
+    base_idx: (n,) int32;  live: (n,);  returns ((m, n) bool, (m, n)
+    int32 totals clamped to BIG).
+    """
+    x = db_words[None, :] ^ q_words[:, None]             # (m, n)
+    field = jnp.uint32((1 << S) - 1) if S else jnp.uint32(0)
+    acc = x & field
+    for i in range(1, b):
+        acc = acc | ((x >> jnp.uint32(i * S)) & field)
+    d = jax.lax.population_count(acc).astype(jnp.int32)
+    base = base_plane.astype(jnp.int32)[:, base_idx]     # (m, n) gather
+    base = jnp.where(live.astype(bool)[None, :], base, BIG)
+    total = base + d
+    return total <= tau, jnp.minimum(total, BIG)
+
+
 def sparse_verify_ref(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
                       base_dist: jnp.ndarray, tau: int):
     """Single-query verification oracle: the m=1 row of the batch oracle.

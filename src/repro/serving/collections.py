@@ -37,6 +37,13 @@ class CollectionConfig:
       use_arena:    serve reads through the fused one-dispatch segment
                     arena (DESIGN.md §6; default) — read latency stays
                     flat in the collection's segment count.
+      layout:       sealed-column layout — "suffix" (default; packed
+                    below each segment's traversal root, DESIGN.md §7)
+                    or "full" (full-length reference layout).
+      hot_bytes:    device budget for sealed columns.  None (default)
+                    keeps every block device-resident; a byte budget
+                    demotes least-recently-used blocks to the host cold
+                    tier, served via staged copy-ahead slabs.
       mi_blocks / n_shards / lam / block_m: forwarded to the index.
     """
 
@@ -52,6 +59,8 @@ class CollectionConfig:
     lam: float = 0.5
     block_m: int = DEFAULT_BLOCK_M
     use_arena: bool = True
+    layout: str = "suffix"
+    hot_bytes: Optional[int] = None
 
     def create(self):
         """Instantiate the configured dynamic index."""
@@ -59,7 +68,8 @@ class CollectionConfig:
             raise ValueError(f"backend must be one of {BACKENDS}")
         kw = dict(delta_cap=self.delta_cap, backend=self.backend,
                   lam=self.lam, auto_merge=self.auto_merge,
-                  block_m=self.block_m, use_arena=self.use_arena)
+                  block_m=self.block_m, use_arena=self.use_arena,
+                  layout=self.layout, hot_bytes=self.hot_bytes)
         if self.n_stacks > 1:
             return ShardedSegmentedIndex(self.L, self.b, self.n_stacks, **kw)
         return SegmentedIndex(self.L, self.b, mi_blocks=self.mi_blocks,

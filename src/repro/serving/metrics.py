@@ -20,6 +20,12 @@ arena path costs one ``fused`` launch per τ rung regardless of segment
 count, while the reference path counts one ``fanout`` launch per
 segment — the dispatch counter is the per-segment accounting,
 aggregated where it is exact (DESIGN.md §6).
+
+Tier movement comes from the column store's process-level counters
+(``repro.core.column_store.tier_stats``): promotions / demotions count
+blocks crossing the hot/cold boundary, ``prefetches`` counts staged
+copy-ahead transfers and ``staged_bytes`` the bytes they moved
+(DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -30,6 +36,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..core.column_store import tier_stats
 from ..core.search import searcher_cache_info
 from ..core.segments import dispatch_stats
 
@@ -134,6 +141,7 @@ class ServingMetrics:
         cache["hit_rate"] = cache["hits"] / lookups if lookups else 0.0
         out["searcher_cache"] = cache
         out["device_dispatch"] = dispatch_stats()
+        out["tier"] = tier_stats()
         return out
 
     def render_text(self, extra: Optional[Dict[str, object]] = None) -> str:
@@ -163,6 +171,8 @@ class ServingMetrics:
             lines.append(f"searcher_cache_{k} {val}")
         for k, v in sorted(snap["device_dispatch"].items()):
             lines.append(f"device_dispatch_{k} {v}")
+        for k, v in sorted(snap["tier"].items()):
+            lines.append(f"tier_{k} {v}")
         for k, v in sorted((extra or {}).items()):
             lines.append(f"{k} {v}")
         return "\n".join(lines) + "\n"

@@ -411,7 +411,7 @@ class Scheduler:
                     len(state.queue)
         for name, st in self.registry.stats().items():
             for gauge in ("n_live", "tombstones", "n_segments", "n_ids",
-                          "arena_bytes"):
+                          "arena_bytes", "device_bytes", "host_bytes"):
                 if gauge in st:
                     extra[f'index_{gauge}{{collection="{name}"}}'] = st[gauge]
         return self.metrics.render_text(extra=extra)

@@ -282,20 +282,37 @@ def test_arena_appends_on_flush_and_rebuilds_on_merge():
     idx = SegmentedIndex(8, 2, delta_cap=10 ** 9, auto_merge=False)
     idx.insert(db[:40])
     idx.flush()
-    idx.topk_batch(db[:2], 3)            # builds the arena
+    idx.topk_batch(db[:2], 3)            # builds the column store
     ar = idx._arena
-    cols_before = ar.cols
-    assert cols_before.shape[-1] == 40
+    assert ar.n_cols == 40
     idx.insert(db[40:80])
-    idx.flush()                          # append path: same arena object
+    idx.flush()                          # append path: same store object
     idx.topk_batch(db[:2], 3)
     assert idx._arena is ar
-    assert ar.cols.shape[-1] == 80
+    assert ar.n_cols == 80
     assert len(ar.serials) == 2
     idx.merge()                          # non-append change: full rebuild
     idx.topk_batch(db[:2], 3)
-    assert idx._arena.cols.shape[-1] == 80
+    assert idx._arena.n_cols == 80
     assert len(idx._arena.serials) == 1
+
+
+def test_full_layout_arena_appends_on_flush_too():
+    """The full-length reference layout keeps the PR-5 incremental
+    maintenance: flush appends to the same ``_ColumnArena`` arrays."""
+    rng = np.random.default_rng(7)
+    db = rng.integers(0, 4, size=(80, 8), dtype=np.uint8)
+    idx = SegmentedIndex(8, 2, delta_cap=10 ** 9, auto_merge=False,
+                         layout="full")
+    idx.insert(db[:40])
+    idx.flush()
+    idx.topk_batch(db[:2], 3)
+    ar = idx._arena
+    assert ar.cols.shape[-1] == ar.n_cols == 40
+    idx.insert(db[40:])
+    idx.flush()
+    idx.topk_batch(db[:2], 3)
+    assert idx._arena is ar and ar.cols.shape[-1] == 80
 
 
 def test_delete_flips_device_liveness_lane_in_place():

@@ -1,0 +1,112 @@
+"""Fused-program cache behavior (`segments._FUSED_CACHE`): the FIFO
+bound really evicts AND eviction releases the device columns the
+compiled closures pin; ``clear_fused_cache`` empties everything; and the
+dead-generation purge drops an index's stale entries the moment its
+stack serials or placement generation move on — no compiled program can
+outlive the column layout it closed over."""
+
+import gc
+import importlib
+import weakref
+
+import numpy as np
+
+from repro.core import SegmentedIndex, clear_fused_cache
+
+segments_mod = importlib.import_module("repro.core.segments")
+
+
+def _sealed_idx(n=80, n_seg=2, seed=3, **kw):
+    rng = np.random.default_rng(seed)
+    db = rng.integers(0, 4, size=(n, 8), dtype=np.uint8)
+    idx = SegmentedIndex(8, 2, delta_cap=10 ** 9, auto_merge=False, **kw)
+    per = n // n_seg
+    for s in range(n_seg):
+        idx.insert(db[s * per:(s + 1) * per])
+        idx.flush()
+    return idx, db
+
+
+def test_fused_fifo_bound_actually_evicts(monkeypatch):
+    monkeypatch.setattr(segments_mod, "_FUSED_CACHE_CAP", 3)
+    clear_fused_cache()
+    idx, _ = _sealed_idx()
+    for tau in range(5):                 # 5 distinct rung keys, cap 3
+        idx._fused_fn("cols", tau, 0, None)
+    cache = segments_mod._FUSED_CACHE
+    assert len(cache) == 3
+    assert sorted(k[6] for k in cache) == [2, 3, 4]   # FIFO: oldest out
+
+
+def test_fifo_eviction_frees_pinned_device_columns(monkeypatch):
+    """An evicted entry's closure is the last reference to the column
+    plan it compiled against — eviction must actually free those device
+    arrays, not just shrink the dict."""
+    monkeypatch.setattr(segments_mod, "_FUSED_CACHE_CAP", 2)
+    clear_fused_cache()
+    idx_a, _ = _sealed_idx(seed=3)
+    idx_a._fused_fn("cols", 2, 0, None)
+    ref = weakref.ref(idx_a._refresh_store().plan()[0].cols_hot)
+    del idx_a
+    gc.collect()
+    assert ref() is not None             # the cache entry pins the plan
+    idx_b, _ = _sealed_idx(seed=4)
+    for tau in range(2):                 # fill the cap: A's entry evicts
+        idx_b._fused_fn("cols", tau, 0, None)
+    gc.collect()
+    assert ref() is None
+
+
+def test_clear_fused_cache_drops_everything():
+    idx, db = _sealed_idx(seed=5)
+    idx.topk_batch(db[:2], 3)
+    assert len(segments_mod._FUSED_CACHE) > 0
+    clear_fused_cache()
+    assert len(segments_mod._FUSED_CACHE) == 0
+
+
+def test_dead_generation_purge_on_flush():
+    """A flush moves the serial fingerprint monotonically: the next
+    cache fetch must drop every entry this index keyed on the old
+    serials (they are permanently unreachable)."""
+    clear_fused_cache()
+    idx, _ = _sealed_idx(n=80, n_seg=1, seed=6)
+    idx._fused_fn("cols", 2, 0, None)
+    old_serials = idx._seg_serials()
+    mine = [k for k in segments_mod._FUSED_CACHE if k[2] == idx._fused_id]
+    assert mine and all(k[3] == old_serials for k in mine)
+    rng = np.random.default_rng(7)
+    idx.insert(rng.integers(0, 4, size=(20, 8), dtype=np.uint8))
+    idx.flush()
+    idx._fused_fn("cols", 2, 0, None)
+    mine = [k for k in segments_mod._FUSED_CACHE if k[2] == idx._fused_id]
+    assert mine and all(k[3] == idx._seg_serials() for k in mine)
+    assert not any(k[3] == old_serials for k in mine)
+
+
+def test_tier_flip_purges_old_generation_and_frees_closures():
+    """A placement change (demotion) bumps the store generation: the
+    pre-flip programs closed over device columns that no longer exist in
+    that tier — the next fetch must purge them (freeing the old plan's
+    concatenated columns) and answers must stay bit-identical."""
+    clear_fused_cache()
+    idx, db = _sealed_idx(n=80, n_seg=2, seed=8)
+    r0 = idx.topk_batch(db[:2], 3)       # all-hot programs in cache
+    store = idx._refresh_store()
+    ref = weakref.ref(store.plan()[0].cols_hot)
+    gen0 = store.gen
+    store.hot_bytes = 0
+    store._enforce_budget()              # demote everything: gen flips
+    assert store.gen > gen0
+    del store
+    gc.collect()
+    assert ref() is not None             # old-gen entries still pin it
+    r1 = idx.topk_batch(db[:2], 3)       # purge + rebuild against slabs
+    gc.collect()
+    assert ref() is None
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r0.ids))
+    np.testing.assert_array_equal(np.asarray(r1.dists),
+                                  np.asarray(r0.dists))
+    gen = idx._refresh_store().gen
+    mine = [k for k in segments_mod._FUSED_CACHE if k[2] == idx._fused_id]
+    assert mine and all(k[4] == gen for k in mine)

@@ -12,8 +12,8 @@ try:
 except ImportError:  # clean env: deterministic fallback shim
     from _hypothesis_compat import given, settings, st
 
-from repro.core import (SegmentedIndex, ShardedSegmentedIndex, build_bst,
-                        tombstone_bits, topk_batch)
+from repro.core import (SegmentedIndex, ShardedSegmentedIndex, bucket_m,
+                        build_bst, tombstone_bits, topk_batch)
 from repro.core.bst import BIG
 from repro.core.hamming import hamming_pairwise_naive
 
@@ -240,11 +240,19 @@ def test_tombstone_space_accounting():
     db = rng.integers(0, 4, size=(100, 8), dtype=np.uint8)
     idx = SegmentedIndex(8, 2, delta_cap=1000)
     idx.insert(db)
-    # delta-only: raw rows + one tombstone bitmap
-    assert idx.space_bits() == 100 * 8 * 2 + tombstone_bits(100)
+    # delta-only: bucket-padded verify planes + one tombstone bitmap
+    # (bucket_m(100) == 128 rows of b*W uint32 planes actually allocated)
+    assert idx.space_bits() == bucket_m(100) * 2 * 1 * 32 + tombstone_bits(100)
     idx.flush()
     seg = idx.segments[0]
-    assert idx.space_bits() == seg.index.model_bits() + tombstone_bits(seg.n)
+    # sealed: succinct index + tombstones + the 9 B/row arena lanes
+    # (base_idx int32 + gids int32 + live bool) the fused path allocates
+    assert idx.space_bits() == (seg.index.model_bits() + tombstone_bits(seg.n)
+                                + seg.n * (4 + 4 + 1) * 8)
+    led = idx.space_ledger()
+    assert set(led) == {"model_bits", "device_bytes", "host_bytes"}
+    assert led["model_bits"] == idx.space_bits()
+    assert led["host_bytes"] >= int(seg.packed.nbytes)
 
 
 def test_stable_ids_survive_merge_and_compact():

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Capacity smoke check (CI gate for DESIGN.md §7).
+
+Builds the same fixed corpus (the paper's review geometry, L=16, b=2)
+under both sealed-column layouts and asserts the two deterministic
+capacity claims of the tiered column store:
+
+1. **Suffix beats full-length**: the packed suffix layout spends at
+   most half the device column bytes of the full-length arena
+   (integer-exact on any geometry with b*(L - l_s) <= 32).
+2. **Cold tier stays one-dispatch**: with a hot-tier budget of zero —
+   a corpus strictly larger than the device budget — queries still
+   answer bit-identically at the same fused launch count as the
+   all-hot store, with zero per-segment fan-out.
+
+Unlike the timing benchmarks these are byte/launch *counts*, fully
+deterministic on any runner, so this script hard-fails on regression.
+
+Usage: ``PYTHONPATH=src python tools/capacity_smoke.py [n_rows]``
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import SegmentedIndex, dispatch_stats, reset_dispatch_stats
+
+L, B, SEGMENTS = 16, 2, 4
+
+
+def build(n: int, **kw):
+    rng = np.random.default_rng(42)
+    db = rng.integers(0, 1 << B, size=(n, L), dtype=np.uint8)
+    idx = SegmentedIndex(L, B, delta_cap=n + 1, auto_merge=False, **kw)
+    chunk = n // SEGMENTS
+    for lo in range(0, SEGMENTS * chunk, chunk):
+        idx.insert(db[lo:lo + chunk])
+        idx.flush()
+    return idx, db
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    n = int(argv[0]) if argv else 2048
+    qs_slice = slice(0, 8)
+    k = 10
+
+    suffix, db = build(n, layout="suffix")
+    full, _ = build(n, layout="full")
+    qs = db[qs_slice]
+    r_sfx, r_full = suffix.topk_batch(qs, k), full.topk_batch(qs, k)
+    np.testing.assert_array_equal(np.asarray(r_sfx.ids),
+                                  np.asarray(r_full.ids))
+    np.testing.assert_array_equal(np.asarray(r_sfx.dists),
+                                  np.asarray(r_full.dists))
+    sfx_bytes = suffix._refresh_store().col_bytes()
+    full_bytes = full._refresh_arena().col_bytes()
+    print(f"column bytes: suffix={sfx_bytes} full={full_bytes} "
+          f"ratio={full_bytes / sfx_bytes:.2f}x "
+          f"({sfx_bytes / n:.2f} vs {full_bytes / n:.2f} B/row)")
+    assert full_bytes >= 2 * sfx_bytes, \
+        f"suffix layout must at least halve column bytes: " \
+        f"{sfx_bytes} vs {full_bytes}"
+
+    reset_dispatch_stats()
+    suffix.topk_batch(qs, k)
+    hot_disp = dispatch_stats()
+
+    cold, _ = build(n, layout="suffix", hot_bytes=0)
+    r_cold = cold.topk_batch(qs, k)           # warm (stage + compiles)
+    np.testing.assert_array_equal(np.asarray(r_cold.ids),
+                                  np.asarray(r_sfx.ids))
+    np.testing.assert_array_equal(np.asarray(r_cold.dists),
+                                  np.asarray(r_sfx.dists))
+    reset_dispatch_stats()
+    cold.topk_batch(qs, k)
+    cold_disp = dispatch_stats()
+    tier = cold.stats()["tier"]
+    print(f"cold tier: {tier}; dispatches hot={hot_disp} cold={cold_disp}")
+    assert tier["hot_blocks"] == 0 and tier["cold_blocks"] == SEGMENTS, tier
+    assert cold_disp["fanout"] == 0, cold_disp
+    assert cold_disp["total"] == cold_disp["fused"] == hot_disp["fused"], \
+        (hot_disp, cold_disp)
+    print("capacity smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,11 +5,15 @@ seed baseline (``BENCH_*.json``) — the perf-trajectory check.
 Usage: ``python tools/compare_bench.py BASELINE.json CURRENT.json``
 
 Matches rows by name and prints the per-row us_per_call ratio
-(current / baseline).  Exits non-zero only on *structural* regressions —
-a baseline row that no longer exists in the current run (a benchmark
-silently dropped) — because absolute timings on shared CI runners are
-too noisy to gate on; the ratio table in the job log and the uploaded
-artifacts are the trajectory.
+(current / baseline).  Rows whose derived fields carry
+``bytes_per_row_device`` / ``bytes_per_row_host`` (the capacity rows of
+``bench_ingest``) get a second table tracking the space trajectory —
+unlike timings, byte counts are deterministic, so a capacity regression
+is a real layout change, not runner noise.  Exits non-zero only on
+*structural* regressions — a baseline row that no longer exists in the
+current run (a benchmark silently dropped) — because absolute timings
+on shared CI runners are too noisy to gate on; the ratio tables in the
+job log and the uploaded artifacts are the trajectory.
 """
 
 from __future__ import annotations
@@ -41,6 +45,17 @@ def main(argv=None) -> int:
         print(f"{name},{b:.2f},{c:.2f},{c / b:.2f}")
     for name in new:
         print(f"{name},-,{cur[name]['us_per_call']:.2f},new")
+    bpr_rows = sorted(
+        name for name in cur
+        if "bytes_per_row_device" in cur[name].get("derived", {}))
+    if bpr_rows:
+        print("name,tier,baseline_bytes_per_row,current_bytes_per_row")
+        for name in bpr_rows:
+            for tier in ("device", "host"):
+                key = f"bytes_per_row_{tier}"
+                c = cur[name]["derived"].get(key)
+                b = base.get(name, {}).get("derived", {}).get(key, "-")
+                print(f"{name},{tier},{b},{c}")
     if missing:
         print(f"STRUCTURAL REGRESSION: rows missing from current run: "
               f"{missing}", file=sys.stderr)
