@@ -25,18 +25,29 @@ Rows:
   * ``ingest/<ds>/tier_{hot,half,cold}`` — hot-budget sweep: column
                                     bytes migrate to the host tier at an
                                     unchanged fused dispatch count
+  * ``ingest/<ds>/wal_{off,on}``  — the same insert stream ephemeral vs
+                                    journaled (delta WAL + segment
+                                    snapshots, fsync-batched); the
+                                    non-smoke run asserts the durable
+                                    path keeps > half the ephemeral
+                                    inserts/sec (DESIGN.md §8)
+  * ``ingest/<ds>/wal_overhead``  — the ratio ips_off / ips_on plus the
+                                    journal/snapshot bytes it bought
 
 Correctness ride-along (every mode, incl. --smoke): the post-merge top-k
 must be bit-identical to a fresh static build over the survivors."""
 
 from __future__ import annotations
 
+import shutil
+import tempfile
 import time
 
 import numpy as np
 
 from repro.core import (SegmentedIndex, build_bst, dispatch_stats,
                         reset_dispatch_stats, topk_batch)
+from repro.store import CollectionStore
 
 from . import common
 from .common import Csv, cap_n, make_dataset, timeit
@@ -190,3 +201,41 @@ def run(csv: Csv, datasets=("review",), k: int = 10) -> None:
                     f"{store.col_bytes('hot') / rows:.2f};"
                     f"bytes_per_row_host={store.host_bytes() / rows:.2f}")
         assert disp_by_tag["cold"] == disp_by_tag["hot"], disp_by_tag
+
+        # durability overhead: identical insert stream, ephemeral vs
+        # journaled (delta WAL + segment snapshots, default fsync batch).
+        # Acceptance (DESIGN.md §8): the durable path keeps more than
+        # half the ephemeral inserts/sec — fsync batching amortizes the
+        # syscall cost across delta_cap-sized flush windows.
+        n_wal = min(n, cap_n(1 << 13))
+        wal_chunk = max(64, n_wal // 64)
+        ips = {}
+        for tag in ("wal_off", "wal_on"):
+            wi = SegmentedIndex(cfg.L, cfg.b,
+                                delta_cap=max(256, n_wal // 8))
+            tmpd = store_d = None
+            if tag == "wal_on":
+                tmpd = tempfile.mkdtemp(prefix="bench_wal_")
+                store_d = CollectionStore(tmpd)
+                store_d.attach(wi)
+            t0 = time.perf_counter()
+            for lo in range(0, n_wal, wal_chunk):
+                wi.insert(db[lo:lo + wal_chunk])
+            if store_d is not None:
+                store_d.wal.sync()        # durable path pays its fsync
+            dt = time.perf_counter() - t0
+            ips[tag] = n_wal / dt
+            extra = f"ips={ips[tag]:.0f};rows={n_wal}"
+            if store_d is not None:
+                sst = store_d.stats()
+                extra += (f";wal_KiB={sst['wal_bytes'] / 1024:.1f}"
+                          f";snap_KiB={sst['snapshot_bytes'] / 1024:.1f}"
+                          f";truncations={sst['wal_truncations']}")
+                store_d.close()
+                shutil.rmtree(tmpd, ignore_errors=True)
+            csv.add(f"ingest/{name}/{tag}", dt * 1e6 / n_wal, extra)
+        csv.add(f"ingest/{name}/wal_overhead",
+                ips["wal_off"] / ips["wal_on"],
+                f"ips_off={ips['wal_off']:.0f};ips_on={ips['wal_on']:.0f}")
+        if not common.SMOKE:
+            assert 2 * ips["wal_on"] > ips["wal_off"], ips

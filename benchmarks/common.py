@@ -1,6 +1,6 @@
 """Shared benchmark utilities: scaled paper datasets, timing, CSV rows.
 
-Scale note (DESIGN.md §8): the container is one CPU core with 35 GB RAM;
+Scale note (DESIGN.md §9): the container is one CPU core with 35 GB RAM;
 benchmarks use synthetic sketch databases at n = 2^16..2^20 with the
 paper's exact (L, b) per dataset, reproducing *relative* claims (bST vs
 LOUDS space ratios, SIH blow-up in τ and b, SI/MI crossover).  Space

@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -100,11 +101,15 @@ _SEG_SERIALS = itertools.count()
 # τ-ladder rung).  The serving metrics snapshot exposes these — dispatch
 # accounting replaces per-segment accounting (DESIGN.md §6).
 _DISPATCH_STATS = {"total": 0, "fused": 0, "fanout": 0}
+# the counters are bumped from every scheduler worker thread — guard the
+# read-modify-write (plain ``+=`` on a dict slot is not atomic)
+_DISPATCH_LOCK = threading.Lock()
 
 
 def _dispatch(kind: str) -> None:
-    _DISPATCH_STATS["total"] += 1
-    _DISPATCH_STATS[kind] += 1
+    with _DISPATCH_LOCK:
+        _DISPATCH_STATS["total"] += 1
+        _DISPATCH_STATS[kind] += 1
 
 
 def dispatch_stats() -> Dict[str, int]:
@@ -112,12 +117,26 @@ def dispatch_stats() -> Dict[str, int]:
     host->device program launches, split into ``fused`` (arena path —
     one per τ rung, independent of segment count) and ``fanout``
     (per-segment reference path — one per segment per rung)."""
-    return dict(_DISPATCH_STATS)
+    with _DISPATCH_LOCK:
+        return dict(_DISPATCH_STATS)
 
 
 def reset_dispatch_stats() -> None:
-    for k in _DISPATCH_STATS:
-        _DISPATCH_STATS[k] = 0
+    with _DISPATCH_LOCK:
+        for k in _DISPATCH_STATS:
+            _DISPATCH_STATS[k] = 0
+
+
+def ensure_serial_floor(floor: int) -> None:
+    """Advance the global segment-serial counter to at least ``floor``.
+    Recovery calls this with ``max(persisted serial) + 1`` so serials
+    restored from disk can never collide with serials minted later in
+    this process — the invariant every compiled-artifact cache key
+    relies on (a serial is never reused)."""
+    global _SEG_SERIALS
+    with _DISPATCH_LOCK:
+        cur = next(_SEG_SERIALS)
+        _SEG_SERIALS = itertools.count(max(cur, int(floor)))
 
 
 def tombstone_bits(n: int) -> int:
@@ -401,6 +420,10 @@ class SegmentedIndex:
         # "compact") — the serving layer's metrics tap (DESIGN.md §5).
         # Exceptions are the caller's problem; keep hooks cheap.
         self.event_hook: Optional[object] = None
+        # durability binding (repro.store.StackBinding): log-before-apply
+        # for insert/delete, checkpoint after flush/merge/compact.  None
+        # (default) = ephemeral index, zero overhead.
+        self.store: Optional[object] = None
 
     # -- mutation --------------------------------------------------------
 
@@ -423,6 +446,8 @@ class SegmentedIndex:
             raise ValueError("character exceeds alphabet [0, 2^b)")
         k = sk.shape[0]
         new_ids = np.arange(self.n_ids, self.n_ids + k, dtype=np.int64)
+        if self.store is not None:
+            self.store.log_insert(new_ids, sk)   # write-ahead: log, then apply
         self.n_ids += k
         self._delta_sk = np.concatenate([self._delta_sk, sk])
         self._delta_ids = np.concatenate([self._delta_ids, new_ids])
@@ -445,6 +470,8 @@ class SegmentedIndex:
         The arena's device liveness lanes are flipped in place with one
         scatter (DESIGN.md §6) — deletes never re-upload columns."""
         ids = np.unique(np.atleast_1d(np.asarray(ids, dtype=np.int64)))
+        if self.store is not None and ids.size:
+            self.store.log_delete(ids)           # write-ahead: log, then apply
         newly = 0
         arena = self._arena
         lanes: List[np.ndarray] = []     # arena columns going dead
@@ -490,6 +517,8 @@ class SegmentedIndex:
         self._delta_ids = np.zeros((0,), np.int64)
         self._delta_live = np.zeros((0,), bool)
         self._delta_vert = None
+        if self.store is not None:
+            self.store.checkpoint(self)
         return seg
 
     def merge(self, i: Optional[int] = None,
@@ -519,6 +548,8 @@ class SegmentedIndex:
                 ids=ids, live=np.ones(len(ids), bool), L=self.L, b=self.b))
         self.counters["merges"] += 1
         self._emit("merge", rows=int(len(ids)))
+        if self.store is not None:
+            self.store.checkpoint(self)
         return True
 
     def maybe_merge(self) -> int:
@@ -569,6 +600,8 @@ class SegmentedIndex:
         self.counters["compactions"] += done
         if done:
             self._emit("compact", segments=done)
+            if self.store is not None:
+                self.store.checkpoint(self)
         return done
 
     # -- queries ---------------------------------------------------------
@@ -739,6 +772,21 @@ class SegmentedIndex:
         }
 
     # -- internals -------------------------------------------------------
+
+    def _replay_insert(self, ids: np.ndarray, sk: np.ndarray) -> None:
+        """Recovery-only: append rows with *preassigned* ids to the delta
+        buffer.  No WAL logging and no auto-flush — the store runs the
+        maintenance fixpoint once replay completes, so the recovered
+        partition matches a never-crashed index."""
+        sk = np.asarray(sk, np.uint8)
+        ids = np.asarray(ids, np.int64)
+        self._delta_sk = np.concatenate([self._delta_sk, sk])
+        self._delta_ids = np.concatenate([self._delta_ids, ids])
+        self._delta_live = np.concatenate(
+            [self._delta_live, np.ones(len(ids), bool)])
+        self._delta_vert = None
+        if ids.size:
+            self.n_ids = max(self.n_ids, int(ids.max()) + 1)
 
     def _build(self, sk: np.ndarray):
         if self.backend == "multi":
@@ -1360,6 +1408,10 @@ class ShardedSegmentedIndex:
         self.n_ids = 0
         # global id -> shard is `id % S`; per-shard local ids are dense,
         # so global id maps to local position `id // S`.
+        # durability binding: the top level journals one global-id record
+        # per write (shard stacks bind with log_writes=False and only
+        # snapshot their own segments).
+        self.store: Optional[object] = None
 
     def insert(self, sketches: np.ndarray) -> np.ndarray:
         """Round-robin insert; returns (k,) int64 global ids."""
@@ -1368,10 +1420,21 @@ class ShardedSegmentedIndex:
             sk = sk[None, :]
         k = sk.shape[0]
         new_ids = np.arange(self.n_ids, self.n_ids + k, dtype=np.int64)
-        for s in range(self.n_shards):
-            rows = np.flatnonzero(new_ids % self.n_shards == s)
-            if rows.size:
-                self.shards[s].insert(sk[rows])
+        if self.store is not None and k:
+            self.store.log_insert(new_ids, sk)   # one global-id WAL record
+            # scope the routing: a shard's auto-flush checkpoint mid-way
+            # through must not let the store truncate the WAL (or seal
+            # sibling stacks past this record) before every shard has
+            # applied its rows
+            self.store.begin_write()
+        try:
+            for s in range(self.n_shards):
+                rows = np.flatnonzero(new_ids % self.n_shards == s)
+                if rows.size:
+                    self.shards[s].insert(sk[rows])
+        finally:
+            if self.store is not None and k:
+                self.store.end_write()
         self.n_ids += k
         return new_ids
 
@@ -1379,6 +1442,8 @@ class ShardedSegmentedIndex:
         """Tombstone global ids; returns the number newly deleted."""
         ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
         ids = ids[(ids >= 0) & (ids < self.n_ids)]
+        if self.store is not None and ids.size:
+            self.store.log_delete(ids)
         newly = 0
         for s in range(self.n_shards):
             mine = ids[ids % self.n_shards == s]

@@ -14,6 +14,14 @@ re-shard story (node count changed between runs) is just
 multi-host pod each host would write its address-space slice and the
 manifest would carry the global shape; the format here is the
 single-process projection of that design (DESIGN.md §5).
+
+The atomic tmp-pid → fsync → rename protocol lives in
+``repro.store.atomic`` (shared with the durable index store,
+DESIGN.md §8); this module uses those helpers rather than its own copy.
+A writer that crashes mid-save leaves a stale ``step_*.tmp-<pid>``
+(or ``.old-<pid>`` / ``.rm``) directory behind — ``sweep_stale`` removes
+them and runs automatically on startup paths (``list_checkpoints``,
+``AsyncCheckpointer``, ``resume_or_init``).
 """
 
 from __future__ import annotations
@@ -29,9 +37,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..store.atomic import atomic_write_dir, sweep_stale_tmp
+
 PyTree = Any
 
 _STEP_RE = re.compile(r"^step_(\d{7})$")
+
+
+def sweep_stale(ckpt_dir: str) -> List[str]:
+    """Garbage-collect leftovers of crashed writers: ``step_*.tmp-<pid>``
+    staging dirs, ``.old-<pid>`` displaced predecessors, and half-deleted
+    ``.rm`` dirs.  This process's own in-flight tmp writes (a live
+    ``AsyncCheckpointer`` thread) are left alone.  Returns removed paths."""
+    return sweep_stale_tmp(ckpt_dir)
 
 
 def _flatten(tree: PyTree):
@@ -46,11 +64,10 @@ def _flatten(tree: PyTree):
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree) -> str:
     """Synchronous save; returns the final path.  Atomic: the directory
-    appears under its final name only when complete."""
+    appears under its final name only when complete (staged + fsynced +
+    renamed by ``repro.store.atomic.atomic_write_dir``)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:07d}")
-    tmp = f"{final}.tmp-{os.getpid()}"
-    os.makedirs(tmp, exist_ok=True)
     keyed, _ = _flatten(tree)
     arrays = {k: np.asarray(v) for k, v in keyed.items()}
     manifest = {
@@ -60,12 +77,15 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree) -> str:
         "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
         "time": time.time(),
     }
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
-    if os.path.exists(final):  # overwrite-resume case
+
+    def populate(tmp: str) -> None:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+
+    if os.path.exists(final):  # overwrite-resume: displace, don't destroy
         os.rename(final, final + f".old-{os.getpid()}")
-    os.rename(tmp, final)
+    atomic_write_dir(final, populate, label="checkpoint")
     return final
 
 
@@ -77,6 +97,7 @@ class AsyncCheckpointer:
         self.ckpt_dir = ckpt_dir
         self.keep = keep
         self._pending: List[threading.Thread] = []
+        sweep_stale(ckpt_dir)   # GC a crashed predecessor's leftovers
 
     def save(self, step: int, tree: PyTree) -> None:
         host_tree = jax.tree_util.tree_map(np.asarray, tree)

@@ -29,6 +29,7 @@ from typing import Any, Callable, List, Optional, Tuple
 import jax
 
 from . import checkpoint as ckpt
+from ..store.faults import CrashPoint
 from .sharding import param_specs
 
 PyTree = Any
@@ -39,6 +40,7 @@ def resume_or_init(ckpt_dir: str, abstract_tree: PyTree,
                    mesh=None) -> Tuple[PyTree, int]:
     """Restore the latest checkpoint onto the *current* mesh, or init.
     Returns (tree, start_step)."""
+    ckpt.sweep_stale(ckpt_dir)      # GC a crashed writer's tmp/old dirs
     step = ckpt.latest_checkpoint(ckpt_dir)
     if step is None:
         return init_fn(), 0
@@ -76,8 +78,13 @@ class StragglerMonitor:
         return [i for i, e in enumerate(self._ewma) if e > self.factor * med]
 
 
-class SimulatedFailure(RuntimeError):
-    pass
+class SimulatedFailure(CrashPoint):
+    """Planned-step failure (restart drills).  Subclasses the store's
+    :class:`repro.store.faults.CrashPoint` so one except clause covers
+    both planned-step and planned-I/O-boundary kills."""
+
+    def __init__(self, message: str):
+        RuntimeError.__init__(self, message)
 
 
 @dataclasses.dataclass

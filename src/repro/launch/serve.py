@@ -34,7 +34,8 @@ from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
 from ..distributed.sharding import use_mesh
 from ..launch.mesh import make_host_mesh
 from ..models import model as M
-from ..serving import CollectionConfig, Scheduler, SchedulerConfig
+from ..serving import (CollectionConfig, CollectionRegistry, Scheduler,
+                       SchedulerConfig)
 from ..train.steps import make_decode_step, make_prefill_step
 
 
@@ -43,13 +44,25 @@ from ..train.steps import make_decode_step, make_prefill_step
 # ---------------------------------------------------------------------------
 
 def make_scheduler(args, L: int, b: int, name: str = "docs") -> Scheduler:
-    """One scheduler fronting one collection with the CLI's knobs."""
-    sched = Scheduler(config=SchedulerConfig(
+    """One scheduler fronting one collection with the CLI's knobs.
+
+    ``--data-dir`` makes the collection durable (segment snapshots + WAL,
+    DESIGN.md §8); ``--recover`` additionally rebuilds whatever that
+    directory already holds before serving."""
+    registry = None
+    data_dir = getattr(args, "data_dir", None)
+    if data_dir:
+        if getattr(args, "recover", False):
+            registry = CollectionRegistry.open(data_dir)
+        else:
+            registry = CollectionRegistry(data_dir=data_dir)
+    sched = Scheduler(registry=registry, config=SchedulerConfig(
         max_batch=args.max_batch, max_queue=args.max_queue,
         max_wait_ms=args.max_wait_ms))
-    sched.create_collection(name, CollectionConfig(
-        L=L, b=b, delta_cap=args.delta_cap,
-        block_m=args.block_m or DEFAULT_BLOCK_M))
+    if registry is None or name not in registry.names():
+        sched.create_collection(name, CollectionConfig(
+            L=L, b=b, delta_cap=args.delta_cap,
+            block_m=args.block_m or DEFAULT_BLOCK_M))
     return sched
 
 
@@ -62,7 +75,31 @@ def run_ingest(args) -> int:
     n = args.index_size
     docs = rng.integers(0, 1 << b, size=(n, L), dtype=np.uint8)
     sched = make_scheduler(args, L, b).start()
-    index = sched.registry.get("docs").index
+    coll = sched.registry.get("docs")
+    index = coll.index
+
+    if getattr(args, "recover", False) and coll.store is not None \
+            and index.n_live:
+        # recovered a previous --data-dir run (possibly killed mid-
+        # stream): report what came back and serve queries against it
+        st = coll.stats()                # index stats + the "store" block
+        sst = st["store"]
+        print(f"recovered 'docs' from {args.data_dir}: {st['n_live']} "
+              f"live docs, {st['n_segments']} segments + "
+              f"{st['delta_rows']} delta rows "
+              f"({sst['recovered_segments']} segment snapshots, "
+              f"{sst['replayed_records']} WAL records replayed)")
+        qs = docs[rng.integers(0, max(index.n_ids, 1), args.batch)]
+        futs = [sched.submit_topk("docs", q, args.topk) for q in qs]
+        nn = [f.result() for f in futs]
+        for r in range(min(args.batch, 4)):
+            print(f"  request {r}: top-{args.topk} docs {nn[r].ids} "
+                  f"at distances {nn[r].dists} (tau*={nn[r].tau})")
+        sched.stop()
+        sched.registry.close()
+        print("--- /stats ---")
+        print(sched.render_stats())
+        return 0
 
     chunk = max(64, n // 16)
     t0 = time.time()
@@ -105,6 +142,7 @@ def run_ingest(args) -> int:
           f"ms/query (batch-fill "
           f"{sched.metrics.batch_fill_ratio():.2f})")
     sched.stop()
+    sched.registry.close()              # sync durable stores (--data-dir)
     print("--- /stats ---")
     print(sched.render_stats())
     return 0
@@ -139,6 +177,13 @@ def main(argv=None):
     ap.add_argument("--block-m", type=int, default=None,
                     help="query-tile size of the batched verify kernel "
                          "(default: kernel DEFAULT_BLOCK_M)")
+    ap.add_argument("--data-dir", default=None,
+                    help="durable collection root: segment snapshots + "
+                         "delta-buffer WAL (DESIGN.md §8)")
+    ap.add_argument("--recover", action="store_true",
+                    help="with --data-dir: rebuild collections persisted "
+                         "there (manifest segments + WAL replay) before "
+                         "serving")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

@@ -11,13 +11,19 @@ blocks another, and global ids are scoped per collection.
 from __future__ import annotations
 
 import dataclasses
+import os
+import re
 import threading
 from typing import Dict, List, Optional
 
 from ..core.segments import BACKENDS, SegmentedIndex, ShardedSegmentedIndex
 from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
+from ..store import CollectionStore
 
 __all__ = ["CollectionConfig", "Collection", "CollectionRegistry"]
+
+# durable collection names become directory names — keep them portable
+_NAME_RE = re.compile(r"^[A-Za-z0-9._-]+$")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,18 +84,29 @@ class CollectionConfig:
 
 @dataclasses.dataclass
 class Collection:
-    """One registered collection: config + live index."""
+    """One registered collection: config + live index (+ durable store
+    when the registry has a ``data_dir``)."""
 
     name: str
     config: CollectionConfig
     index: object
+    store: Optional[CollectionStore] = None
 
     def stats(self) -> Dict[str, object]:
-        return self.index.stats()
+        out = self.index.stats()
+        if self.store is not None:
+            out["store"] = self.store.stats()
+        return out
 
 
 class CollectionRegistry:
     """Thread-safe name -> Collection map.
+
+    With a ``data_dir`` every collection is durable: creates bind a
+    :class:`repro.store.CollectionStore` under ``<data_dir>/<name>/``
+    (journaling writes, snapshotting sealed segments), and
+    :meth:`CollectionRegistry.open` rebuilds the whole registry from disk
+    after a crash or restart (DESIGN.md §8).
 
     >>> reg = CollectionRegistry()
     >>> _ = reg.create("docs", CollectionConfig(L=8, b=2))
@@ -99,15 +116,54 @@ class CollectionRegistry:
     2
     """
 
-    def __init__(self):
+    def __init__(self, data_dir: Optional[str] = None, *,
+                 fsync_every: int = 64):
         self._lock = threading.Lock()
         self._collections: Dict[str, Collection] = {}
+        self.data_dir = data_dir
+        self.fsync_every = int(fsync_every)
+
+    @classmethod
+    def open(cls, data_dir: str, *,
+             fsync_every: int = 64) -> "CollectionRegistry":
+        """Recover every collection persisted under ``data_dir``: load
+        manifest segments, replay each WAL into the delta buffer, restore
+        id allocators and the segment-serial floor.  Directories without
+        a ``collection.json`` (never fully created) are skipped."""
+        reg = cls(data_dir=data_dir, fsync_every=fsync_every)
+        if not os.path.isdir(data_dir):
+            return reg
+        for name in sorted(os.listdir(data_dir)):
+            root = os.path.join(data_dir, name)
+            cfg_dict = CollectionStore.load_config(root)
+            if not os.path.isdir(root) or cfg_dict is None:
+                continue
+            config = CollectionConfig(**cfg_dict)
+            store = CollectionStore(root, fsync_every=fsync_every)
+            index = store.recover(config.create())
+            with reg._lock:
+                reg._collections[name] = Collection(
+                    name=name, config=config, index=index, store=store)
+        return reg
 
     def create(self, name: str, config: CollectionConfig) -> Collection:
         with self._lock:
             if name in self._collections:
                 raise ValueError(f"collection {name!r} already exists")
-            coll = Collection(name=name, config=config, index=config.create())
+            store = None
+            if self.data_dir is not None:
+                if not _NAME_RE.match(name):
+                    raise ValueError(
+                        f"durable collection name {name!r} must match "
+                        f"{_NAME_RE.pattern}")
+                store = CollectionStore(os.path.join(self.data_dir, name),
+                                        fsync_every=self.fsync_every)
+            index = config.create()
+            if store is not None:
+                store.attach(index)
+                store.save_config(dataclasses.asdict(config))
+            coll = Collection(name=name, config=config, index=index,
+                              store=store)
             self._collections[name] = coll
             return coll
 
@@ -119,8 +175,21 @@ class CollectionRegistry:
                 raise KeyError(f"unknown collection {name!r}") from None
 
     def drop(self, name: str) -> None:
+        """Unregister a collection.  A durable collection's store is
+        closed (WAL synced) but its on-disk state is retained — a later
+        ``open`` still recovers it."""
         with self._lock:
-            self._collections.pop(name, None)
+            coll = self._collections.pop(name, None)
+        if coll is not None and coll.store is not None:
+            coll.store.close()
+
+    def close(self) -> None:
+        """Sync and close every durable collection's store."""
+        with self._lock:
+            colls = list(self._collections.values())
+        for coll in colls:
+            if coll.store is not None:
+                coll.store.close()
 
     def names(self) -> List[str]:
         with self._lock:

@@ -78,7 +78,8 @@ class ServingMetrics:
     * ``record_batch(op, size, bucket)`` — one coalesced read dispatch;
       feeds batches_total and the batch-fill ratio (Σsize / Σbucket).
     * ``inc(name, n)``          — plain counters (``requests_total:<op>``,
-      ``rejected_total``, ``write_ops_total``, ...).
+      ``rejected_total`` plus per-op ``rejected_total:<op>``,
+      ``write_ops_total``, ``executor_errors_total``, ...).
     """
 
     def __init__(self, window: int = 2048):

@@ -60,7 +60,18 @@ _WRITES = ("insert", "delete")
 
 
 class OverloadError(RuntimeError):
-    """Raised at submit time when a collection's queue is full."""
+    """Raised at submit time when a collection's queue is full.  Carries
+    the shed request's context so callers (and logs) can see *what* was
+    rejected: ``collection``, ``op``, and the ``queue_depth`` observed at
+    rejection."""
+
+    def __init__(self, message: str, *, collection: Optional[str] = None,
+                 op: Optional[str] = None,
+                 queue_depth: Optional[int] = None):
+        super().__init__(message)
+        self.collection = collection
+        self.op = op
+        self.queue_depth = queue_depth
 
 
 class SearchResponse(NamedTuple):
@@ -134,6 +145,14 @@ class Scheduler:
         self._workers: Dict[str, threading.Thread] = {}
         self._started = False
         self._stopping = False
+        # adopt collections already in the registry (a recovered
+        # CollectionRegistry.open(data_dir)): queue state + metrics tap,
+        # exactly as create_collection would have wired them
+        for name in self.registry.names():
+            coll = self.registry.get(name)
+            for idx in getattr(coll.index, "shards", [coll.index]):
+                idx.event_hook = self._maintenance_hook
+            self._ensure_state(name)
 
     # -- collection management -------------------------------------------
 
@@ -172,10 +191,13 @@ class Scheduler:
             if self._stopping:
                 raise RuntimeError("scheduler is stopped")
             if len(state.queue) >= self.config.max_queue:
+                depth = len(state.queue)
                 self.metrics.inc("rejected_total")
+                self.metrics.inc(f"rejected_total:{op}")
                 raise OverloadError(
                     f"collection {name!r} queue full "
-                    f"({self.config.max_queue} requests)")
+                    f"({self.config.max_queue} requests, op={op})",
+                    collection=name, op=op, queue_depth=depth)
             state.queue.append(req)
             state.cond.notify_all()
         self.metrics.inc(f"requests_total:{op}")
@@ -263,20 +285,26 @@ class Scheduler:
     # -- execution -------------------------------------------------------
 
     def _execute(self, name: str, batch: List[_Request]) -> None:
-        coll = self.registry.get(name)
+        """Run one batch; any exception fails the batch's futures (the
+        clients see it) and never escapes to the worker loop — a failed
+        batch must not kill a queue's only worker or skip the latency
+        accounting of its requests."""
         op = batch[0].op
         try:
+            coll = self.registry.get(name)
             if op in _WRITES:
                 self._execute_write(coll, batch[0])
             else:
                 self._execute_reads(coll, batch)
         except Exception as e:                     # noqa: BLE001
+            self.metrics.inc("executor_errors_total")
             for req in batch:
                 if not req.future.done():
                     req.future.set_exception(e)
-        for req in batch:
-            self.metrics.record_latency(
-                op, time.perf_counter() - req.t_enq)
+        finally:
+            for req in batch:
+                self.metrics.record_latency(
+                    op, time.perf_counter() - req.t_enq)
 
     def _execute_reads(self, coll: Collection,
                        batch: List[_Request]) -> None:
@@ -349,7 +377,13 @@ class Scheduler:
             if batch is None:
                 return                      # stopping and drained
             if batch:
-                self._execute(name, batch)
+                try:
+                    self._execute(name, batch)
+                except Exception:           # noqa: BLE001 — paranoia:
+                    # _execute already routes failures into the batch's
+                    # futures; whatever still escapes (metrics bugs, OOM
+                    # cleanup) must not silently kill the queue's worker
+                    self.metrics.inc("executor_errors_total")
 
     def stop(self) -> None:
         """Drain every queue (outstanding futures complete) and join the
@@ -414,4 +448,9 @@ class Scheduler:
                           "arena_bytes", "device_bytes", "host_bytes"):
                 if gauge in st:
                     extra[f'index_{gauge}{{collection="{name}"}}'] = st[gauge]
+            for gauge in ("wal_bytes", "snapshot_bytes", "wal_truncations",
+                          "replayed_records", "recovered_segments"):
+                if "store" in st and gauge in st["store"]:
+                    extra[f'store_{gauge}{{collection="{name}"}}'] = \
+                        st["store"][gauge]
         return self.metrics.render_text(extra=extra)

@@ -90,6 +90,47 @@ def test_atomic_no_partial_checkpoints(tmp_path):
     assert ckpt.list_checkpoints(d) == [1]
 
 
+def test_sweep_stale_tmp_dirs(tmp_path):
+    """A crashed writer's ``step_*.tmp-<pid>`` / ``.old-<pid>`` / ``.rm``
+    leftovers are garbage-collected on startup (and only those — live
+    checkpoints survive the sweep)."""
+    d = str(tmp_path / "ck")
+    ckpt.save_checkpoint(d, 1, {"w": jnp.ones((2, 2))})
+    stale = [os.path.join(d, "step_0000002.tmp-999"),
+             os.path.join(d, "step_0000001.old-999"),
+             os.path.join(d, "step_0000000.rm")]
+    for p in stale:
+        os.makedirs(p, exist_ok=True)
+        with open(os.path.join(p, "junk.bin"), "wb") as f:
+            f.write(b"x" * 64)
+    removed = ckpt.sweep_stale(d)
+    assert sorted(removed) == sorted(stale)
+    for p in stale:
+        assert not os.path.exists(p)
+    assert ckpt.list_checkpoints(d) == [1]          # survivors intact
+    # startup paths run the sweep automatically
+    for p in stale:
+        os.makedirs(p, exist_ok=True)
+    ckpt.AsyncCheckpointer(d, keep=2)
+    assert not any(os.path.exists(p) for p in stale)
+    d2 = str(tmp_path / "ck2")                      # empty-dir resume path
+    stale2 = os.path.join(d2, "step_0000004.tmp-999")
+    os.makedirs(stale2)
+    state, start = resume_or_init(d2, None, lambda: "fresh")
+    assert (state, start) == ("fresh", 0)
+    assert not os.path.exists(stale2)
+
+
+def test_sweep_keeps_own_inflight_tmp(tmp_path):
+    """The sweep must not race a live AsyncCheckpointer thread of this
+    process: tmp dirs tagged with our own pid are left alone."""
+    d = str(tmp_path / "ck")
+    mine = os.path.join(d, f"step_0000009.tmp-{os.getpid()}")
+    os.makedirs(mine)
+    assert ckpt.sweep_stale(d) == []
+    assert os.path.isdir(mine)
+
+
 def test_elastic_restore_different_mesh(tmp_path):
     """Save unsharded-logical, restore with shardings for the current
     (different) mesh — the elastic-scaling path."""

@@ -1,0 +1,430 @@
+"""Durability: segment snapshots + delta-buffer WAL + crash recovery
+(DESIGN.md §8).
+
+Three layers of guarantees, each held by its own tests:
+
+  * **WAL framing** — append/replay round-trip; a torn or corrupt tail
+    (truncated record, flipped payload byte, broken sequence) ends
+    replay at the last good record — dropped, never crashed on — and
+    reopening the log cuts the bad tail so new appends extend the good
+    prefix.
+  * **Snapshot/restore round-trip** — a recovered index is
+    bit-identical to the pre-crash one on every backend (bst / multi /
+    sharded segments, plus the multi-stack ``ShardedSegmentedIndex``):
+    same search/topk results, same id allocator, same segment serials,
+    same space ledger.
+  * **Crash-at-every-point recovery** — the fault harness first runs a
+    canonical workload in *counting* mode to enumerate every
+    fsync/rename boundary the store crosses (WAL syncs, segment and
+    manifest renames, live-lane rewrites, WAL truncations), then a
+    pytest parametrization replays the workload once per boundary:
+    crash there, recover with a fresh store, finish the workload, and
+    require the final state bit-identical (segment ids/columns/
+    tombstones, delta buffer, space ledger) to a never-crashed
+    reference index.
+
+Deterministic by construction (no hypothesis dependency) so the suite
+runs on a bare no-extras interpreter.
+"""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.segments import (SegmentedIndex, ShardedSegmentedIndex)
+from repro.serving import CollectionConfig, CollectionRegistry
+from repro.store import (OP_DELETE, OP_INSERT, CollectionStore, CrashPoint,
+                         FaultInjector, WriteAheadLog, decode_delete,
+                         decode_insert, encode_delete, encode_insert,
+                         read_wal)
+
+L, B = 8, 2
+ROWS = np.random.default_rng(7).integers(0, 1 << B, size=(32, L),
+                                         dtype=np.uint8)
+
+# The canonical workload: exercises every lifecycle path — auto-flush,
+# size-tiered merge, tombstones in sealed segments and in the delta
+# buffer, compaction, live-lane rewrites, and WAL truncation.
+OPS = [
+    ("insert", (0, 12)),        # auto-flush -> seg(12)
+    ("delete", (2, 5, 11)),
+    ("insert", (12, 18)),       # 6 delta rows
+    ("insert", (18, 22)),       # flush seg(10) + merge -> seg(19)
+    ("delete", (0, 1, 13, 17)),
+    ("compact", None),          # seg(19) -> seg(15)
+    ("insert", (22, 26)),       # 4 delta rows
+    ("delete", (3, 22)),        # one sealed + one delta tombstone
+    ("insert", (26, 32)),       # flush seg(9), live rewrite, merge
+]
+# global ids ever assigned after each op completes (the in-flight-op
+# probe of the crash harness: an insert is already recovered iff the
+# id allocator advanced to this value)
+N_IDS_AFTER = [12, 12, 18, 22, 22, 22, 26, 26, 32]
+
+KINDS = ("bst", "multi", "stacks")
+
+
+def _make_index(kind):
+    if kind == "stacks":
+        return ShardedSegmentedIndex(L, B, 2, delta_cap=4)
+    return SegmentedIndex(L, B, delta_cap=8, backend=kind)
+
+
+def _stacks(index):
+    return list(index.shards) if hasattr(index, "shards") else [index]
+
+
+def _apply(index, op):
+    kind, arg = op
+    if kind == "insert":
+        index.insert(ROWS[arg[0]:arg[1]])
+    elif kind == "delete":
+        index.delete(np.asarray(arg, np.int64))
+    else:
+        index.compact(min_dead_frac=0.0)
+
+
+_REF_CACHE = {}
+
+
+def _reference(kind):
+    """The never-crashed, never-persisted reference index (built once)."""
+    if kind not in _REF_CACHE:
+        index = _make_index(kind)
+        for op in OPS:
+            _apply(index, op)
+        _REF_CACHE[kind] = index
+    return _REF_CACHE[kind]
+
+
+_POINT_CACHE = {}
+
+
+def _n_points(kind):
+    """Counting mode: run the workload once with an unarmed injector to
+    enumerate every crash point the store crosses."""
+    if kind not in _POINT_CACHE:
+        with tempfile.TemporaryDirectory() as d:
+            fi = FaultInjector()
+            store = CollectionStore(os.path.join(d, "c"), fsync_every=1,
+                                    faults=fi)
+            index = store.attach(_make_index(kind))
+            for op in OPS:
+                _apply(index, op)
+            _POINT_CACHE[kind] = fi.count
+    return _POINT_CACHE[kind]
+
+
+def _assert_state_equal(rec, ref):
+    """Bit-identical index state: segment ids / packed columns /
+    tombstones (in stack order), delta buffers, allocator, ledger.
+    Serials are process-monotonic and therefore *not* value-compared
+    across independently built indexes."""
+    assert rec.n_ids == ref.n_ids
+    assert rec.n_live == ref.n_live
+    for sr, sf in zip(_stacks(rec), _stacks(ref)):
+        assert len(sr.segments) == len(sf.segments)
+        for a, b in zip(sr.segments, sf.segments):
+            np.testing.assert_array_equal(a.ids, b.ids)
+            np.testing.assert_array_equal(a.packed, b.packed)
+            np.testing.assert_array_equal(a.live, b.live)
+        np.testing.assert_array_equal(sr._delta_ids, sf._delta_ids)
+        np.testing.assert_array_equal(sr._delta_sk, sf._delta_sk)
+        np.testing.assert_array_equal(sr._delta_live, sf._delta_live)
+    assert (rec.space_ledger()["model_bits"]
+            == ref.space_ledger()["model_bits"])
+
+
+def _assert_queries_equal(rec, ref):
+    """The observable contract: identical search planes, top-k results,
+    and (after one identical warm query on each side) space ledgers."""
+    qs = ROWS[:4]
+    a, b = rec.topk_batch(qs, 3), ref.topk_batch(qs, 3)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    assert a.tau == b.tau
+    ra, rb = rec.search_batch(qs, 2), ref.search_batch(qs, 2)
+    np.testing.assert_array_equal(ra.mask, rb.mask)
+    np.testing.assert_array_equal(ra.dist, rb.dist)
+    assert rec.space_ledger() == ref.space_ledger()
+
+
+# ---------------------------------------------------------------------------
+# WAL framing
+# ---------------------------------------------------------------------------
+
+def _fill_wal(path, n=5):
+    wal = WriteAheadLog(path, fsync_every=1)
+    for i in range(n):
+        if i % 3 == 2:
+            wal.append(OP_DELETE,
+                       encode_delete(np.arange(i, dtype=np.int64)))
+        else:
+            ids = np.arange(i * 3, i * 3 + 3, dtype=np.int64)
+            wal.append(OP_INSERT, encode_insert(ids, ROWS[:3]))
+    wal.close()
+
+
+def test_wal_roundtrip(tmp_path):
+    path = str(tmp_path / "wal.log")
+    _fill_wal(path)
+    base, records, dropped = read_wal(path)
+    assert (base, dropped) == (0, 0)
+    assert [seq for seq, _, _ in records] == [0, 1, 2, 3, 4]
+    ids, sk = decode_insert(records[0][2])
+    np.testing.assert_array_equal(ids, [0, 1, 2])
+    np.testing.assert_array_equal(sk, ROWS[:3])
+    assert records[2][1] == OP_DELETE
+    np.testing.assert_array_equal(decode_delete(records[2][2]), [0, 1])
+
+
+def test_wal_torn_tail_dropped_and_cut(tmp_path):
+    path = str(tmp_path / "wal.log")
+    _fill_wal(path)
+    with open(path, "r+b") as f:            # tear the last record
+        f.truncate(os.path.getsize(path) - 7)
+    base, records, dropped = read_wal(path)
+    assert len(records) == 4 and dropped > 0
+    # reopening cuts the torn tail so new appends extend the good prefix
+    wal = WriteAheadLog(path, fsync_every=1)
+    assert wal.dropped_bytes > 0 and wal.next_seq == 4
+    wal.append(OP_DELETE, encode_delete(np.asarray([9], np.int64)))
+    wal.close()
+    _, records, dropped = read_wal(path)
+    assert [seq for seq, _, _ in records] == [0, 1, 2, 3, 4]
+    assert dropped == 0
+    np.testing.assert_array_equal(decode_delete(records[-1][2]), [9])
+
+
+def test_wal_crc_corruption_ends_replay(tmp_path):
+    path = str(tmp_path / "wal.log")
+    _fill_wal(path)
+    _, records, _ = read_wal(path)
+    frame = 21                              # <IQBII> record frame bytes
+    off = 13                                # <4sBQ> file header bytes
+    for seq, _, payload in records[:2]:
+        off += frame + len(payload)
+    with open(path, "r+b") as f:            # flip a byte in record 2's
+        f.seek(off + frame + 1)             # payload: CRC must reject it
+        byte = f.read(1)
+        f.seek(off + frame + 1)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    _, records, dropped = read_wal(path)
+    assert [seq for seq, _, _ in records] == [0, 1]
+    assert dropped > 0
+
+
+def test_wal_reset_continues_sequence(tmp_path):
+    path = str(tmp_path / "wal.log")
+    wal = WriteAheadLog(path, fsync_every=1)
+    for i in range(3):
+        wal.append(OP_DELETE, encode_delete(np.asarray([i], np.int64)))
+    wal.reset()
+    base, records, dropped = read_wal(path)
+    assert (base, records, dropped) == (3, [], 0)
+    assert wal.append(OP_DELETE,
+                      encode_delete(np.asarray([7], np.int64))) == 3
+    wal.close()
+    _, records, _ = read_wal(path)
+    assert [seq for seq, _, _ in records] == [3]   # seqs never repeat
+
+
+def test_wal_garbage_header_dropped(tmp_path):
+    path = str(tmp_path / "wal.log")
+    with open(path, "wb") as f:
+        f.write(b"not a wal at all")
+    base, records, dropped = read_wal(path)
+    assert (base, records) == (0, []) and dropped > 0
+    wal = WriteAheadLog(path, fsync_every=1)   # rewrites a fresh header
+    assert wal.next_seq == 0 and wal.dropped_bytes > 0
+    wal.append(OP_DELETE, encode_delete(np.asarray([1], np.int64)))
+    wal.close()
+    assert len(read_wal(path)[1]) == 1
+
+
+# ---------------------------------------------------------------------------
+# snapshot/restore round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["bst", "multi", "sharded", "stacks"])
+def test_snapshot_restore_roundtrip(tmp_path, kind):
+    def mk():
+        if kind == "stacks":
+            return ShardedSegmentedIndex(L, B, 2, delta_cap=8)
+        return SegmentedIndex(L, B, delta_cap=8, backend=kind)
+
+    d = str(tmp_path / "c")
+    store = CollectionStore(d, fsync_every=4)
+    index = store.attach(mk())
+    ids = index.insert(ROWS[:30])
+    index.delete(ids[::5])
+    index.insert(ROWS[30:])                 # leaves unsealed delta rows
+    store.wal.sync()
+    qs = ROWS[:3]
+    pre = index.topk_batch(qs, 3)
+    pre_serials = [tuple(s.serial for s in st.segments)
+                   for st in _stacks(index)]
+    pre_ledger = index.space_ledger()       # after the warm query
+    # hard kill: abandon the store without close()
+
+    store2 = CollectionStore(d, fsync_every=4)
+    rec = store2.recover(mk())
+    post = rec.topk_batch(qs, 3)
+    np.testing.assert_array_equal(np.asarray(pre.ids), np.asarray(post.ids))
+    np.testing.assert_array_equal(np.asarray(pre.dists),
+                                  np.asarray(post.dists))
+    assert pre.tau == post.tau
+    assert rec.n_ids == index.n_ids and rec.n_live == index.n_live
+    # segment serials are restored verbatim from the manifests
+    assert [tuple(s.serial for s in st.segments)
+            for st in _stacks(rec)] == pre_serials
+    assert rec.space_ledger() == pre_ledger
+
+    # the id allocator resumes collision-free ...
+    n0 = rec.n_ids
+    new_ids = rec.insert(ROWS[:2])
+    np.testing.assert_array_equal(new_ids, [n0, n0 + 1])
+    # ... and so does the serial counter: freshly sealed segments must
+    # never reuse a recovered serial (compiled-cache key invariant)
+    top = max(s for serials in pre_serials for s in serials)
+    rec.flush()
+    fresh = [s.serial for st in _stacks(rec) for s in st.segments
+             if s.serial not in {x for ser in pre_serials for x in ser}]
+    assert fresh and min(fresh) > top
+    store2.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / truncation / sweep mechanics
+# ---------------------------------------------------------------------------
+
+def test_wal_truncated_once_deltas_seal(tmp_path):
+    store = CollectionStore(str(tmp_path / "c"), fsync_every=1)
+    index = store.attach(SegmentedIndex(L, B, delta_cap=8))
+    index.insert(ROWS[:16])                 # flush seals everything
+    assert store.counters["wal_truncations"] >= 1
+    header_only = store.wal.size_bytes()
+    assert store.wal.base_seq >= 1          # seqs never restart at 0
+    index.insert(ROWS[16:19])               # unsealed rows journal again
+    store.wal.sync()
+    assert store.wal.size_bytes() > header_only
+    store.close()
+
+
+def test_store_sweeps_stale_tmp_and_orphan_segments(tmp_path):
+    d = str(tmp_path / "c")
+    store = CollectionStore(d, fsync_every=1)
+    index = store.attach(SegmentedIndex(L, B, delta_cap=8))
+    index.insert(ROWS[:12])
+    store.close()
+    # a crash between a segment rename and its manifest write leaves an
+    # orphan segment dir; a crash mid-write leaves a stale tmp file
+    orphan = os.path.join(d, "seg_000000009999")
+    os.makedirs(orphan)
+    with open(os.path.join(orphan, "junk.bin"), "wb") as f:
+        f.write(b"x" * 32)
+    with open(os.path.join(d, "MANIFEST.json.tmp-999"), "w") as f:
+        f.write("{")
+    store2 = CollectionStore(d, fsync_every=1)
+    assert store2.counters["swept_tmp"] == 1
+    rec = store2.recover(SegmentedIndex(L, B, delta_cap=8))
+    assert not os.path.exists(orphan)
+    assert rec.n_live == 12
+    store2.close()
+
+
+def test_registry_open_recovers_collections(tmp_path):
+    d = str(tmp_path / "data")
+    reg = CollectionRegistry(data_dir=d, fsync_every=4)
+    alpha = reg.create("alpha", CollectionConfig(L=L, b=B, delta_cap=8))
+    beta = reg.create("beta.2",
+                      CollectionConfig(L=L, b=B, delta_cap=4, n_stacks=2))
+    ids = alpha.index.insert(ROWS[:20])
+    alpha.index.delete(ids[:4])
+    beta.index.insert(ROWS[:10])
+    pre = alpha.index.topk_batch(ROWS[:3], 3)
+    reg.close()
+
+    reg2 = CollectionRegistry.open(d)
+    assert reg2.names() == ["alpha", "beta.2"]
+    a2 = reg2.get("alpha")
+    assert a2.config == alpha.config        # config round-trips via json
+    post = a2.index.topk_batch(ROWS[:3], 3)
+    np.testing.assert_array_equal(np.asarray(pre.ids), np.asarray(post.ids))
+    np.testing.assert_array_equal(np.asarray(pre.dists),
+                                  np.asarray(post.dists))
+    assert a2.index.n_live == 16
+    assert reg2.get("beta.2").index.n_live == 10
+    with pytest.raises(ValueError):         # durable names hit the disk
+        reg2.create("bad/name", CollectionConfig(L=L, b=B))
+    reg2.close()
+
+
+# ---------------------------------------------------------------------------
+# crash-at-every-point recovery
+# ---------------------------------------------------------------------------
+
+def _crash_recover_verify(tmp_path, kind, point):
+    """Crash the canonical workload at fault point ``point``, recover
+    with a fresh store, finish the workload, and require the result
+    bit-identical to the never-crashed reference."""
+    d = str(tmp_path / "c")
+    done = 0
+    try:
+        # even creating the empty WAL is an atomic write with crash
+        # points — construction stays inside the blast radius
+        store = CollectionStore(d, fsync_every=1,
+                                faults=FaultInjector(crash_at=point))
+        index = store.attach(_make_index(kind))
+        for op in OPS:
+            _apply(index, op)
+            done += 1
+    except CrashPoint:
+        pass
+    # hard kill: the store object is abandoned (no close(), which would
+    # rescue buffered-but-unsynced WAL records)
+
+    store2 = CollectionStore(d, fsync_every=1)
+    rec = store2.recover(_make_index(kind))
+    if done < len(OPS):
+        kind_op, arg = OPS[done]
+        if kind_op == "insert":
+            # the in-flight insert is already recovered iff its WAL
+            # record reached the log before the crash (allocator probe)
+            if rec.n_ids < N_IDS_AFTER[done]:
+                _apply(rec, OPS[done])
+            assert rec.n_ids == N_IDS_AFTER[done]
+        else:
+            _apply(rec, OPS[done])          # deletes/compacts: idempotent
+        for op in OPS[done + 1:]:
+            _apply(rec, op)
+
+    ref = _reference(kind)
+    _assert_state_equal(rec, ref)
+    # recovered serials stay unique (compiled-cache key invariant)
+    serials = [s.serial for st in _stacks(rec) for s in st.segments]
+    assert len(set(serials)) == len(serials)
+    if point % 10 == 0 or point == _n_points(kind) - 1:
+        _assert_queries_equal(rec, ref)
+    store2.close()
+
+
+@pytest.mark.parametrize("point", range(_n_points("bst")))
+def test_crash_at_every_point_bst(tmp_path, point):
+    _crash_recover_verify(tmp_path, "bst", point)
+
+
+@pytest.mark.parametrize(
+    "point", sorted(set(range(0, _n_points("multi"), 5))
+                    | {_n_points("multi") - 1}))
+def test_crash_at_point_multi(tmp_path, point):
+    _crash_recover_verify(tmp_path, "multi", point)
+
+
+@pytest.mark.parametrize(
+    "point", sorted(set(range(0, _n_points("stacks"), 7))
+                    | {_n_points("stacks") - 1}))
+def test_crash_at_point_sharded_stacks(tmp_path, point):
+    _crash_recover_verify(tmp_path, "stacks", point)

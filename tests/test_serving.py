@@ -292,6 +292,83 @@ def test_metrics_snapshot_and_text_dump():
         assert needle in text, needle
 
 
+def test_overload_error_carries_context_and_per_op_counter():
+    """A shed request's OverloadError names what was rejected, and the
+    rejection counters split per op alongside the aggregate."""
+    sched = make_sched(max_queue=2)
+    q = np.zeros(L, np.uint8)
+    sched.submit_search("c", q, TAU)
+    sched.submit_search("c", q, TAU)
+    with pytest.raises(OverloadError) as ei:
+        sched.submit_topk("c", q, K)
+    err = ei.value
+    assert (err.collection, err.op, err.queue_depth) == ("c", "topk", 2)
+    with pytest.raises(OverloadError):
+        sched.submit_delete("c", np.asarray([0], np.int64))
+    counters = sched.stats()["counters"]
+    assert counters["rejected_total"] == 2
+    assert counters["rejected_total:topk"] == 1
+    assert counters["rejected_total:delete"] == 1
+    assert 'serving_rejected_total{op="topk"} 1' in sched.render_stats()
+    sched.pump()                                    # queued work drains
+
+
+def test_executor_exception_fails_batch_but_worker_survives():
+    """An exception inside batch execution must surface on the batch's
+    futures and increment executor_errors_total — and the queue's only
+    worker must keep serving afterwards."""
+    rng = np.random.default_rng(6)
+    sched = make_sched().start()
+    docs = rng.integers(0, 1 << B, size=(8, L), dtype=np.uint8)
+    sched.submit_insert("c", docs).result(timeout=300)
+    bad = np.full((2, L), 1 << B, np.uint8)         # character out of Σ
+    with pytest.raises(ValueError):
+        sched.submit_insert("c", bad).result(timeout=300)
+    # same worker, next request: still alive and correct
+    nn = sched.submit_topk("c", docs[0], 1).result(timeout=300)
+    assert int(nn.dists[0]) == 0
+    snap = sched.stats()
+    assert snap["counters"]["executor_errors_total"] == 1
+    assert snap["collections"]["c"]["n_live"] == 8  # bad rows never landed
+    sched.stop()
+
+
+def test_metrics_and_dispatch_counters_survive_threaded_hammering():
+    """The process-level dispatch counters and one ServingMetrics are
+    bumped from every worker thread — concurrent increments (plus
+    snapshots mid-flight) must lose nothing."""
+    from repro.core.segments import _dispatch, dispatch_stats
+    from repro.serving.metrics import ServingMetrics
+    m = ServingMetrics()
+    before = dispatch_stats()
+    per_thread, n_threads = 400, 8
+
+    def hammer(_):
+        for i in range(per_thread):
+            _dispatch("fused")
+            m.inc("stress_total")
+            m.record_latency("op", 1e-3)
+            m.record_batch("op", 1, 2)
+            if i % 100 == 0:
+                m.snapshot()
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    total = per_thread * n_threads
+    after = dispatch_stats()
+    assert after["total"] - before["total"] == total
+    assert after["fused"] - before["fused"] == total
+    snap = m.snapshot()
+    assert snap["counters"]["stress_total"] == total
+    assert snap["counters"]["batches_total:op"] == total
+    assert snap["latency"]["op"]["count"] == total
+    assert m.batch_fill_ratio() == pytest.approx(0.5)
+
+
 def test_concurrent_submitters_all_complete():
     """Multiple producer threads against the threaded scheduler: every
     future completes with a sane result (ordering across producers is
