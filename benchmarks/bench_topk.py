@@ -17,13 +17,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hamming import pack_vertical
+from repro.core.hamming import pack_sets, pack_vertical
 from repro.core.bst import build_bst
 from repro.core.search import clear_searcher_cache, topk_batch
+from repro.core.segments import SegmentedIndex
 from repro.kernels import ops
 
 from . import common
 from .common import Csv, make_dataset, timeit
+
+# two-stage re-rank rows: payload geometry + the perf gate (DESIGN.md
+# §10) — stage 2 is ONE extra fused dispatch, so a warm re-ranked query
+# must stay under this multiple of the plain ladder
+RERANK_VOCAB = 128
+RERANK_GATE = 1.5
 
 
 def _scan_topk(db_vert, q_vert, k):
@@ -64,6 +71,37 @@ def run(csv: Csv, datasets=("review",), ks=(1, 10, 100)) -> None:
             sd, sid = np.asarray(sd), np.asarray(sid)
             np.testing.assert_array_equal(np.asarray(res.dists), sd)
             np.testing.assert_array_equal(np.asarray(res.ids), sid)
+
+        rerank_overhead(csv, name, cfg, db, queries, k=10)
+
+
+def rerank_overhead(csv, name, cfg, db, queries, k=10):
+    """Two-stage overhead rows: the same dynamic index answers the same
+    warm query batch with and without the exact re-rank pass.  Stage 2
+    is one extra fused dispatch per request, so the warm ratio is gated
+    at ``RERANK_GATE`` (skipped in smoke — timings are meaningless at
+    tiny shapes, but both paths still execute)."""
+    rng = np.random.default_rng(7)
+    wp = (RERANK_VOCAB + 31) // 32
+    pays = pack_sets(
+        (rng.random((len(db), RERANK_VOCAB)) < 0.15).astype(np.uint8),
+        RERANK_VOCAB)
+    q_pays = pack_sets(
+        (rng.random((len(queries), RERANK_VOCAB)) < 0.15).astype(np.uint8),
+        RERANK_VOCAB)
+    idx = SegmentedIndex(cfg.L, cfg.b, delta_cap=4096, payload_words=wp)
+    idx.insert(db, payloads=pays)
+    m = len(queries)
+    off = timeit(lambda: idx.topk_batch(queries, k))
+    on = timeit(lambda: idx.topk_batch(queries, k, rerank="jaccard",
+                                       q_payloads=q_pays))
+    ratio = on / off
+    csv.add(f"topk/{name}/k{k}/rerank_off", off * 1e6 / m, "")
+    csv.add(f"topk/{name}/k{k}/rerank_on", on * 1e6 / m,
+            f"ratio={ratio:.3f};vocab={RERANK_VOCAB}")
+    if not common.SMOKE:
+        assert ratio < RERANK_GATE, (
+            f"re-rank overhead {ratio:.2f}x exceeds {RERANK_GATE}x gate")
 
 
 if __name__ == "__main__":

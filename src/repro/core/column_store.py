@@ -57,9 +57,10 @@ TIER_COLD = "cold"
 
 # Process-wide placement counters (mirrors segments._DISPATCH_STATS):
 # promotions/demotions count tier flips, prefetches the cold blocks
-# staged to device, staged_bytes the bytes those copies moved.
+# staged to device, staged_bytes the bytes those copies moved
+# (staged_payload_bytes the payload-bitmap share, DESIGN.md §10).
 _TIER_STATS = {"promotions": 0, "demotions": 0, "prefetches": 0,
-               "staged_bytes": 0}
+               "staged_bytes": 0, "staged_payload_bytes": 0}
 
 
 def tier_stats() -> Dict[str, int]:
@@ -112,6 +113,12 @@ class _Block:
     cols_hot: Optional[jnp.ndarray] = None
     cols_cold: Optional[np.ndarray] = None
     last_used: int = 0
+    # exact re-rank payload bitmaps (DESIGN.md §10): (Wp, n) uint32,
+    # same tier as the sketch columns — a tier flip moves both, so the
+    # re-rank program's closure/staged split always matches the verify's
+    pays_hot: Optional[jnp.ndarray] = None
+    pays_cold: Optional[np.ndarray] = None
+    pay_words: int = 0
 
     @property
     def tier(self) -> str:
@@ -120,6 +127,16 @@ class _Block:
     @property
     def col_bytes(self) -> int:
         return self.n * self.geom.row_words * WORD_BYTES
+
+    @property
+    def pay_bytes(self) -> int:
+        return self.n * self.pay_words * WORD_BYTES
+
+    @property
+    def block_bytes(self) -> int:
+        """Placement-budget charge: sketch columns + payload bitmaps
+        (both move together on a tier flip)."""
+        return self.col_bytes + self.pay_bytes
 
 
 class _Group(NamedTuple):
@@ -134,6 +151,8 @@ class _Group(NamedTuple):
     perm: np.ndarray                  # (n_group,) int64 stack positions
     cold_blocks: Tuple[int, ...]      # indexes into store.blocks
     cold_bytes: int
+    pays_hot: Optional[jnp.ndarray] = None  # (Wp, n_hot) payload bitmaps
+    pay_cold_bytes: int = 0
 
 
 class ColumnStore:
@@ -147,9 +166,12 @@ class ColumnStore:
     argument, so tier state never changes on delete.
     """
 
-    def __init__(self, L: int, b: int, hot_bytes: Optional[int] = None):
+    def __init__(self, L: int, b: int, hot_bytes: Optional[int] = None,
+                 payload_words: Optional[int] = None):
         self.L, self.b = int(L), int(b)
         self.hot_bytes = hot_bytes
+        # uint32 words per re-rank payload bitmap (None = no payloads)
+        self.payload_words = payload_words
         self.serials: Tuple[int, ...] = ()
         self.blocks: List[_Block] = []
         self.live: jnp.ndarray = jnp.zeros((0,), bool)
@@ -185,10 +207,20 @@ class ColumnStore:
         leaf_root = np.asarray(seg.index.tail.leaf_root)
         id_leaf = np.asarray(seg.index.id_leaf)
         base_idx = (root0 + leaf_root[id_leaf]).astype(np.int32)
+        pays_hot = None
+        pay_words = 0
+        if self.payload_words is not None:
+            if getattr(seg, "payloads", None) is None:
+                raise ValueError(
+                    "payload_words is set but the segment holds no payloads")
+            pay_words = int(self.payload_words)
+            pays_hot = jnp.asarray(np.ascontiguousarray(
+                seg.payloads.T.astype(np.uint32)))       # (Wp, n)
         self._tick += 1
         self.blocks.append(_Block(
             serial=seg.serial, n=seg.n, geom=geom, base_idx=base_idx,
-            cols_hot=jnp.asarray(cols), last_used=self._tick))
+            cols_hot=jnp.asarray(cols), last_used=self._tick,
+            pays_hot=pays_hot, pay_words=pay_words))
         self.col_off[seg.serial] = self.n_cols
         self.root_off[seg.serial] = root0
         self.t_root_total += int(seg.index.tail.t_root)
@@ -207,6 +239,9 @@ class ColumnStore:
     def _demote(self, blk: _Block) -> None:
         blk.cols_cold = np.asarray(blk.cols_hot)
         blk.cols_hot = None
+        if blk.pays_hot is not None:
+            blk.pays_cold = np.asarray(blk.pays_hot)
+            blk.pays_hot = None
         _TIER_STATS["demotions"] += 1
         self.gen += 1
         self._plan = None
@@ -214,6 +249,9 @@ class ColumnStore:
     def _promote(self, blk: _Block) -> None:
         blk.cols_hot = jnp.asarray(blk.cols_cold)
         blk.cols_cold = None
+        if blk.pays_cold is not None:
+            blk.pays_hot = jnp.asarray(blk.pays_cold)
+            blk.pays_cold = None
         self._tick += 1
         blk.last_used = self._tick
         _TIER_STATS["promotions"] += 1
@@ -225,23 +263,23 @@ class ColumnStore:
             return
         budget = int(self.hot_bytes)
         hot = lambda: [blk for blk in self.blocks if blk.tier == TIER_HOT]
-        used = sum(blk.col_bytes for blk in hot())
+        used = sum(blk.block_bytes for blk in hot())
         while used > budget:
             victims = hot()
             if not victims:
                 break
             lru = min(victims, key=lambda blk: blk.last_used)
             self._demote(lru)
-            used -= lru.col_bytes
+            used -= lru.block_bytes
         # freed room (a merge shrank R, or the budget grew): pull the
         # most recently used cold blocks back while they fit
         cold = sorted((blk for blk in self.blocks if blk.tier == TIER_COLD),
                       key=lambda blk: -blk.last_used)
         for blk in cold:
-            if used + blk.col_bytes > budget:
+            if used + blk.block_bytes > budget:
                 continue
             self._promote(blk)
-            used += blk.col_bytes
+            used += blk.block_bytes
 
     # -- plan / staging --------------------------------------------------
 
@@ -270,11 +308,18 @@ class ColumnStore:
             cols_hot = (jnp.concatenate(
                 [self.blocks[i].cols_hot for i in hot], axis=axis)
                 if hot else None)
+            pays_hot = None
+            if self.payload_words is not None and hot:
+                pays_hot = jnp.concatenate(
+                    [self.blocks[i].pays_hot for i in hot], axis=-1)
             groups.append(_Group(
                 geom=geom, cols_hot=cols_hot,
                 base_idx=jnp.asarray(base_idx), perm=perm,
                 cold_blocks=tuple(cold),
-                cold_bytes=sum(self.blocks[i].col_bytes for i in cold)))
+                cold_bytes=sum(self.blocks[i].col_bytes for i in cold),
+                pays_hot=pays_hot,
+                pay_cold_bytes=sum(self.blocks[i].pay_bytes
+                                   for i in cold)))
         self._plan = tuple(groups)
         return self._plan
 
@@ -298,6 +343,25 @@ class ColumnStore:
             _TIER_STATS["staged_bytes"] += int(cols.nbytes)
         return tuple(slabs)
 
+    def stage_payloads(self) -> Tuple[Optional[jnp.ndarray], ...]:
+        """Copy-ahead for the re-rank pass: upload every cold block's
+        payload bitmaps into one (Wp, n_cold) device slab per plan group
+        (None where the group is fully hot, or when the store holds no
+        payloads).  Same async ``jax.device_put`` discipline as
+        :meth:`stage`; counted under ``staged_bytes`` plus the dedicated
+        ``staged_payload_bytes`` ledger."""
+        slabs: List[Optional[jnp.ndarray]] = []
+        for g in self.plan():
+            if self.payload_words is None or not g.cold_blocks:
+                slabs.append(None)
+                continue
+            pays = np.concatenate(
+                [self.blocks[i].pays_cold for i in g.cold_blocks], axis=-1)
+            slabs.append(jax.device_put(pays))
+            _TIER_STATS["staged_bytes"] += int(pays.nbytes)
+            _TIER_STATS["staged_payload_bytes"] += int(pays.nbytes)
+        return tuple(slabs)
+
     # -- accounting ------------------------------------------------------
 
     def array_bytes(self) -> int:
@@ -305,20 +369,27 @@ class ColumnStore:
         lanes + the per-group base-offset lanes (the staging slab is
         transient and accounted by ``tier_stats()['staged_bytes']``)."""
         by = int(self.live.nbytes + self.gids.nbytes)
-        by += sum(blk.col_bytes for blk in self.blocks
+        by += sum(blk.block_bytes for blk in self.blocks
                   if blk.tier == TIER_HOT)
         by += sum(blk.base_idx.nbytes for blk in self.blocks)
         return by
 
     def host_bytes(self) -> int:
-        """Resident host bytes: cold columns (the host master copies)."""
-        return sum(blk.col_bytes for blk in self.blocks
+        """Resident host bytes: cold columns and cold payload bitmaps
+        (the host master copies)."""
+        return sum(blk.block_bytes for blk in self.blocks
                    if blk.tier == TIER_COLD)
 
     def col_bytes(self, tier: Optional[str] = None) -> int:
-        """Column payload bytes, optionally restricted to one tier —
-        the bytes-per-row numerator of the capacity benchmarks."""
+        """Sketch-column bytes, optionally restricted to one tier —
+        the bytes-per-row numerator of the capacity benchmarks
+        (payload bitmaps are ledgered separately, :meth:`pay_bytes`)."""
         return sum(blk.col_bytes for blk in self.blocks
+                   if tier is None or blk.tier == tier)
+
+    def pay_bytes(self, tier: Optional[str] = None) -> int:
+        """Re-rank payload-bitmap bytes, optionally per tier."""
+        return sum(blk.pay_bytes for blk in self.blocks
                    if tier is None or blk.tier == tier)
 
     def tier_summary(self) -> Dict[str, int]:

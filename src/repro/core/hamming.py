@@ -177,3 +177,33 @@ def hamming_naive(db: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
 def hamming_pairwise_naive(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """(m, L) x (n, L) -> (m, n) distances, the brute-force oracle."""
     return (a[:, None, :] != b[None, :, :]).sum(axis=-1).astype(jnp.int32)
+
+
+def pack_sets(sets, vocab: int) -> np.ndarray:
+    """Token-id sets -> (n, Wp) uint32 LSB-first membership bitmaps.
+
+    ``sets`` is a sequence of integer token-id arrays (each over
+    ``[0, vocab)``) or an already-multihot (n, vocab) 0/1 array.  The
+    bitmaps are the exact re-rank payload format (DESIGN.md §10): word
+    ``w`` bit ``j`` holds membership of token ``32*w + j``, so one
+    AND+popcount pass recovers exact set intersections.
+    """
+    if vocab <= 0:
+        raise ValueError("vocab must be positive")
+    Wp = n_words(vocab)
+    if isinstance(sets, np.ndarray) and sets.ndim == 2 \
+            and sets.shape[1] == vocab:
+        multihot = sets.astype(bool)
+    else:
+        multihot = np.zeros((len(sets), vocab), bool)
+        for r, toks in enumerate(sets):
+            toks = np.asarray(toks, np.int64).ravel()
+            if toks.size and (toks.min() < 0 or toks.max() >= vocab):
+                raise ValueError(f"token ids of row {r} outside [0, {vocab})")
+            multihot[r, toks] = True
+    n = multihot.shape[0]
+    padded = np.zeros((n, Wp * WORD_BITS), bool)
+    padded[:, :vocab] = multihot
+    bits = padded.reshape(n, Wp, WORD_BITS).astype(np.uint32)
+    shifts = np.arange(WORD_BITS, dtype=np.uint32)
+    return (bits << shifts).sum(axis=2, dtype=np.uint32)

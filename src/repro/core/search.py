@@ -85,6 +85,9 @@ class TopKResult(NamedTuple):
     dists: jnp.ndarray       # (k,) int32 — exact distances; BIG on pad
     tau: int                 # final rung of the τ-escalation ladder
     overflow: int            # dropped frontier entries (0 = provably exact)
+    scores: jnp.ndarray | None = None  # (k,) f32 exact re-rank scores —
+    #   descending (score, -id); -1.0 pad.  None on sketch-only requests;
+    #   when set, ids/dists re-order to score order (DESIGN.md §10).
 
 
 def _compact(ids: jnp.ndarray, dists: jnp.ndarray, valid: jnp.ndarray,
@@ -268,6 +271,62 @@ def select_topk_columns(dist: jnp.ndarray, col_ids: jnp.ndarray, k: int):
                                       num_keys=2)
     d_k, l_k = d_sorted[:, :k], l_sorted[:, :k]
     return jnp.where(d_k < BIG, l_k, -1), jnp.minimum(d_k, BIG)
+
+
+# crossover between the unrolled reduction selection and the full sort:
+# each reduction pick costs ~6 plane traversals, the 4-operand sort
+# costs ~90 picks' worth on CPU — stay iterative through every
+# serving-sized k
+_ITER_SELECT_MAX_K = 32
+
+
+def select_topk_scores(scores: jnp.ndarray, dist: jnp.ndarray,
+                       col_ids: jnp.ndarray, k: int):
+    """Traced k-*largest* selection over re-ranked column planes.
+
+    scores: (m, R) float32 exact re-rank scores, -1.0 sentinel on
+    non-survivor lanes; dist: (m, R) int32 Hamming distances (carried
+    along, BIG off-survivor); col_ids: (R,) int32 global labels; returns
+    ((m, k) ids, (m, k) dists, (m, k) f32 scores), each row descending
+    by (score, -label) — ties at equal score break toward the smaller
+    id, matching the host brute-force ordering bit for bit.
+
+    The sort key is the *bit pattern* of the score: IEEE-754 floats in
+    [0, 1] are monotone under an int32 bitcast and the -1.0 sentinel's
+    sign bit makes its bitcast negative, so ordering on the bitcast
+    needs no float comparator and keeps exact tie semantics.
+
+    Two lowerings, identical bits: small k runs ``k`` unrolled
+    max/argmin reduction passes (memory-bound — roughly 5x cheaper than
+    a full-plane sort on CPU), large k falls back to one lexicographic
+    ``lax.sort``.  Requires k <= R."""
+    m, R = scores.shape
+    key = jax.lax.bitcast_convert_type(scores.astype(jnp.float32),
+                                       jnp.int32)
+    labels = jnp.broadcast_to(col_ids.astype(jnp.int32)[None, :], (m, R))
+    sc = scores.astype(jnp.float32)
+    if k <= _ITER_SELECT_MAX_K:
+        picks = []
+        for _ in range(k):
+            mx = key.max(-1, keepdims=True)
+            tie = key == mx
+            lab = jnp.where(tie, labels,
+                            jnp.int32(2 ** 31 - 1)).min(-1, keepdims=True)
+            pick = tie & (labels == lab)
+            picks.append((lab[:, 0],
+                          jnp.where(pick, dist, -1).max(-1),
+                          jnp.where(pick, sc, -jnp.inf).max(-1)))
+            key = jnp.where(pick, jnp.int32(-2 ** 31), key)
+        l_k = jnp.stack([p[0] for p in picks], -1)
+        d_k = jnp.stack([p[1] for p in picks], -1)
+        s_k = jnp.stack([p[2] for p in picks], -1)
+    else:
+        _, l_sorted, d_sorted, s_sorted = jax.lax.sort(
+            (-key, labels, dist, sc), dimension=-1, num_keys=2)
+        s_k, l_k, d_k = s_sorted[:, :k], l_sorted[:, :k], d_sorted[:, :k]
+    hit = s_k >= 0
+    return (jnp.where(hit, l_k, -1), jnp.where(hit, d_k, BIG),
+            jnp.where(hit, s_k, jnp.float32(-1.0)))
 
 
 def _search_trace_batch(index: SketchIndex, qs: jnp.ndarray, *, tau: int,

@@ -52,6 +52,7 @@ int64 / int32 global ids.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import threading
 from typing import Dict, List, NamedTuple, Optional, Tuple
@@ -62,6 +63,7 @@ import numpy as np
 
 from ..kernels import ops
 from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
+from ..kernels.ref import RERANK_METRICS
 from .bst import BIG, build_bst
 from .column_store import ColumnStore
 from .cost_model import frontier_capacities, tau_for_k
@@ -74,7 +76,8 @@ from .multi_index import (build_multi_index, mi_column_dists, mi_search_batch,
 from .search import (CAP_MAX_DEFAULT, LADDER_CAP_MAX, TopKResult,
                      _CACHE_STATS, _note_trace, _pad_rows, _pad_topk,
                      _pin_cache_get, _traverse_frontier_batch, bucket_m,
-                     get_searcher, scatter_root_plane, select_topk_columns)
+                     get_searcher, scatter_root_plane, select_topk_columns,
+                     select_topk_scores)
 
 BIG_I = int(BIG)
 
@@ -98,9 +101,11 @@ _SEG_SERIALS = itertools.count()
 # "fanout" counts the per-segment reference path (one per segment
 # searcher call, capacity-ladder retries included, plus one per
 # delta-buffer scan), "fused" the single-dispatch arena path (one per
-# τ-ladder rung).  The serving metrics snapshot exposes these — dispatch
-# accounting replaces per-segment accounting (DESIGN.md §6).
-_DISPATCH_STATS = {"total": 0, "fused": 0, "fanout": 0}
+# τ-ladder rung), "rerank" the exact re-rank pass (one per
+# ``topk(rerank=...)`` request, regardless of segment count —
+# DESIGN.md §10).  The serving metrics snapshot exposes these —
+# dispatch accounting replaces per-segment accounting (DESIGN.md §6).
+_DISPATCH_STATS = {"total": 0, "fused": 0, "fanout": 0, "rerank": 0}
 # the counters are bumped from every scheduler worker thread — guard the
 # read-modify-write (plain ``+=`` on a dict slot is not atomic)
 _DISPATCH_LOCK = threading.Lock()
@@ -115,8 +120,10 @@ def _dispatch(kind: str) -> None:
 def dispatch_stats() -> Dict[str, int]:
     """Device-dispatch counters of the segmented query path: ``total``
     host->device program launches, split into ``fused`` (arena path —
-    one per τ rung, independent of segment count) and ``fanout``
-    (per-segment reference path — one per segment per rung)."""
+    one per τ rung, independent of segment count), ``fanout``
+    (per-segment reference path — one per segment per rung), and
+    ``rerank`` (exact re-rank pass — one per ``topk(rerank=...)``
+    request, never per segment)."""
     with _DISPATCH_LOCK:
         return dict(_DISPATCH_STATS)
 
@@ -170,6 +177,10 @@ class Segment:
       serial:   process-monotonic id (auto-assigned); keys every cached
                 compiled artifact for this segment — never reused, unlike
                 ``id()``.
+      payloads: optional (n_seg, Wp) uint32 — the rows' original
+                token-set bitmaps (``hamming.pack_sets``), retained
+                host-side for the exact re-rank plane (DESIGN.md §10);
+                row order matches ``ids``.
     """
 
     index: object
@@ -180,6 +191,7 @@ class Segment:
     b: int
     serial: int = dataclasses.field(
         default_factory=lambda: next(_SEG_SERIALS))
+    payloads: Optional[np.ndarray] = None
 
     @property
     def sketches(self) -> np.ndarray:
@@ -333,6 +345,110 @@ def _ladder_topk(columns_fn, n_live: int, b: int, L: int, qs: np.ndarray,
                       tau=tau, overflow=overflow)
 
 
+class _PayloadArena:
+    """Device-resident payload plane for the non-suffix configurations
+    (bst ``layout="full"``, multi, sharded): one (Wp, R) uint32 bitmap
+    column per sealed physical row, stack order, maintained with the
+    arena's incremental discipline — a flush appends one block, a
+    merge/compact rebuilds.  (The suffix layout keeps payloads inside
+    the tiered ``ColumnStore`` blocks instead, DESIGN.md §10.)"""
+
+    def __init__(self, pay_words: int):
+        self.pay_words = int(pay_words)
+        self.serials: Tuple[int, ...] = ()
+        self.pays: jnp.ndarray = jnp.zeros((self.pay_words, 0), jnp.uint32)
+
+    def refresh(self, segments: List[Segment],
+                serials: Tuple[int, ...]) -> "jnp.ndarray":
+        if self.serials == serials:
+            return self.pays
+        if not (len(serials) > len(self.serials)
+                and serials[:len(self.serials)] == self.serials):
+            self.pays = jnp.zeros((self.pay_words, 0), jnp.uint32)
+            self.serials = ()
+        new_segs = segments[len(self.serials):]
+        if new_segs:
+            blocks = [np.ascontiguousarray(
+                seg.payloads.T.astype(np.uint32)) for seg in new_segs]
+            self.pays = jnp.concatenate(
+                [self.pays, jnp.asarray(np.concatenate(blocks, axis=-1))],
+                axis=-1)
+        self.serials = serials
+        return self.pays
+
+    def array_bytes(self) -> int:
+        return int(self.pays.nbytes)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "kk", "block_m"))
+def _rerank_select(dist, pay_vert, q_pay, col_ids, *, metric: str, kk: int,
+                   block_m: int):
+    """One-launch exact re-rank + selection for the host-assembled
+    (reference / sharded) paths: survivors of the final-τ dist plane are
+    scored by ``ops.exact_rerank`` and selected by
+    ``search.select_topk_scores`` — the same kernel and sort the fused
+    arena's re-rank program runs, so every path is bit-identical."""
+    _note_trace()
+    surv = (dist < BIG).astype(jnp.int32)
+    scores = ops.exact_rerank(pay_vert, q_pay, surv, metric=metric,
+                              block_m=block_m)
+    return select_topk_scores(scores, dist, col_ids, kk)
+
+
+def _pad_topk_scores(ids: np.ndarray, dists: np.ndarray,
+                     scores: np.ndarray, k: int):
+    """Pad re-ranked (m, kk) planes out to (m, k): (-1, BIG, -1.0)."""
+    kk = ids.shape[-1]
+    if kk == k:
+        return ids, dists, scores
+    pad = [(0, 0)] * (ids.ndim - 1) + [(0, k - kk)]
+    return (np.pad(ids, pad, constant_values=-1),
+            np.pad(dists, pad, constant_values=BIG_I),
+            np.pad(scores, pad, constant_values=np.float32(-1.0)))
+
+
+def _empty_topk_rerank(m: int, k: int) -> TopKResult:
+    return TopKResult(ids=jnp.full((m, k), -1, jnp.int32),
+                      dists=jnp.full((m, k), BIG_I, jnp.int32),
+                      tau=0, overflow=0,
+                      scores=jnp.full((m, k), -1.0, jnp.float32))
+
+
+def _ladder_topk_rerank(columns_fn, payload_rows_fn, n_live: int, b: int,
+                        L: int, block_m: int, qs: np.ndarray, k: int,
+                        tau0: Optional[int], metric: str,
+                        q_pay: np.ndarray) -> TopKResult:
+    """The shared reference two-stage ladder (the fan-out analogue of
+    ``_ladder_topk``): escalate τ until every query has ≥ min(k, n_live)
+    survivors, then ONE ``_rerank_select`` launch scores the final
+    survivor plane against ``payload_rows_fn()``'s (R, Wp) host rows and
+    selects the k best (score desc, id asc)."""
+    m = qs.shape[0]
+    if n_live == 0:
+        return _empty_topk_rerank(m, int(k))
+    kk = min(int(k), n_live)
+    tau = tau0 if tau0 is not None else tau_for_k(b, L, n_live, kk)
+    tau = min(max(int(tau), 0), L)
+    while True:
+        dist, col_ids, overflow = columns_fn(qs, tau)
+        if int((dist < BIG_I).sum(axis=1).min()) >= kk or tau >= L:
+            break
+        tau = min(L, max(tau + 1, 2 * tau))
+    pay_vert = jnp.asarray(np.ascontiguousarray(payload_rows_fn().T))
+    _dispatch("rerank")
+    ids, dists, scores = _rerank_select(
+        jnp.asarray(dist), pay_vert,
+        jnp.asarray(np.ascontiguousarray(q_pay.T)),
+        jnp.asarray(col_ids.astype(np.int32)),
+        metric=metric, kk=kk, block_m=block_m)
+    ids, dists, scores = _pad_topk_scores(
+        np.asarray(ids), np.asarray(dists), np.asarray(scores), int(k))
+    return TopKResult(ids=jnp.asarray(ids), dists=jnp.asarray(dists),
+                      tau=tau, overflow=int(overflow),
+                      scores=jnp.asarray(scores))
+
+
 class SegmentedIndex:
     """A dynamic, incrementally maintained index over b-bit sketches.
 
@@ -365,6 +481,12 @@ class SegmentedIndex:
                   cold blocks stay host-packed and are staged per query
                   (LRU demotion under pressure).  None = unlimited
                   (everything hot — the PR-5 placement).
+      payload_words: uint32 words per row payload bitmap
+                  (``ceil(vocab / 32)``, see ``hamming.pack_sets``).
+                  When set, every ``insert`` must supply matching
+                  ``payloads`` and ``topk*(rerank=metric)`` runs the
+                  exact re-rank plane (DESIGN.md §10); None (default)
+                  disables payload storage and re-ranking.
 
     >>> import numpy as np
     >>> idx = SegmentedIndex(L=8, b=2, delta_cap=4)
@@ -382,7 +504,8 @@ class SegmentedIndex:
                  lam: float = 0.5, auto_merge: bool = True,
                  block_m: int = DEFAULT_BLOCK_M, use_arena: bool = True,
                  layout: str = "suffix",
-                 hot_bytes: Optional[int] = None):
+                 hot_bytes: Optional[int] = None,
+                 payload_words: Optional[int] = None):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}")
         if layout not in LAYOUTS:
@@ -399,6 +522,8 @@ class SegmentedIndex:
         self.use_arena = bool(use_arena)
         self.layout = layout
         self.hot_bytes = hot_bytes
+        self.payload_words = (None if payload_words is None
+                              else int(payload_words))
 
         self.segments: List[Segment] = []
         self.n_ids = 0                      # global ids ever assigned
@@ -406,6 +531,13 @@ class SegmentedIndex:
         self._delta_ids = np.zeros((0,), np.int64)
         self._delta_live = np.zeros((0,), bool)
         self._delta_vert: Optional[jnp.ndarray] = None  # cached (b, W, ndb)
+        # re-rank payloads (DESIGN.md §10): host delta rows + cached
+        # device plane, plus the sealed payload arena of the non-suffix
+        # configurations (suffix keeps payloads in the ColumnStore)
+        self._delta_pay = (np.zeros((0, self.payload_words), np.uint32)
+                           if self.payload_words is not None else None)
+        self._delta_pay_vert: Optional[jnp.ndarray] = None  # (Wp, ndb)
+        self._pay_arena: Optional[_PayloadArena] = None
         # bst backend only: the tiered suffix ColumnStore (layout
         # "suffix") or the full-length _ColumnArena reference ("full") —
         # both expose the same maintenance surface (serials / live /
@@ -431,12 +563,36 @@ class SegmentedIndex:
         if self.event_hook is not None:
             self.event_hook(event, info)
 
-    def insert(self, sketches: np.ndarray) -> np.ndarray:
+    def _check_payloads(self, payloads, k: int) -> Optional[np.ndarray]:
+        """Validate insert-time payloads against ``payload_words``."""
+        if self.payload_words is None:
+            if payloads is not None:
+                raise ValueError(
+                    "payloads supplied but the index was built without "
+                    "payload_words")
+            return None
+        if payloads is None:
+            raise ValueError(
+                "payload_words is set: insert requires (k, "
+                f"{self.payload_words}) uint32 payload bitmaps")
+        pay = np.asarray(payloads, dtype=np.uint32)
+        if pay.ndim == 1:
+            pay = pay[None, :]
+        if pay.shape != (k, self.payload_words):
+            raise ValueError(f"payloads shape {pay.shape} != "
+                             f"({k}, {self.payload_words})")
+        return pay
+
+    def insert(self, sketches: np.ndarray,
+               payloads: Optional[np.ndarray] = None) -> np.ndarray:
         """Append sketches to the delta buffer; returns their (k,) int64
         global ids.  ``sketches``: (k, L) or (L,) uint8 over [0, 2^b).
-        Triggers ``flush`` (and, if ``auto_merge``, the size-tiered merge
-        policy) once the delta buffer reaches ``delta_cap`` rows —
-        search stays available throughout."""
+        When the index was built with ``payload_words``, ``payloads``
+        must carry the rows' (k, Wp) uint32 set bitmaps
+        (``hamming.pack_sets``) — the exact re-rank plane's source of
+        truth.  Triggers ``flush`` (and, if ``auto_merge``, the
+        size-tiered merge policy) once the delta buffer reaches
+        ``delta_cap`` rows — search stays available throughout."""
         sk = np.asarray(sketches, dtype=np.uint8)
         if sk.ndim == 1:
             sk = sk[None, :]
@@ -445,15 +601,20 @@ class SegmentedIndex:
         if sk.size and int(sk.max()) >= (1 << self.b):
             raise ValueError("character exceeds alphabet [0, 2^b)")
         k = sk.shape[0]
+        pay = self._check_payloads(payloads, k)
         new_ids = np.arange(self.n_ids, self.n_ids + k, dtype=np.int64)
         if self.store is not None:
-            self.store.log_insert(new_ids, sk)   # write-ahead: log, then apply
+            # write-ahead: log, then apply
+            self.store.log_insert(new_ids, sk, payloads=pay)
         self.n_ids += k
         self._delta_sk = np.concatenate([self._delta_sk, sk])
         self._delta_ids = np.concatenate([self._delta_ids, new_ids])
         self._delta_live = np.concatenate(
             [self._delta_live, np.ones(k, bool)])
         self._delta_vert = None
+        if pay is not None:
+            self._delta_pay = np.concatenate([self._delta_pay, pay])
+            self._delta_pay_vert = None
         self.counters["inserted"] += k
         self._emit("insert", rows=k)
         if len(self._delta_ids) >= self.delta_cap:
@@ -507,9 +668,12 @@ class SegmentedIndex:
         if live.any():
             sk = self._delta_sk[live]
             ids = self._delta_ids[live]
+            pay = (self._delta_pay[live]
+                   if self._delta_pay is not None else None)
             seg = Segment(index=self._build(sk),
                           packed=pack_vertical(sk, self.b), ids=ids,
-                          live=np.ones(len(ids), bool), L=self.L, b=self.b)
+                          live=np.ones(len(ids), bool), L=self.L, b=self.b,
+                          payloads=pay)
             self.segments.append(seg)
             self.counters["flushes"] += 1
             self._emit("flush", rows=seg.n)
@@ -517,6 +681,9 @@ class SegmentedIndex:
         self._delta_ids = np.zeros((0,), np.int64)
         self._delta_live = np.zeros((0,), bool)
         self._delta_vert = None
+        if self._delta_pay is not None:
+            self._delta_pay = np.zeros((0, self.payload_words), np.uint32)
+            self._delta_pay_vert = None
         if self.store is not None:
             self.store.checkpoint(self)
         return seg
@@ -538,14 +705,20 @@ class SegmentedIndex:
         a, b_ = self.segments[i], self.segments[j]
         sk = np.concatenate([a.sketches[a.live], b_.sketches[b_.live]])
         ids = np.concatenate([a.ids[a.live], b_.ids[b_.live]])
+        pay = None
+        if self.payload_words is not None:
+            pay = np.concatenate([a.payloads[a.live], b_.payloads[b_.live]])
         order = np.argsort(ids, kind="stable")   # keep ids sorted for delete
         sk, ids = sk[order], ids[order]
+        if pay is not None:
+            pay = pay[order]
         lo, hi = min(i, j), max(i, j)
         del self.segments[hi], self.segments[lo]
         if len(ids):
             self.segments.insert(lo, Segment(
                 index=self._build(sk), packed=pack_vertical(sk, self.b),
-                ids=ids, live=np.ones(len(ids), bool), L=self.L, b=self.b))
+                ids=ids, live=np.ones(len(ids), bool), L=self.L, b=self.b,
+                payloads=pay))
         self.counters["merges"] += 1
         self._emit("merge", rows=int(len(ids)))
         if self.store is not None:
@@ -591,10 +764,12 @@ class SegmentedIndex:
                 out[si] = None
             else:
                 sk, ids = seg.sketches[seg.live], seg.ids[seg.live]
+                pay = (seg.payloads[seg.live]
+                       if seg.payloads is not None else None)
                 out[si] = Segment(index=self._build(sk),
                                   packed=pack_vertical(sk, self.b), ids=ids,
                                   live=np.ones(len(ids), bool), L=self.L,
-                                  b=self.b)
+                                  b=self.b, payloads=pay)
             done += 1
         self.segments = [s for s in out if s is not None]
         self.counters["compactions"] += done
@@ -650,7 +825,9 @@ class SegmentedIndex:
                                      overflow=res.overflow)
 
     def topk_batch(self, qs: np.ndarray, k: int,
-                   tau0: Optional[int] = None) -> TopKResult:
+                   tau0: Optional[int] = None, *,
+                   rerank: Optional[str] = None,
+                   q_payloads: Optional[np.ndarray] = None) -> TopKResult:
         """Exact k-nearest-neighbors over the live ids: the fused
         one-dispatch arena program on a shared τ-escalation ladder —
         traversal, delta scan, verify, and (distance, id) selection all
@@ -663,21 +840,48 @@ class SegmentedIndex:
         the surviving sketches (after the monotone global-id mapping)
         and to the per-segment reference fan-out (``use_arena=False``).
         Works over column-compressed planes — O(m · physical rows), not
-        O(m · ids-ever-assigned)."""
+        O(m · ids-ever-assigned).
+
+        ``rerank`` ("jaccard" / "cosine" / "containment") switches on
+        the two-stage contract (DESIGN.md §10): the final-τ survivor
+        plane stays on device and ONE additional fused dispatch gathers
+        the survivors' payload bitmaps, scores them exactly against
+        ``q_payloads`` ((m, Wp) uint32), and selects the k *largest*
+        (score, -id) — ``TopKResult.scores`` carries the exact scores,
+        ids/dists re-order to score order, pads are (-1, BIG, -1.0).
+        Requires ``payload_words``."""
         qs = np.asarray(qs, dtype=np.uint8)
         if qs.ndim == 1:
             qs = qs[None, :]
+        if rerank is not None:
+            q_pay = self._check_rerank(rerank, q_payloads, qs.shape[0])
+            if self.use_arena:
+                return self._fused_topk_rerank(qs, int(k), tau0, rerank,
+                                               q_pay)
+            return self._rerank_ladder(qs, int(k), tau0, rerank, q_pay)
+        if q_payloads is not None:
+            raise ValueError("q_payloads supplied without rerank=")
         if self.use_arena:
             return self._fused_topk(qs, int(k), tau0)
         return _ladder_topk(self._search_columns, self.n_live, self.b,
                             self.L, qs, k, tau0)
 
     def topk(self, q: np.ndarray, k: int,
-             tau0: Optional[int] = None) -> TopKResult:
+             tau0: Optional[int] = None, *,
+             rerank: Optional[str] = None,
+             q_payloads: Optional[np.ndarray] = None) -> TopKResult:
         """Single-query ``topk_batch`` (row 0)."""
-        res = self.topk_batch(np.asarray(q)[None], k, tau0=tau0)
+        qp = None
+        if q_payloads is not None:
+            qp = np.asarray(q_payloads, np.uint32)
+            if qp.ndim == 1:
+                qp = qp[None, :]
+        res = self.topk_batch(np.asarray(q)[None], k, tau0=tau0,
+                              rerank=rerank, q_payloads=qp)
         return TopKResult(ids=res.ids[0], dists=res.dists[0], tau=res.tau,
-                          overflow=res.overflow)
+                          overflow=res.overflow,
+                          scores=(None if res.scores is None
+                                  else res.scores[0]))
 
     # -- accounting ------------------------------------------------------
 
@@ -733,12 +937,24 @@ class SegmentedIndex:
             host += ar.host_bytes()
         if self._delta_vert is not None:
             device += int(self._delta_vert.nbytes)
+        # re-rank payload plane (DESIGN.md §10): the suffix store's
+        # payload blocks are already inside ar.array_bytes()/host_bytes()
+        # (block_bytes); the non-suffix arena and the delta plane are
+        # ledgered here
+        if self._delta_pay_vert is not None:
+            device += int(self._delta_pay_vert.nbytes)
+        if self._pay_arena is not None:
+            device += self._pay_arena.array_bytes()
         for seg in self.segments:
             device += int(seg.index.array_bytes())
             host += int(seg.packed.nbytes + seg.ids.nbytes
                         + seg.live.nbytes)
+            if seg.payloads is not None:
+                host += int(seg.payloads.nbytes)
         host += int(self._delta_sk.nbytes + self._delta_ids.nbytes
                     + self._delta_live.nbytes)
+        if self._delta_pay is not None:
+            host += int(self._delta_pay.nbytes)
         return {"model_bits": model, "device_bytes": device,
                 "host_bytes": host}
 
@@ -773,7 +989,8 @@ class SegmentedIndex:
 
     # -- internals -------------------------------------------------------
 
-    def _replay_insert(self, ids: np.ndarray, sk: np.ndarray) -> None:
+    def _replay_insert(self, ids: np.ndarray, sk: np.ndarray,
+                       payloads: Optional[np.ndarray] = None) -> None:
         """Recovery-only: append rows with *preassigned* ids to the delta
         buffer.  No WAL logging and no auto-flush — the store runs the
         maintenance fixpoint once replay completes, so the recovered
@@ -785,6 +1002,13 @@ class SegmentedIndex:
         self._delta_live = np.concatenate(
             [self._delta_live, np.ones(len(ids), bool)])
         self._delta_vert = None
+        if self._delta_pay is not None:
+            if payloads is None:
+                raise ValueError("replay of a payload index requires the "
+                                 "records' payload bitmaps")
+            self._delta_pay = np.concatenate(
+                [self._delta_pay, np.asarray(payloads, np.uint32)])
+            self._delta_pay_vert = None
         if ids.size:
             self.n_ids = max(self.n_ids, int(ids.max()) + 1)
 
@@ -815,6 +1039,21 @@ class SegmentedIndex:
                                     np.uint32)], axis=-1)
             self._delta_vert = jnp.asarray(vert.copy())
         return self._delta_vert
+
+    def _delta_pay_planes(self) -> jnp.ndarray:
+        """(Wp, ndb) uint32 delta-buffer payload plane, bucketed to the
+        same ``ndb = bucket_m(nd)`` shape as ``_delta_planes`` (zero
+        columns past nd — the survivor mask already kills them), so the
+        re-rank program shares the delta shape buckets of the verify
+        scan."""
+        if self._delta_pay_vert is None:
+            nd = len(self._delta_ids)
+            ndb = bucket_m(nd)
+            vert = np.zeros((self.payload_words, ndb), np.uint32)
+            if nd:
+                vert[:, :nd] = self._delta_pay.T
+            self._delta_pay_vert = jnp.asarray(vert)
+        return self._delta_pay_vert
 
     def _search_columns(self, qs: np.ndarray,
                         tau: int) -> Tuple[np.ndarray, np.ndarray, int]:
@@ -1004,7 +1243,8 @@ class SegmentedIndex:
                        and len(serials) > len(st.serials)
                        and serials[:len(st.serials)] == st.serials)
         if not incremental:
-            st = ColumnStore(self.L, self.b, hot_bytes=self.hot_bytes)
+            st = ColumnStore(self.L, self.b, hot_bytes=self.hot_bytes,
+                             payload_words=self.payload_words)
         for seg in self.segments[len(st.serials):]:
             st.append_segment(seg)
         st.seal(serials)
@@ -1095,6 +1335,12 @@ class SegmentedIndex:
             dist = jnp.where(hm > 0, dist, BIG)
             if kind == "cols":
                 return dist, overflow.sum()
+            if kind == "dist":
+                # two-stage stage 1: the dist plane STAYS on device (the
+                # re-rank program consumes it); only the ladder scalars
+                # cross back (DESIGN.md §10)
+                return (dist, (dist < BIG).sum(axis=1).min(),
+                        overflow.sum())
             sel_ids, sel_d = select_topk_columns(
                 dist, jnp.concatenate([gids0, delta_gids]), kk)
             min_surv = (dist < BIG).sum(axis=1).min()
@@ -1178,6 +1424,9 @@ class SegmentedIndex:
             dist = jnp.concatenate(dist_parts, axis=1)[:, inv]
             if kind == "cols":
                 return dist, overflow.sum()
+            if kind == "dist":
+                return (dist, (dist < BIG).sum(axis=1).min(),
+                        overflow.sum())
             sel_ids, sel_d = select_topk_columns(
                 dist, jnp.concatenate([gids0, delta_gids]), kk)
             min_surv = (dist < BIG).sum(axis=1).min()
@@ -1217,6 +1466,8 @@ class SegmentedIndex:
             dist = jnp.concatenate(dists, axis=1)
             if kind == "cols":
                 return dist, ov
+            if kind == "dist":
+                return dist, (dist < BIG).sum(axis=1).min(), ov
             sel_ids, sel_d = select_topk_columns(
                 dist, jnp.concatenate(gids_const + [delta_gids]), kk)
             min_surv = (dist < BIG).sum(axis=1).min()
@@ -1258,6 +1509,8 @@ class SegmentedIndex:
             dist = jnp.concatenate(dists, axis=1)
             if kind == "cols":
                 return dist, ov
+            if kind == "dist":
+                return dist, (dist < BIG).sum(axis=1).min(), ov
             sel_ids, sel_d = select_topk_columns(
                 dist, jnp.concatenate(gids_const + [delta_gids]), kk)
             min_surv = (dist < BIG).sum(axis=1).min()
@@ -1371,6 +1624,183 @@ class SegmentedIndex:
         return TopKResult(ids=jnp.asarray(ids), dists=jnp.asarray(dd),
                           tau=tau, overflow=int(ov))
 
+    # -- exact re-rank plane (DESIGN.md §10) -----------------------------
+
+    def _check_rerank(self, metric: str, q_payloads,
+                      m: int) -> np.ndarray:
+        """Validate the two-stage request: known metric, payload-bearing
+        index, (m, Wp) uint32 query bitmaps."""
+        if metric not in RERANK_METRICS:
+            raise ValueError(f"rerank must be one of {RERANK_METRICS}")
+        if self.payload_words is None:
+            raise ValueError(
+                "rerank requires an index built with payload_words")
+        if q_payloads is None:
+            raise ValueError("rerank requires q_payloads — the queries' "
+                             "(m, Wp) uint32 set bitmaps")
+        qp = np.asarray(q_payloads, np.uint32)
+        if qp.ndim == 1:
+            qp = qp[None, :]
+        if qp.shape != (m, self.payload_words):
+            raise ValueError(f"q_payloads shape {qp.shape} != "
+                             f"({m}, {self.payload_words})")
+        return qp
+
+    def _payload_rows(self) -> np.ndarray:
+        """(R, Wp) uint32 host payload rows in global column order (every
+        segment's rows in stack order, then the delta buffer's) — the
+        reference path's re-rank source."""
+        parts = [seg.payloads for seg in self.segments]
+        if len(self._delta_ids):
+            parts.append(self._delta_pay)
+        if not parts:
+            return np.zeros((0, self.payload_words), np.uint32)
+        return np.concatenate(parts, axis=0)
+
+    def _rerank_ladder(self, qs: np.ndarray, k: int, tau0: Optional[int],
+                       metric: str, q_pay: np.ndarray) -> TopKResult:
+        """Reference two-stage path (``use_arena=False``): the
+        per-segment fan-out ladder finds the final-τ survivor plane,
+        then ONE ``_rerank_select`` launch scores and selects — same
+        kernel, sort, and tie order as the fused path."""
+        return _ladder_topk_rerank(
+            self._search_columns, self._payload_rows, self.n_live, self.b,
+            self.L, self.block_m, qs, k, tau0, metric, q_pay)
+
+    def _rerank_fn(self, metric: str, kk: int):
+        """Fetch (or build) the compiled stage-2 program for this stack —
+        same cache, fingerprint, and dead-generation discipline as
+        ``_fused_fn`` (the stamp purge there also drops stale re-rank
+        programs: they share this index's ``_fused_id`` scope)."""
+        serials = self._seg_serials()
+        suffix_store = self.backend == "bst" and self.layout == "suffix"
+        gen = self._refresh_store().gen if suffix_store else 0
+        key = (self.backend, self.layout, self._fused_id, serials, gen,
+               "rerank", metric, 0, kk, self.block_m)
+        fn = _FUSED_CACHE.get(key)
+        if fn is None:
+            fn = self._build_rerank(metric, kk)
+            while len(_FUSED_CACHE) >= _FUSED_CACHE_CAP:
+                _FUSED_CACHE.pop(next(iter(_FUSED_CACHE)))
+            _FUSED_CACHE[key] = fn
+            _CACHE_STATS["misses"] += 1
+        else:
+            _CACHE_STATS["hits"] += 1
+        return fn
+
+    def _build_rerank(self, metric: str, kk: int):
+        """ONE jitted stage-2 program: assemble the (Wp, R) payload plane
+        in global column order (hot groups close over device bitmaps,
+        cold arrive through the staged payload slabs, delta through its
+        bucketed plane), score the stage-1 survivors with the exact
+        re-rank kernel, and select the k best (score desc, id asc) on
+        device — the dist plane never leaves the device between stages."""
+        block_m = self.block_m
+        if self.backend == "bst" and self.layout == "suffix":
+            store = self._refresh_store()
+            plan = store.plan()
+            gids0 = store.gids
+            r_sealed = store.n_cols
+
+            @jax.jit
+            def run(dist, q_pay, staged_pays, delta_pay, delta_gids):
+                _note_trace()
+                pay_parts: List[jnp.ndarray] = []
+                order_parts: List[np.ndarray] = []
+                for g, slab in zip(plan, staged_pays):
+                    parts = [p for p in (g.pays_hot, slab) if p is not None]
+                    pay_parts.append(parts[0] if len(parts) == 1
+                                     else jnp.concatenate(parts, axis=-1))
+                    order_parts.append(g.perm)
+                ndb = delta_pay.shape[-1]
+                pay_parts.append(delta_pay)
+                order_parts.append(np.arange(r_sealed, r_sealed + ndb))
+                # the same trace-static inverse permutation the dist
+                # program applied — pay columns land in dist order
+                inv = np.argsort(np.concatenate(order_parts))
+                pays = jnp.concatenate(pay_parts, axis=-1)[:, inv]
+                surv = (dist < BIG).astype(jnp.int32)
+                scores = ops.exact_rerank(pays, q_pay, surv, metric=metric,
+                                          block_m=block_m)
+                col_ids = jnp.concatenate([gids0, delta_gids])
+                return select_topk_scores(scores, dist, col_ids, kk)
+            return run
+
+        # non-suffix configurations: sealed payloads live in the
+        # incremental device payload arena, already in stack order
+        if self._pay_arena is None:
+            self._pay_arena = _PayloadArena(self.payload_words)
+        pays0 = self._pay_arena.refresh(self.segments, self._seg_serials())
+        if self.backend == "bst":
+            gids0 = self._refresh_arena().gids
+        elif self.segments:
+            gids0 = jnp.concatenate(
+                [jnp.asarray(seg.ids.astype(np.int32))
+                 for seg in self.segments])
+        else:
+            gids0 = jnp.zeros((0,), jnp.int32)
+
+        @jax.jit
+        def run(dist, q_pay, delta_pay, delta_gids):
+            _note_trace()
+            pays = jnp.concatenate([pays0, delta_pay], axis=-1)
+            surv = (dist < BIG).astype(jnp.int32)
+            scores = ops.exact_rerank(pays, q_pay, surv, metric=metric,
+                                      block_m=block_m)
+            col_ids = jnp.concatenate([gids0, delta_gids])
+            return select_topk_scores(scores, dist, col_ids, kk)
+        return run
+
+    def _fused_topk_rerank(self, qs: np.ndarray, k: int,
+                           tau0: Optional[int], metric: str,
+                           q_pay: np.ndarray) -> TopKResult:
+        """The fused two-stage ladder: stage 1 re-runs the kind="dist"
+        fused program per τ rung (the survivor plane stays device-side;
+        only the two ladder scalars transfer), then stage 2 is ONE
+        additional re-rank dispatch for the whole request — regardless
+        of segment count (DESIGN.md §10)."""
+        m = qs.shape[0]
+        n_live = self.n_live
+        if n_live == 0:
+            return _empty_topk_rerank(m, int(k))
+        kk = min(int(k), n_live)
+        tau = tau0 if tau0 is not None else tau_for_k(self.b, self.L,
+                                                      n_live, kk)
+        tau = min(max(int(tau), 0), self.L)
+        while True:
+            dist, min_surv, ov = self._fused_call("dist", qs, tau)
+            if int(min_surv) >= kk or tau >= self.L:
+                break
+            tau = min(self.L, max(tau + 1, 2 * tau))
+        mb = int(dist.shape[0])
+        qp = np.zeros((mb, self.payload_words), np.uint32)
+        qp[:m] = q_pay
+        q_pay_vert = jnp.asarray(np.ascontiguousarray(qp.T))
+        nd = len(self._delta_ids)
+        if nd:
+            delta_pay = self._delta_pay_planes()
+            ndb = delta_pay.shape[-1]
+            delta_gids = np.zeros(ndb, np.int32)
+            delta_gids[:nd] = self._delta_ids.astype(np.int32)
+        else:
+            delta_pay = jnp.zeros((self.payload_words, 0), jnp.uint32)
+            delta_gids = np.zeros(0, np.int32)
+        fn = self._rerank_fn(metric, kk)
+        _dispatch("rerank")
+        if self.backend == "bst" and self.layout == "suffix":
+            staged_pays = self._refresh_store().stage_payloads()
+            ids, dists, scores = fn(dist, q_pay_vert, staged_pays,
+                                    delta_pay, jnp.asarray(delta_gids))
+        else:
+            ids, dists, scores = fn(dist, q_pay_vert, delta_pay,
+                                    jnp.asarray(delta_gids))
+        ids, dists, scores = _pad_topk_scores(
+            np.asarray(ids)[:m], np.asarray(dists)[:m],
+            np.asarray(scores)[:m], int(k))
+        return TopKResult(ids=jnp.asarray(ids), dists=jnp.asarray(dists),
+                          tau=tau, overflow=int(ov),
+                          scores=jnp.asarray(scores))
+
 
 class ShardedSegmentedIndex:
     """S independent segment stacks, one per shard — the dynamic analogue
@@ -1390,11 +1820,15 @@ class ShardedSegmentedIndex:
                  delta_cap: int = 4096, backend: str = "bst",
                  lam: float = 0.5, auto_merge: bool = True,
                  block_m: int = DEFAULT_BLOCK_M, use_arena: bool = True,
-                 layout: str = "suffix", hot_bytes: Optional[int] = None):
+                 layout: str = "suffix", hot_bytes: Optional[int] = None,
+                 payload_words: Optional[int] = None):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         self.L, self.b = int(L), int(b)
         self.n_shards = int(n_shards)
+        self.block_m = int(block_m)
+        self.payload_words = (None if payload_words is None
+                              else int(payload_words))
         # a per-stack hot budget: the device budget splits evenly across
         # the independent stacks (each stack places its own blocks)
         per_stack = (None if hot_bytes is None
@@ -1403,7 +1837,8 @@ class ShardedSegmentedIndex:
             SegmentedIndex(L, b, delta_cap=delta_cap, backend=backend,
                            lam=lam, auto_merge=auto_merge, block_m=block_m,
                            use_arena=use_arena, layout=layout,
-                           hot_bytes=per_stack)
+                           hot_bytes=per_stack,
+                           payload_words=self.payload_words)
             for _ in range(self.n_shards)]
         self.n_ids = 0
         # global id -> shard is `id % S`; per-shard local ids are dense,
@@ -1413,15 +1848,20 @@ class ShardedSegmentedIndex:
         # snapshot their own segments).
         self.store: Optional[object] = None
 
-    def insert(self, sketches: np.ndarray) -> np.ndarray:
-        """Round-robin insert; returns (k,) int64 global ids."""
+    def insert(self, sketches: np.ndarray,
+               payloads: Optional[np.ndarray] = None) -> np.ndarray:
+        """Round-robin insert; returns (k,) int64 global ids.  With
+        ``payload_words`` set, ``payloads`` carries the rows' (k, Wp)
+        uint32 set bitmaps, routed to each shard alongside its rows."""
         sk = np.asarray(sketches, dtype=np.uint8)
         if sk.ndim == 1:
             sk = sk[None, :]
         k = sk.shape[0]
+        pay = self.shards[0]._check_payloads(payloads, k)
         new_ids = np.arange(self.n_ids, self.n_ids + k, dtype=np.int64)
         if self.store is not None and k:
-            self.store.log_insert(new_ids, sk)   # one global-id WAL record
+            # one global-id WAL record
+            self.store.log_insert(new_ids, sk, payloads=pay)
             # scope the routing: a shard's auto-flush checkpoint mid-way
             # through must not let the store truncate the WAL (or seal
             # sibling stacks past this record) before every shard has
@@ -1431,7 +1871,9 @@ class ShardedSegmentedIndex:
             for s in range(self.n_shards):
                 rows = np.flatnonzero(new_ids % self.n_shards == s)
                 if rows.size:
-                    self.shards[s].insert(sk[rows])
+                    self.shards[s].insert(
+                        sk[rows],
+                        payloads=pay[rows] if pay is not None else None)
         finally:
             if self.store is not None and k:
                 self.store.end_write()
@@ -1541,18 +1983,47 @@ class ShardedSegmentedIndex:
         return SegmentedSearchResult(mask=res.mask[0], dist=res.dist[0],
                                      overflow=res.overflow)
 
+    def _payload_rows(self) -> np.ndarray:
+        """(R, Wp) uint32 payload rows in the global column order of
+        ``_search_columns`` (shard 0's columns, then shard 1's, ...)."""
+        parts = [shard._payload_rows() for shard in self.shards]
+        return np.concatenate(parts, axis=0)
+
     def topk_batch(self, qs: np.ndarray, k: int,
-                   tau0: Optional[int] = None) -> TopKResult:
+                   tau0: Optional[int] = None, *,
+                   rerank: Optional[str] = None,
+                   q_payloads: Optional[np.ndarray] = None) -> TopKResult:
         """Exact global kNN: per-shard column-compressed fan-out on one
-        shared τ ladder (same contract as ``SegmentedIndex.topk_batch``)."""
+        shared τ ladder (same contract as ``SegmentedIndex.topk_batch``,
+        including the two-stage ``rerank=`` contract — stage 2 is still
+        ONE re-rank dispatch over the merged survivor plane, never one
+        per shard)."""
         qs = np.asarray(qs, dtype=np.uint8)
         if qs.ndim == 1:
             qs = qs[None, :]
+        if rerank is not None:
+            q_pay = self.shards[0]._check_rerank(rerank, q_payloads,
+                                                 qs.shape[0])
+            return _ladder_topk_rerank(
+                self._search_columns, self._payload_rows, self.n_live,
+                self.b, self.L, self.block_m, qs, k, tau0, rerank, q_pay)
+        if q_payloads is not None:
+            raise ValueError("q_payloads supplied without rerank=")
         return _ladder_topk(self._search_columns, self.n_live, self.b,
                             self.L, qs, k, tau0)
 
     def topk(self, q: np.ndarray, k: int,
-             tau0: Optional[int] = None) -> TopKResult:
-        res = self.topk_batch(np.asarray(q)[None], k, tau0=tau0)
+             tau0: Optional[int] = None, *,
+             rerank: Optional[str] = None,
+             q_payloads: Optional[np.ndarray] = None) -> TopKResult:
+        qp = None
+        if q_payloads is not None:
+            qp = np.asarray(q_payloads, np.uint32)
+            if qp.ndim == 1:
+                qp = qp[None, :]
+        res = self.topk_batch(np.asarray(q)[None], k, tau0=tau0,
+                              rerank=rerank, q_payloads=qp)
         return TopKResult(ids=res.ids[0], dists=res.dists[0], tau=res.tau,
-                          overflow=res.overflow)
+                          overflow=res.overflow,
+                          scores=(None if res.scores is None
+                                  else res.scores[0]))

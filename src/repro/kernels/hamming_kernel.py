@@ -339,3 +339,78 @@ def sparse_verify_arena_pallas(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
     )(paths_vert, q_vert, base_plane.astype(jnp.int32),
       base_idx.astype(jnp.int32), live.astype(jnp.int32))
     return mask, dist
+
+
+def _rerank_kernel(pay_ref, q_ref, surv_ref, out_ref, *, Wp: int,
+                   metric: str):
+    """One (query tile j, column block i) cell of the exact re-rank plane:
+    AND/popcount the (Wp, BLOCK_N) payload bitmaps against a
+    (Wp, BLOCK_M) query tile, reduce the word axis, and emit the exact
+    set-similarity score for every survivor lane.  Non-survivors (and
+    zero-denominator survivors' 0.0) keep the layout of the Hamming
+    plane so the downstream top-k sort needs no re-gather.  Like
+    ``_tile_distances``, Wp is a python constant and the word reduction
+    fully unrolls on the sublane axis."""
+    pay = pay_ref[...]                            # (Wp, BLOCK_N)
+    q = q_ref[...]                                # (Wp, BLOCK_M)
+    both = jax.lax.population_count(q[:, :, None] & pay[:, None, :])
+    pa = jax.lax.population_count(q).astype(jnp.int32)    # (Wp, BLOCK_M)
+    pb = jax.lax.population_count(pay).astype(jnp.int32)  # (Wp, BLOCK_N)
+    inter = both[0].astype(jnp.int32)
+    sa, sb = pa[0], pb[0]
+    for w in range(1, Wp):
+        inter = inter + both[w].astype(jnp.int32)
+        sa = sa + pa[w]
+        sb = sb + pb[w]
+    inter = inter.astype(jnp.float32)             # (BLOCK_M, BLOCK_N)
+    sa = sa.astype(jnp.float32)[:, None]
+    sb = sb.astype(jnp.float32)[None, :]
+    if metric == "jaccard":
+        den = sa + sb - inter
+    elif metric == "cosine":
+        den = jnp.sqrt(sa * sb)
+    else:                                         # containment (A = query)
+        den = jnp.broadcast_to(sa, inter.shape)
+    score = jnp.where(den > 0, inter / den, jnp.float32(0.0))
+    out_ref[...] = jnp.where(surv_ref[...] != 0, score, jnp.float32(-1.0))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "block_m", "block_n",
+                                    "interpret"))
+def exact_rerank_pallas(pay_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                        surv: jnp.ndarray, *, metric: str,
+                        block_m: int = DEFAULT_BLOCK_M,
+                        block_n: int = DEFAULT_BLOCK_N,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Exact re-rank scan: (Wp, n) payload bitmaps x (Wp, m) query
+    bitmaps x (m, n) survivor mask -> (m, n) float32 exact scores.
+
+    Same query-tiled (m/block_m, n/block_n) grid discipline as
+    ``hamming_distances_pallas`` — one launch scores every survivor of
+    the whole arena, reading the payload store once per query tile.
+    Scores are exact Jaccard / cosine / containment over the uint32
+    set bitmaps (see ``kernels.ref.exact_rerank_ref`` for semantics);
+    non-survivor lanes emit the -1.0 sentinel.
+    """
+    Wp, n = pay_vert.shape
+    m = q_vert.shape[-1]
+    assert metric in ("jaccard", "cosine", "containment"), metric
+    assert n % block_n == 0, (n, block_n)
+    assert m % block_m == 0, (m, block_m)
+    assert surv.shape == (m, n), (surv.shape, m, n)
+    grid = (m // block_m, n // block_n)
+    kernel = functools.partial(_rerank_kernel, Wp=Wp, metric=metric)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Wp, block_n), lambda j, i: (0, i)),
+            pl.BlockSpec((Wp, block_m), lambda j, i: (0, j)),
+            pl.BlockSpec((block_m, block_n), lambda j, i: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda j, i: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(pay_vert.astype(jnp.uint32), q_vert.astype(jnp.uint32),
+      surv.astype(jnp.int32))

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .hamming_kernel import (BIG, DEFAULT_BLOCK_M, DEFAULT_BLOCK_N,
-                             hamming_distances_pallas,
+                             exact_rerank_pallas, hamming_distances_pallas,
                              sparse_verify_arena_packed_pallas,
                              sparse_verify_arena_pallas,
                              sparse_verify_batch_pallas, sparse_verify_pallas)
@@ -232,3 +232,38 @@ def sparse_verify_arena_packed(db_words: jnp.ndarray, q_words: jnp.ndarray,
         db_p, q_p, base_p, idx_p, live_p, b=b, S=S, tau=tau,
         block_m=block_m, block_n=block_n, interpret=not _on_tpu())
     return mask[:m, :n], dist[:m, :n]
+
+
+def exact_rerank(pay_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                 surv: jnp.ndarray, *, metric: str,
+                 block_m: int = DEFAULT_BLOCK_M,
+                 block_n: int = DEFAULT_BLOCK_N,
+                 use_kernel: bool | None = None) -> jnp.ndarray:
+    """Exact re-rank pass over the survivor plane (DESIGN.md §10).
+
+    pay_vert: (Wp, n) uint32 column-major payload bitmaps (the payload
+              column store's concatenated arena); q_vert: (Wp, m) uint32
+              query bitmaps; surv: (m, n) survivor mask (nonzero ==
+              lane survived the trie sweep at the final τ rung);
+    returns (m, n) float32 exact Jaccard / cosine / containment scores,
+    -1.0 on non-survivor lanes.
+
+    Pads n to a ``block_n`` multiple with all-zero payloads and surv=0
+    (pad lanes score the -1.0 sentinel, sliced back off) and m to a
+    ``block_m`` multiple with all-zero queries (rows sliced off)."""
+    n = pay_vert.shape[-1]
+    m = q_vert.shape[-1]
+    if use_kernel is None:
+        use_kernel = n >= block_n  # tiny scans: oracle is cheaper than launch
+    if not use_kernel:
+        return ref.exact_rerank_ref(pay_vert, q_vert, surv, metric)
+    block_m = min(block_m, m)  # never compute more pad-query rows than m
+    pay_p = _pad_lanes(pay_vert.astype(jnp.uint32), block_n)
+    q_p = _pad_lanes(q_vert.astype(jnp.uint32), block_m)
+    pad_n = pay_p.shape[-1] - n
+    pad_m = q_p.shape[-1] - m
+    surv_p = jnp.pad(surv.astype(jnp.int32), ((0, pad_m), (0, pad_n)))
+    out = exact_rerank_pallas(pay_p, q_p, surv_p, metric=metric,
+                              block_m=block_m, block_n=block_n,
+                              interpret=not _on_tpu())
+    return out[:m, :n]

@@ -122,3 +122,37 @@ def sparse_verify_ref(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
         paths_vert, q_vert[..., None],
         base_dist.astype(jnp.int32)[None, :], tau)
     return mask[0], dist[0]
+
+
+RERANK_METRICS = ("jaccard", "cosine", "containment")
+
+
+def exact_rerank_ref(pay_vert: jnp.ndarray, q_vert: jnp.ndarray,
+                     surv: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """Exact set-similarity re-rank oracle over survivor lanes.
+
+    pay_vert: (Wp, n) uint32 column-major payload bitmaps; q_vert:
+    (Wp, m) uint32 query bitmaps; surv: (m, n) survivor mask (nonzero =
+    re-score this lane).  Returns (m, n) float32 scores — exact Jaccard
+    ``|A∩B| / |A∪B|``, cosine ``|A∩B| / sqrt(|A||B|)``, or asymmetric
+    containment ``|A∩B| / |A|`` with A the query — where survivors with
+    a zero denominator score 0.0 and non-survivors carry the sentinel
+    -1.0 (sorts strictly below every real score).
+    """
+    if metric not in RERANK_METRICS:
+        raise ValueError(f"unknown rerank metric {metric!r}")
+    inter = jax.lax.population_count(
+        q_vert.T[:, :, None] & pay_vert[None, :, :]).astype(jnp.int32)
+    inter = inter.sum(axis=1).astype(jnp.float32)              # (m, n)
+    sa = jax.lax.population_count(q_vert).astype(jnp.int32) \
+        .sum(axis=0).astype(jnp.float32)[:, None]              # (m, 1)
+    sb = jax.lax.population_count(pay_vert).astype(jnp.int32) \
+        .sum(axis=0).astype(jnp.float32)[None, :]              # (1, n)
+    if metric == "jaccard":
+        den = sa + sb - inter
+    elif metric == "cosine":
+        den = jnp.sqrt(sa * sb)
+    else:                                                      # containment
+        den = jnp.broadcast_to(sa, inter.shape)
+    score = jnp.where(den > 0, inter / den, jnp.float32(0.0))
+    return jnp.where(surv != 0, score, jnp.float32(-1.0))

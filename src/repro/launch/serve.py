@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.registry import ARCH_IDS, get_config
+from ..core.hamming import pack_sets
 from ..core.sketch import zbit_cws
 from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
 from ..distributed.sharding import use_mesh
@@ -60,9 +61,15 @@ def make_scheduler(args, L: int, b: int, name: str = "docs") -> Scheduler:
         max_batch=args.max_batch, max_queue=args.max_queue,
         max_wait_ms=args.max_wait_ms))
     if registry is None or name not in registry.names():
+        # --rerank provisions the exact re-rank plane (DESIGN.md §10):
+        # the collection stores per-row token-set bitmaps alongside the
+        # sketch columns
+        payload_words = ((args.vocab + 31) // 32
+                         if getattr(args, "rerank", None) else None)
         sched.create_collection(name, CollectionConfig(
             L=L, b=b, delta_cap=args.delta_cap,
-            block_m=args.block_m or DEFAULT_BLOCK_M))
+            block_m=args.block_m or DEFAULT_BLOCK_M,
+            payload_words=payload_words))
     return sched
 
 
@@ -74,6 +81,13 @@ def run_ingest(args) -> int:
     rng = np.random.default_rng(args.seed)
     n = args.index_size
     docs = rng.integers(0, 1 << b, size=(n, L), dtype=np.uint8)
+    pays = None
+    if args.rerank:
+        # synthetic token sets behind the sketches — the exact stage's
+        # source of truth
+        sets = [rng.choice(args.vocab, size=int(rng.integers(4, 24)),
+                           replace=False) for _ in range(n)]
+        pays = pack_sets(sets, args.vocab)
     sched = make_scheduler(args, L, b).start()
     coll = sched.registry.get("docs")
     index = coll.index
@@ -105,7 +119,9 @@ def run_ingest(args) -> int:
     t0 = time.time()
     id_futs = []
     for lo in range(0, n, chunk):
-        id_futs.append(sched.submit_insert("docs", docs[lo:lo + chunk]))
+        id_futs.append(sched.submit_insert(
+            "docs", docs[lo:lo + chunk],
+            payloads=pays[lo:lo + chunk] if pays is not None else None))
         if lo == chunk * 4:   # mid-stream query traffic, coalesced by the
             # scheduler into shape-bucketed dispatches between inserts
             futs = [sched.submit_topk("docs", q, args.topk)
@@ -130,14 +146,23 @@ def run_ingest(args) -> int:
           f"(space {st['space_bits'] / 8 / 1024:.1f} KiB incl. tombstones, "
           f"{st['tombstones']} tombstones held)")
 
-    qs = docs[rng.integers(0, n, args.batch)]
+    rows = rng.integers(0, n, args.batch)
+    qs = docs[rows]
     t0 = time.time()
-    futs = [sched.submit_topk("docs", q, args.topk) for q in qs]
+    if args.rerank:
+        futs = [sched.submit_topk("docs", q, args.topk, rerank=args.rerank,
+                                  q_payload=pays[row])
+                for q, row in zip(qs, rows)]
+    else:
+        futs = [sched.submit_topk("docs", q, args.topk) for q in qs]
     nn = [f.result() for f in futs]
     dt = time.time() - t0
     for r in range(min(args.batch, 4)):
+        extra = (f", {args.rerank} scores "
+                 f"{np.round(np.asarray(nn[r].scores), 3)}"
+                 if nn[r].scores is not None else "")
         print(f"  request {r}: top-{args.topk} docs {nn[r].ids} "
-              f"at distances {nn[r].dists} (tau*={nn[r].tau})")
+              f"at distances {nn[r].dists} (tau*={nn[r].tau}{extra})")
     print(f"post-merge scheduled topk: {dt / args.batch * 1e3:.1f} "
           f"ms/query (batch-fill "
           f"{sched.metrics.batch_fill_ratio():.2f})")
@@ -174,6 +199,14 @@ def main(argv=None):
     ap.add_argument("--tau", type=int, default=3)
     ap.add_argument("--topk", type=int, default=3,
                     help="k nearest documents returned per request")
+    ap.add_argument("--rerank", default=None,
+                    choices=["jaccard", "cosine", "containment"],
+                    help="--ingest: store token-set payload bitmaps and "
+                         "serve the final query round through the exact "
+                         "two-stage rerank= contract (DESIGN.md §10)")
+    ap.add_argument("--vocab", type=int, default=256,
+                    help="token vocabulary of the synthetic payload sets "
+                         "(--ingest --rerank)")
     ap.add_argument("--block-m", type=int, default=None,
                     help="query-tile size of the batched verify kernel "
                          "(default: kernel DEFAULT_BLOCK_M)")

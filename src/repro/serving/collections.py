@@ -50,6 +50,10 @@ class CollectionConfig:
                     keeps every block device-resident; a byte budget
                     demotes least-recently-used blocks to the host cold
                     tier, served via staged copy-ahead slabs.
+      payload_words: uint32 words per row payload bitmap (DESIGN.md §10).
+                    When set, inserts carry ``payloads`` and topk
+                    requests may ask for the exact two-stage
+                    ``rerank=`` contract; None disables re-ranking.
       mi_blocks / n_shards / lam / block_m: forwarded to the index.
     """
 
@@ -67,6 +71,7 @@ class CollectionConfig:
     use_arena: bool = True
     layout: str = "suffix"
     hot_bytes: Optional[int] = None
+    payload_words: Optional[int] = None
 
     def create(self):
         """Instantiate the configured dynamic index."""
@@ -75,7 +80,8 @@ class CollectionConfig:
         kw = dict(delta_cap=self.delta_cap, backend=self.backend,
                   lam=self.lam, auto_merge=self.auto_merge,
                   block_m=self.block_m, use_arena=self.use_arena,
-                  layout=self.layout, hot_bytes=self.hot_bytes)
+                  layout=self.layout, hot_bytes=self.hot_bytes,
+                  payload_words=self.payload_words)
         if self.n_stacks > 1:
             return ShardedSegmentedIndex(self.L, self.b, self.n_stacks, **kw)
         return SegmentedIndex(self.L, self.b, mi_blocks=self.mi_blocks,

@@ -81,10 +81,13 @@ class SearchResponse(NamedTuple):
 
 
 class TopKResponse(NamedTuple):
-    ids: np.ndarray      # (k,) int32 global ids, ascending (distance, id)
+    ids: np.ndarray      # (k,) int32 global ids, ascending (distance, id);
+    #                      rerank= requests order by (score desc, id asc)
     dists: np.ndarray    # (k,) int32 exact distances; BIG on pad
     tau: int             # final ladder rung of the dispatch (batch-shared)
     overflow: int
+    scores: Optional[np.ndarray] = None   # (k,) f32 exact re-rank scores
+    #                      (rerank= requests only); -1.0 on pad
 
 
 @dataclasses.dataclass(frozen=True)
@@ -212,21 +215,33 @@ class Scheduler:
                             {"q": q})
 
     def submit_topk(self, collection: str, q: np.ndarray, k: int,
-                    tau0: Optional[int] = None) -> Future:
+                    tau0: Optional[int] = None,
+                    rerank: Optional[str] = None,
+                    q_payload: Optional[np.ndarray] = None) -> Future:
         """One kNN query -> Future[TopKResponse].  Coalesces with other
-        queued ``(collection, k, τ0)`` lookups."""
+        queued ``(collection, k, τ0, metric)`` lookups — a two-stage
+        ``rerank=`` request never coalesces with a plain one (the batch
+        key carries the metric), and ``q_payload`` is the query's (Wp,)
+        uint32 set bitmap."""
         q = np.asarray(q, dtype=np.uint8)
+        payload = {"q": q}
+        if q_payload is not None:
+            payload["q_payload"] = np.asarray(q_payload,
+                                              np.uint32).reshape(-1)
         return self._submit(collection, "topk",
                             ("topk", int(k),
-                             None if tau0 is None else int(tau0)),
-                            {"q": q})
+                             None if tau0 is None else int(tau0), rerank),
+                            payload)
 
-    def submit_insert(self, collection: str,
-                      sketches: np.ndarray) -> Future:
-        """Insert -> Future[(k,) int64 global ids]."""
-        return self._submit(collection, "insert", ("insert",),
-                            {"sketches": np.asarray(sketches,
-                                                    dtype=np.uint8)})
+    def submit_insert(self, collection: str, sketches: np.ndarray,
+                      payloads: Optional[np.ndarray] = None) -> Future:
+        """Insert -> Future[(k,) int64 global ids].  ``payloads`` carries
+        the rows' (k, Wp) uint32 re-rank set bitmaps for collections
+        configured with ``payload_words``."""
+        payload = {"sketches": np.asarray(sketches, dtype=np.uint8),
+                   "payloads": (None if payloads is None
+                                else np.asarray(payloads, np.uint32))}
+        return self._submit(collection, "insert", ("insert",), payload)
 
     def submit_delete(self, collection: str, ids) -> Future:
         """Delete -> Future[int newly-removed count]."""
@@ -322,20 +337,31 @@ class Scheduler:
                     mask=np.asarray(res.mask[i]),
                     dist=np.asarray(res.dist[i]), overflow=overflow))
         else:
-            k, tau0 = key[1], key[2]
-            res: TopKResult = coll.index.topk_batch(qs, k, tau0=tau0)
+            k, tau0, metric = key[1], key[2], key[3]
+            if metric is not None:
+                pays = pad_to_bucket(np.stack(
+                    [r.payload["q_payload"] for r in batch]))
+                res: TopKResult = coll.index.topk_batch(
+                    qs, k, tau0=tau0, rerank=metric, q_payloads=pays)
+            else:
+                res = coll.index.topk_batch(qs, k, tau0=tau0)
             self.metrics.record_exec(op, time.perf_counter() - t0)
             ids, dists = np.asarray(res.ids), np.asarray(res.dists)
+            scores = (None if res.scores is None
+                      else np.asarray(res.scores))
             for i, req in enumerate(batch):
                 req.future.set_result(TopKResponse(
                     ids=ids[i], dists=dists[i], tau=int(res.tau),
-                    overflow=int(res.overflow)))
+                    overflow=int(res.overflow),
+                    scores=None if scores is None else scores[i]))
         self.metrics.record_batch(op, g, bucket_m(g))
 
     def _execute_write(self, coll: Collection, req: _Request) -> None:
         t0 = time.perf_counter()
         if req.op == "insert":
-            result = coll.index.insert(req.payload["sketches"])
+            result = coll.index.insert(
+                req.payload["sketches"],
+                payloads=req.payload.get("payloads"))
         else:
             result = coll.index.delete(req.payload["ids"])
             frac = coll.config.compact_dead_frac

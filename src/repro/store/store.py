@@ -51,8 +51,10 @@ from ..core.hamming import unpack_vertical
 from ..core.segments import Segment, ensure_serial_floor
 from .atomic import (atomic_write_bytes, atomic_write_dir, atomic_write_json,
                      read_json, sweep_stale_tmp)
-from .wal import (OP_DELETE, OP_INSERT, WriteAheadLog, decode_delete,
-                  decode_insert, encode_delete, encode_insert, read_wal)
+from .wal import (OP_DELETE, OP_INSERT, OP_INSERT_PAYLOAD, WriteAheadLog,
+                  decode_delete, decode_insert, decode_insert_payload,
+                  encode_delete, encode_insert, encode_insert_payload,
+                  read_wal)
 
 _SEG_RE = re.compile(r"^seg_(\d+)$")
 _MANIFEST_VERSION = 1
@@ -74,9 +76,10 @@ class StackBinding:
         self.stack_id = stack_id
         self.log_writes = log_writes
 
-    def log_insert(self, ids: np.ndarray, sk: np.ndarray) -> None:
+    def log_insert(self, ids: np.ndarray, sk: np.ndarray,
+                   payloads: Optional[np.ndarray] = None) -> None:
         if self.log_writes:
-            self.store.log_insert(ids, sk)
+            self.store.log_insert(ids, sk, payloads=payloads)
 
     def log_delete(self, ids: np.ndarray) -> None:
         if self.log_writes:
@@ -148,9 +151,14 @@ class CollectionStore:
 
     # -- write path ------------------------------------------------------
 
-    def log_insert(self, ids: np.ndarray, sk: np.ndarray) -> None:
+    def log_insert(self, ids: np.ndarray, sk: np.ndarray,
+                   payloads: Optional[np.ndarray] = None) -> None:
         if not self._replaying and len(ids):
-            self.wal.append(OP_INSERT, encode_insert(ids, sk))
+            if payloads is not None:
+                self.wal.append(OP_INSERT_PAYLOAD,
+                                encode_insert_payload(ids, sk, payloads))
+            else:
+                self.wal.append(OP_INSERT, encode_insert(ids, sk))
 
     def log_delete(self, ids: np.ndarray) -> None:
         if not self._replaying and len(ids):
@@ -243,8 +251,10 @@ class CollectionStore:
 
     def _write_segment(self, sdir: str, seg: Segment) -> None:
         def populate(tmp: str) -> None:
-            np.savez(os.path.join(tmp, "arrays.npz"),
-                     packed=seg.packed, ids=seg.ids)
+            arrays = {"packed": seg.packed, "ids": seg.ids}
+            if seg.payloads is not None:
+                arrays["payloads"] = seg.payloads
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
             np.save(os.path.join(tmp, "live.npy"), seg.live)
             with open(os.path.join(tmp, "meta.json"), "w",
                       encoding="utf-8") as f:
@@ -289,6 +299,9 @@ class CollectionStore:
             for seq, op, payload in records:
                 if op == OP_INSERT:
                     self._replay_insert(seq, *decode_insert(payload))
+                elif op == OP_INSERT_PAYLOAD:
+                    self._replay_insert(seq,
+                                        *decode_insert_payload(payload))
                 elif op == OP_DELETE:
                     index.delete(decode_delete(payload))
             self.counters["replayed_records"] += len(records)
@@ -315,11 +328,12 @@ class CollectionStore:
             d = os.path.join(sdir, f"seg_{ent['serial']:012d}")
             with np.load(os.path.join(d, "arrays.npz")) as arr:
                 packed, ids = arr["packed"], arr["ids"]
+                pay = arr["payloads"] if "payloads" in arr.files else None
             live = np.load(os.path.join(d, "live.npy"))
             sk = unpack_vertical(packed, st.b, st.L)
             segs.append(Segment(index=st._build(sk), packed=packed,
                                 ids=ids, live=live, L=st.L, b=st.b,
-                                serial=int(ent["serial"])))
+                                serial=int(ent["serial"]), payloads=pay))
         st.segments = segs
         st.n_ids = int(man["n_ids"])
         self._persisted[i] = {seg.serial: seg.n - seg.n_live
@@ -338,8 +352,8 @@ class CollectionStore:
         return max([int(man["serial_floor"])]
                    + [seg.serial + 1 for seg in segs])
 
-    def _replay_insert(self, seq: int, ids: np.ndarray,
-                       sk: np.ndarray) -> None:
+    def _replay_insert(self, seq: int, ids: np.ndarray, sk: np.ndarray,
+                       pay: Optional[np.ndarray] = None) -> None:
         if self._sharded:
             S = len(self._stacks)
             for s, st in enumerate(self._stacks):
@@ -347,10 +361,12 @@ class CollectionStore:
                     continue                    # already sealed pre-crash
                 rows = np.flatnonzero(ids % S == s)
                 if rows.size:
-                    st._replay_insert(ids[rows] // S, sk[rows])
+                    st._replay_insert(
+                        ids[rows] // S, sk[rows],
+                        payloads=pay[rows] if pay is not None else None)
             self.index.n_ids = max(self.index.n_ids, int(ids.max()) + 1)
         elif seq > self._meta[0]["sealed_seq"]:
-            self._stacks[0]._replay_insert(ids, sk)
+            self._stacks[0]._replay_insert(ids, sk, payloads=pay)
 
     # -- config / observability -----------------------------------------
 

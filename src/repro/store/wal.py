@@ -47,6 +47,7 @@ _REC_MAGIC = 0x57A17EC5
 
 OP_INSERT = 1
 OP_DELETE = 2
+OP_INSERT_PAYLOAD = 3      # insert carrying re-rank payload bitmaps
 
 
 def _crc(seq: int, op: int, payload: bytes) -> int:
@@ -67,6 +68,31 @@ def decode_insert(payload: bytes) -> Tuple[np.ndarray, np.ndarray]:
     ids = np.frombuffer(payload, np.int64, n, off)
     sk = np.frombuffer(payload, np.uint8, n * L, off + 8 * n).reshape(n, L)
     return ids.copy(), sk.copy()
+
+
+def encode_insert_payload(ids: np.ndarray, sk: np.ndarray,
+                          pay: np.ndarray) -> bytes:
+    """``insert`` payload with re-rank bitmaps: n u32 | L u16 | Wp u16 |
+    ids int64[n] | sketches u8[n,L] | bitmaps u32[n,Wp]."""
+    ids = np.ascontiguousarray(ids, np.int64)
+    sk = np.ascontiguousarray(sk, np.uint8)
+    pay = np.ascontiguousarray(pay, np.uint32)
+    n, L = sk.shape
+    Wp = pay.shape[1]
+    return (struct.pack("<IHH", n, L, Wp) + ids.tobytes() + sk.tobytes()
+            + pay.tobytes())
+
+
+def decode_insert_payload(
+        payload: bytes) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    n, L, Wp = struct.unpack_from("<IHH", payload)
+    off = 8
+    ids = np.frombuffer(payload, np.int64, n, off)
+    off += 8 * n
+    sk = np.frombuffer(payload, np.uint8, n * L, off).reshape(n, L)
+    off += n * L
+    pay = np.frombuffer(payload, np.uint32, n * Wp, off).reshape(n, Wp)
+    return ids.copy(), sk.copy(), pay.copy()
 
 
 def encode_delete(ids: np.ndarray) -> bytes:

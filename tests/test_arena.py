@@ -235,7 +235,7 @@ def test_dispatch_spy_one_launch_per_rung_at_16_segments():
     reset_dispatch_stats()
     idx.topk_batch(qs, 5, tau0=idx.L)
     spy = dispatch_stats()
-    assert spy == {"total": 1, "fused": 1, "fanout": 0}, spy
+    assert spy == {"total": 1, "fused": 1, "fanout": 0, "rerank": 0}, spy
     # multi-rung top-k: exactly one launch per rung
     reset_dispatch_stats()
     res = idx.topk_batch(qs, 5, tau0=0)

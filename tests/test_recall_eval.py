@@ -1,0 +1,81 @@
+"""Recall eval harness (DESIGN.md §10): what the two stages actually buy.
+
+On the seeded ground-truth corpus the two-stage path must dominate:
+reranked recall@10 >= sketch-only recall@10 for every b in {1, 2, 4}
+(the exact re-rank restores every ground-truth row the trie sweep kept
+alive), reranked recall clears a fixed floor, and the b-sweep shows the
+Li & König trade-off (more bits never hurt sketch-only recall on
+aggregate)."""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+
+import eval_recall  # noqa: E402
+
+# one tiny sweep shared by every assertion in this module
+_REPORT = None
+
+
+def report():
+    global _REPORT
+    if _REPORT is None:
+        _REPORT = eval_recall.evaluate(n_docs=600, n_queries=20, L=32,
+                                       delta_cap=256, k=10)
+    return _REPORT
+
+
+def test_reranked_recall_dominates_sketch_only_and_floor():
+    rows = report()["rows"]
+    assert [r["b"] for r in rows] == [1, 2, 4]
+    for row in rows:
+        assert row["reranked"] >= row["sketch"], row
+        assert row["reranked"] >= eval_recall.RECALL_FLOOR, row
+
+
+def test_ground_truth_is_exact_jaccard_order():
+    """The harness's own oracle: top-k rows really are the exact-Jaccard
+    maximizers, ties by id."""
+    rng = np.random.default_rng(0)
+    docs = eval_recall.build_corpus(rng, 50, 64)
+    qs = [eval_recall.perturb(rng, docs[3], 64)]
+    from repro.core.hamming import pack_sets
+    dp, qp = pack_sets(docs, 64), pack_sets(qs, 64)
+    top = eval_recall.exact_jaccard_topk(qp, dp, 5)[0]
+    jac = []
+    for d in docs:
+        a, b = set(map(int, qs[0])), set(map(int, d))
+        jac.append(len(a & b) / len(a | b))
+    want = sorted(range(50), key=lambda i: (-jac[i], i))[:5]
+    assert list(map(int, top)) == want
+
+
+def test_minhash_sketch_collision_rate_tracks_jaccard():
+    """b-bit minhash sanity: a near-duplicate pair collides on more
+    sketch positions than an unrelated pair (in expectation; seeded)."""
+    rng = np.random.default_rng(1)
+    base = eval_recall.build_corpus(rng, 1, 128, set_min=20, set_max=30)[0]
+    near = eval_recall.perturb(rng, base, 128, frac=0.1)
+    far = eval_recall.build_corpus(rng, 1, 128, set_min=20, set_max=30)[0]
+    sk = eval_recall.minhash_sketch([base, near, far], 64, 2, 128)
+    agree_near = int((sk[0] == sk[1]).sum())
+    agree_far = int((sk[0] == sk[2]).sum())
+    assert agree_near > agree_far
+
+
+def test_recall_at_k_counts_pads_as_misses():
+    truth = np.array([[1, 2, 3, 4]])
+    assert eval_recall.recall_at_k(np.array([[1, 2, -1, -1]]), truth) \
+        == 0.5
+
+
+def test_cli_smoke_check_passes(tmp_path, capsys):
+    out = tmp_path / "recall.json"
+    rc = eval_recall.main(["--smoke", "--check", "--out", str(out)])
+    assert rc == 0
+    assert out.exists()
+    text = capsys.readouterr().out
+    assert "recall gate passed" in text

@@ -369,6 +369,117 @@ def test_metrics_and_dispatch_counters_survive_threaded_hammering():
     assert m.batch_fill_ratio() == pytest.approx(0.5)
 
 
+# ---------------------------------------------------------------------------
+# two-stage re-rank requests (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+RVOCAB = 64
+RWP = (RVOCAB + 31) // 32
+
+
+def _rerank_fixture(seed, n_docs=30):
+    from repro.core.hamming import pack_sets
+    rng = np.random.default_rng(seed)
+    sk = rng.integers(0, 1 << B, size=(n_docs, L), dtype=np.uint8)
+    sets = [rng.choice(RVOCAB, size=int(rng.integers(2, 12)), replace=False)
+            for _ in range(n_docs)]
+    return rng, sk, pack_sets(sets, RVOCAB)
+
+
+def make_rerank_sched(**kw):
+    sched = make_sched(**kw)
+    sched.create_collection(
+        "r", CollectionConfig(L=L, b=B, delta_cap=16, payload_words=RWP))
+    return sched
+
+
+def test_mixed_rerank_and_plain_stream_bit_identical_to_sequential():
+    """Interleaved ``rerank=``/plain topk traffic (plus writes) through
+    the scheduler is bit-identical — ids, dists, AND exact scores — to
+    executing each request alone, in order; plain responses carry no
+    scores."""
+    rng, sk, pays = _rerank_fixture(19)
+    idx = SegmentedIndex(L, B, delta_cap=16, payload_words=RWP)
+    sched = make_rerank_sched()
+    # build the mixed stream: (op, args...) executed both ways
+    stream = [("insert", sk[:20], pays[:20])]
+    for i in range(12):
+        if i % 4 == 3:
+            stream.append(("insert", sk[20 + i // 4:21 + i // 4],
+                           pays[20 + i // 4:21 + i // 4]))
+        elif i % 3 == 0:
+            stream.append(("topk", sk[i]))
+        else:
+            metric = "jaccard" if i % 2 else "cosine"
+            stream.append(("rerank", sk[i], pays[i], metric))
+    stream.append(("delete", np.arange(3, dtype=np.int64)))
+    stream.append(("rerank", sk[5], pays[5], "containment"))
+    want = []
+    for op, *a in stream:
+        if op == "insert":
+            want.append(idx.insert(a[0], payloads=a[1]))
+        elif op == "delete":
+            want.append(idx.delete(a[0]))
+        elif op == "topk":
+            want.append(idx.topk(a[0], K))
+        else:
+            want.append(idx.topk(a[0], K, rerank=a[2], q_payloads=a[1]))
+    futs = []
+    for op, *a in stream:
+        if op == "insert":
+            futs.append(sched.submit_insert("r", a[0], payloads=a[1]))
+        elif op == "delete":
+            futs.append(sched.submit_delete("r", a[0]))
+        elif op == "topk":
+            futs.append(sched.submit_topk("r", a[0], K))
+        else:
+            futs.append(sched.submit_topk("r", a[0], K, rerank=a[2],
+                                          q_payload=a[1]))
+    sched.pump()
+    for (op, *a), fut, ref in zip(stream, futs, want):
+        got = fut.result(timeout=300)
+        if op == "insert":
+            np.testing.assert_array_equal(got, ref)
+        elif op == "delete":
+            assert got == ref
+        else:
+            np.testing.assert_array_equal(got.ids, np.asarray(ref.ids))
+            np.testing.assert_array_equal(got.dists, np.asarray(ref.dists))
+            if op == "topk":
+                assert got.scores is None
+            else:
+                np.testing.assert_array_equal(got.scores,
+                                              np.asarray(ref.scores))
+
+
+def test_rerank_coalesces_only_within_same_metric_key():
+    """The batch key is (op, k, τ0, metric): plain and per-metric
+    re-rank requests at the same k split into separate dispatches, and
+    same-key requests still coalesce (fill ratio counts all three)."""
+    rng, sk, pays = _rerank_fixture(29)
+    sched = make_rerank_sched()
+    sched.submit_insert("r", sk, pays)
+    sched.pump()
+    futs = [sched.submit_topk("r", sk[i], K) for i in range(3)]
+    futs += [sched.submit_topk("r", sk[i], K, rerank="jaccard",
+                               q_payload=pays[i]) for i in range(2)]
+    futs += [sched.submit_topk("r", sk[i], K, rerank="cosine",
+                               q_payload=pays[i]) for i in range(2)]
+    sched.pump()
+    snap = sched.stats()
+    # one batch per key: plain, jaccard, cosine — never merged
+    assert snap["counters"]["batches_total:topk"] == 3
+    # 3->4, 2->2, 2->2: the coalescing still packs within each key
+    assert snap["batch_fill_ratio"] == pytest.approx(7 / 8)
+    for i, f in enumerate(futs[:3]):
+        assert int(f.result().ids[0]) == i and f.result().scores is None
+    for i, f in enumerate(futs[3:5]):
+        assert int(f.result().ids[0]) == i
+        assert float(f.result().scores[0]) == 1.0
+    for f in futs[5:]:
+        assert f.result().scores is not None
+
+
 def test_concurrent_submitters_all_complete():
     """Multiple producer threads against the threaded scheduler: every
     future completes with a sane result (ordering across producers is
