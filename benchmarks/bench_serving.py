@@ -14,6 +14,11 @@ Rows:
   * ``serving/<ds>/topk_p50``   — end-to-end (queue + exec) ms
   * ``serving/<ds>/topk_p99``
   * ``serving/<ds>/search_p99``
+  * ``serving/<ds>/topk_queue_p99`` / ``topk_exec_p99`` — the p99
+                                  request *decomposed* from its span
+                                  tree (DESIGN.md §11): time queued vs
+                                  time in the batch's device dispatch —
+                                  where the e2e p99 actually goes
   * ``serving/<ds>/fill``       — batch-fill ratio (coalesced queries /
                                   dispatched bucket rows)
   * ``serving/<ds>/sweep_seg{1,4,16}_p99`` — fixed-corpus segment-count
@@ -36,6 +41,7 @@ import time
 
 import numpy as np
 
+from repro.obs import Tracer
 from repro.serving import (CollectionConfig, OverloadError, Scheduler,
                            SchedulerConfig)
 
@@ -97,9 +103,10 @@ def run(csv: Csv, datasets=("review",), clients: int = 8,
     for name in datasets:
         cfg, db, _ = make_dataset(name, n=cap_n(1 << 14))
         n = len(db)
+        tracer = Tracer(capacity=8192)      # span every request of the run
         sched = Scheduler(config=SchedulerConfig(
             max_batch=max(8, clients), max_queue=4 * clients + 64,
-            max_wait_ms=1.0))
+            max_wait_ms=1.0), tracer=tracer)
         sched.create_collection("bench", CollectionConfig(
             L=cfg.L, b=cfg.b, delta_cap=max(256, n // 4)))
         preload = sched.submit_insert("bench", db)
@@ -146,6 +153,27 @@ def run(csv: Csv, datasets=("review",), clients: int = 8,
         csv.add(f"serving/{name}/fill", 0.0,
                 f"fill={fill:.3f};cache_traces="
                 f"{snap['searcher_cache']['traces']}")
+
+        # span-derived decomposition: where the topk p99 goes — queue
+        # wait vs device execution (from each request's span tree, not
+        # the aggregate windows)
+        queue_s, exec_s = [], []
+        for root in tracer.roots():
+            if root.args.get("op") != "topk":
+                continue
+            wait = root.find("queue_wait")
+            execute = root.find("execute")
+            if wait is not None:
+                queue_s.append(wait.dur)
+            if execute is not None:
+                exec_s.append(execute.dur)
+        if queue_s and exec_s:
+            qp99 = float(np.percentile(np.asarray(queue_s), 99)) * 1e3
+            ep99 = float(np.percentile(np.asarray(exec_s), 99)) * 1e3
+            csv.add(f"serving/{name}/topk_queue_p99", qp99 * 1e3,
+                    f"p99_ms={qp99:.2f};spans={len(queue_s)}")
+            csv.add(f"serving/{name}/topk_exec_p99", ep99 * 1e3,
+                    f"p99_ms={ep99:.2f};spans={len(exec_s)}")
         if not common.SMOKE:
             # relational sanity: the runtime must actually coalesce —
             # with 8 closed-loop clients the mean read batch must beat 1

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .hamming import n_words, pack_suffix_words, pack_vertical
+from ..obs.trace import span as _obs_span
 
 WORD_BYTES = 4
 TIER_HOT = "hot"
@@ -338,7 +339,9 @@ class ColumnStore:
             axis = 0 if g.geom.packed else -1
             cols = np.concatenate(
                 [self.blocks[i].cols_cold for i in g.cold_blocks], axis=axis)
-            slabs.append(jax.device_put(cols))
+            with _obs_span("tier_stage", cat="device",
+                           blocks=len(g.cold_blocks), bytes=int(cols.nbytes)):
+                slabs.append(jax.device_put(cols))
             _TIER_STATS["prefetches"] += len(g.cold_blocks)
             _TIER_STATS["staged_bytes"] += int(cols.nbytes)
         return tuple(slabs)
@@ -357,7 +360,9 @@ class ColumnStore:
                 continue
             pays = np.concatenate(
                 [self.blocks[i].pays_cold for i in g.cold_blocks], axis=-1)
-            slabs.append(jax.device_put(pays))
+            with _obs_span("tier_stage_payloads", cat="device",
+                           blocks=len(g.cold_blocks), bytes=int(pays.nbytes)):
+                slabs.append(jax.device_put(pays))
             _TIER_STATS["staged_bytes"] += int(pays.nbytes)
             _TIER_STATS["staged_payload_bytes"] += int(pays.nbytes)
         return tuple(slabs)

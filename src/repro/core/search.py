@@ -38,7 +38,7 @@ ladder and repeated serving calls never re-jit the common case.
 from __future__ import annotations
 
 import functools
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -198,7 +198,8 @@ def _search_trace(index: SketchIndex, q: jnp.ndarray, *, tau: int,
 
 
 def _traverse_frontier_batch(index: SketchIndex, qs: jnp.ndarray, *,
-                             tau: int, caps: Tuple[int, ...]):
+                             tau: int, caps: Tuple[int, ...],
+                             level_widths: Optional[list] = None):
     """The shared 2D-frontier descent (levels 1..depth) of the natively
     batched searcher: ``qs`` is (m, L) int32 and the level-ℓ frontier a
     (m, cap_ℓ) array compacted per query — one ``children()`` gather per
@@ -206,7 +207,13 @@ def _traverse_frontier_batch(index: SketchIndex, qs: jnp.ndarray, *,
     ``(ids, dists, valid)`` (each (m, cap_depth)) plus per-query
     ``overflow``/``traversed`` (m,) int32.  Reused by the fused
     segment-arena program (DESIGN.md §6), which stops here and scatters
-    every segment's frontier onto one concatenated root plane."""
+    every segment's frontier onto one concatenated root plane.
+
+    ``level_widths``: optional list the per-level live frontier widths
+    ((m,) int32 each) are appended to during tracing — the explain
+    path's frontier-width sampler (DESIGN.md §11) stacks them into its
+    per-trie-level report; default callers trace the identical graph
+    (the sum already feeds ``traversed``)."""
     m = qs.shape[0]
     ids = jnp.zeros((m, 1), jnp.int32)
     dists = jnp.zeros((m, 1), jnp.int32)
@@ -230,7 +237,10 @@ def _traverse_frontier_batch(index: SketchIndex, qs: jnp.ndarray, *,
             c_ids.reshape(m, -1), c_dists.reshape(m, -1),
             c_valid.reshape(m, -1), caps[lev])
         overflow = overflow + ov
-        traversed = traversed + valid.sum(axis=1, dtype=jnp.int32)
+        width = valid.sum(axis=1, dtype=jnp.int32)
+        if level_widths is not None:
+            level_widths.append(width)
+        traversed = traversed + width
     return ids, dists, valid, overflow, traversed
 
 

@@ -55,6 +55,7 @@ import dataclasses
 import functools
 import itertools
 import threading
+import time
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -65,7 +66,7 @@ from ..kernels import ops
 from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
 from ..kernels.ref import RERANK_METRICS
 from .bst import BIG, build_bst
-from .column_store import ColumnStore
+from .column_store import ColumnStore, tier_stats
 from .cost_model import frontier_capacities, tau_for_k
 from .distributed_search import (build_sharded_bst, make_sharded_searcher,
                                  sharded_column_dists, topk_from_dists)
@@ -76,8 +77,10 @@ from .multi_index import (build_multi_index, mi_column_dists, mi_search_batch,
 from .search import (CAP_MAX_DEFAULT, LADDER_CAP_MAX, TopKResult,
                      _CACHE_STATS, _note_trace, _pad_rows, _pad_topk,
                      _pin_cache_get, _traverse_frontier_batch, bucket_m,
-                     get_searcher, scatter_root_plane, select_topk_columns,
-                     select_topk_scores)
+                     get_searcher, scatter_root_plane, searcher_cache_info,
+                     select_topk_columns, select_topk_scores)
+from ..obs.explain import QueryExplain, RungExplain
+from ..obs.trace import span as _obs_span
 
 BIG_I = int(BIG)
 
@@ -340,7 +343,8 @@ def _ladder_topk(columns_fn, n_live: int, b: int, L: int, qs: np.ndarray,
         if int((dist < BIG_I).sum(axis=1).min()) >= kk or tau >= L:
             break
         tau = min(L, max(tau + 1, 2 * tau))
-    ids, dists = topk_from_dists(dist, int(k), ids=col_ids)
+    with _obs_span("topk_readback", cat="device", k=int(k)):
+        ids, dists = topk_from_dists(dist, int(k), ids=col_ids)
     return TopKResult(ids=jnp.asarray(ids), dists=jnp.asarray(dists),
                       tau=tau, overflow=overflow)
 
@@ -437,16 +441,84 @@ def _ladder_topk_rerank(columns_fn, payload_rows_fn, n_live: int, b: int,
         tau = min(L, max(tau + 1, 2 * tau))
     pay_vert = jnp.asarray(np.ascontiguousarray(payload_rows_fn().T))
     _dispatch("rerank")
-    ids, dists, scores = _rerank_select(
-        jnp.asarray(dist), pay_vert,
-        jnp.asarray(np.ascontiguousarray(q_pay.T)),
-        jnp.asarray(col_ids.astype(np.int32)),
-        metric=metric, kk=kk, block_m=block_m)
-    ids, dists, scores = _pad_topk_scores(
-        np.asarray(ids), np.asarray(dists), np.asarray(scores), int(k))
+    with _obs_span("rerank", cat="device", metric=metric, kk=kk):
+        ids, dists, scores = _rerank_select(
+            jnp.asarray(dist), pay_vert,
+            jnp.asarray(np.ascontiguousarray(q_pay.T)),
+            jnp.asarray(col_ids.astype(np.int32)),
+            metric=metric, kk=kk, block_m=block_m)
+        ids, dists, scores = (np.asarray(ids), np.asarray(dists),
+                              np.asarray(scores))
+    ids, dists, scores = _pad_topk_scores(ids, dists, scores, int(k))
     return TopKResult(ids=jnp.asarray(ids), dists=jnp.asarray(dists),
                       tau=tau, overflow=int(overflow),
                       scores=jnp.asarray(scores))
+
+
+class _ExplainRecorder:
+    """Explain-mode bookkeeping (DESIGN.md §11): wraps a ``columns_fn``
+    so every τ-ladder rung it serves is recorded as a ``RungExplain``
+    (survivor/pruned counts off the rung's own distance plane, device-
+    launch deltas, wall-clock), and snapshots the process-level cache /
+    dispatch / tier counters at construction so ``finish`` can report
+    the request's deltas.  The wrapped fn returns the *identical*
+    planes — explain-on results are bit-identical to explain-off by
+    construction (held by ``tests/test_obs.py``).
+
+    Per-rung counter deltas read the process-global ledgers, so explain
+    is a single-request diagnostic: concurrent queries on other threads
+    would bleed into the deltas (the counts derived from the distance
+    planes themselves are always exact)."""
+
+    def __init__(self, frontier_index=None):
+        self.t0 = time.perf_counter()
+        self.cache0 = searcher_cache_info()
+        self.disp0 = dispatch_stats()
+        self.tier0 = tier_stats()
+        self.rungs: List[RungExplain] = []
+        self._frontier_index = frontier_index
+
+    def wrap(self, columns_fn):
+        def fn(qs, tau):
+            t0 = time.perf_counter()
+            d0 = dispatch_stats()
+            dist, col_ids, overflow = columns_fn(qs, tau)
+            d1 = dispatch_stats()
+            dt = (time.perf_counter() - t0) * 1e3
+            dist_np = np.asarray(dist)
+            surv = (dist_np < BIG_I).sum(axis=1)
+            frontier = None
+            if self._frontier_index is not None:
+                frontier = self._frontier_index._frontier_widths(qs, tau)
+            self.rungs.append(RungExplain(
+                tau=int(tau), candidates=int(dist_np.shape[1]),
+                survivors=[int(s) for s in surv],
+                pruned=[int(dist_np.shape[1] - s) for s in surv],
+                overflow=int(overflow),
+                dispatches={k: d1[k] - d0[k] for k in d1},
+                duration_ms=dt, frontier=frontier))
+            return dist_np, col_ids, overflow
+        return fn
+
+    def finish(self, *, op: str, backend: str, n_queries: int,
+               n_live: int, k: Optional[int], tau0: Optional[int],
+               tau_final: int, rerank: Optional[str]) -> QueryExplain:
+        cache1 = searcher_cache_info()
+        disp1 = dispatch_stats()
+        tier1 = tier_stats()
+        rerank_surv = None
+        if rerank is not None and self.rungs:
+            rerank_surv = list(self.rungs[-1].survivors)
+        return QueryExplain(
+            op=op, backend=backend, n_queries=int(n_queries),
+            n_live=int(n_live), k=k, tau0=tau0, tau_final=int(tau_final),
+            rungs=self.rungs, rerank=rerank,
+            rerank_survivors=rerank_surv,
+            cache={key: cache1[key] - self.cache0[key]
+                   for key in ("hits", "misses", "traces")},
+            dispatch={key: disp1[key] - self.disp0[key] for key in disp1},
+            tier={key: tier1[key] - self.tier0[key] for key in tier1},
+            duration_ms=(time.perf_counter() - self.t0) * 1e3)
 
 
 class SegmentedIndex:
@@ -781,8 +853,8 @@ class SegmentedIndex:
 
     # -- queries ---------------------------------------------------------
 
-    def search_columns_batch(self, qs: np.ndarray,
-                             tau: int) -> ColumnSearchResult:
+    def search_columns_batch(self, qs: np.ndarray, tau: int,
+                             explain: bool = False) -> ColumnSearchResult:
         """Range search, column-compressed — the **primary** result
         contract (DESIGN.md §6): ``qs`` (m, L) uint8 ->
         ``ColumnSearchResult`` with (m, R) mask/dist planes over the
@@ -790,10 +862,23 @@ class SegmentedIndex:
         where R = rows currently held (reclaimed by merge/compact) —
         long-lived collections never pay O(ids-ever-assigned) per query;
         the dense global-id plane is the opt-in ``search_batch``.  One
-        device dispatch end to end on the arena path."""
+        device dispatch end to end on the arena path.
+
+        ``explain=True`` returns ``(ColumnSearchResult, QueryExplain)``
+        — identical planes plus the per-rung pruning record
+        (DESIGN.md §11)."""
         qs = np.asarray(qs, dtype=np.uint8)
         if qs.ndim == 1:
             qs = qs[None, :]
+        if explain:
+            rec = self._explain_recorder()
+            dist, col_ids, overflow = rec.wrap(self._columns)(qs, int(tau))
+            res = ColumnSearchResult(mask=dist <= tau, dist=dist,
+                                     ids=col_ids, overflow=overflow)
+            return res, rec.finish(
+                op="search", backend=self.backend,
+                n_queries=qs.shape[0], n_live=self.n_live, k=None,
+                tau0=int(tau), tau_final=int(tau), rerank=None)
         dist, col_ids, overflow = self._columns(qs, int(tau))
         return ColumnSearchResult(mask=dist <= tau, dist=dist, ids=col_ids,
                                   overflow=overflow)
@@ -804,30 +889,49 @@ class SegmentedIndex:
         return ColumnSearchResult(mask=res.mask[0], dist=res.dist[0],
                                   ids=res.ids, overflow=res.overflow)
 
-    def search_batch(self, qs: np.ndarray, tau: int) -> SegmentedSearchResult:
+    def search_batch(self, qs: np.ndarray, tau: int,
+                     explain: bool = False) -> SegmentedSearchResult:
         """Range search on the **opt-in dense** contract: ``qs``: (m, L)
         uint8 queries -> (m, n_ids) global mask and exact-distance
         planes (BIG off-mask / on dead ids).  The scatter materializes
         the full ever-assigned id axis — O(m · n_ids) host memory; use
         ``search_columns_batch`` (the primary contract) when the corpus
-        is long-lived and churny."""
+        is long-lived and churny.
+
+        ``explain=True`` returns ``(SegmentedSearchResult,
+        QueryExplain)`` — identical planes plus the pruning record."""
         qs = np.asarray(qs, dtype=np.uint8)
         if qs.ndim == 1:
             qs = qs[None, :]
+        if explain:
+            rec = self._explain_recorder()
+            plane, overflow = self._search_planes(
+                qs, int(tau), columns_fn=rec.wrap(self._columns))
+            res = SegmentedSearchResult(mask=plane <= tau, dist=plane,
+                                        overflow=overflow)
+            return res, rec.finish(
+                op="search", backend=self.backend,
+                n_queries=qs.shape[0], n_live=self.n_live, k=None,
+                tau0=int(tau), tau_final=int(tau), rerank=None)
         plane, overflow = self._search_planes(qs, int(tau))
         return SegmentedSearchResult(mask=plane <= tau, dist=plane,
                                      overflow=overflow)
 
-    def search(self, q: np.ndarray, tau: int) -> SegmentedSearchResult:
-        """Single-query ``search_batch`` (m=1 planes squeezed)."""
-        res = self.search_batch(np.asarray(q)[None], tau)
-        return SegmentedSearchResult(mask=res.mask[0], dist=res.dist[0],
-                                     overflow=res.overflow)
+    def search(self, q: np.ndarray, tau: int,
+               explain: bool = False) -> SegmentedSearchResult:
+        """Single-query ``search_batch`` (m=1 planes squeezed);
+        ``explain=True`` appends the ``QueryExplain`` record."""
+        out = self.search_batch(np.asarray(q)[None], tau, explain=explain)
+        res, ex = out if explain else (out, None)
+        res = SegmentedSearchResult(mask=res.mask[0], dist=res.dist[0],
+                                    overflow=res.overflow)
+        return (res, ex) if explain else res
 
     def topk_batch(self, qs: np.ndarray, k: int,
                    tau0: Optional[int] = None, *,
                    rerank: Optional[str] = None,
-                   q_payloads: Optional[np.ndarray] = None) -> TopKResult:
+                   q_payloads: Optional[np.ndarray] = None,
+                   explain: bool = False) -> TopKResult:
         """Exact k-nearest-neighbors over the live ids: the fused
         one-dispatch arena program on a shared τ-escalation ladder —
         traversal, delta scan, verify, and (distance, id) selection all
@@ -849,10 +953,19 @@ class SegmentedIndex:
         ``q_payloads`` ((m, Wp) uint32), and selects the k *largest*
         (score, -id) — ``TopKResult.scores`` carries the exact scores,
         ids/dists re-order to score order, pads are (-1, BIG, -1.0).
-        Requires ``payload_words``."""
+        Requires ``payload_words``.
+
+        ``explain=True`` returns ``(TopKResult, QueryExplain)`` — a
+        bit-identical result plus the per-rung pruning record
+        (DESIGN.md §11); explain serves through the shared ladder over
+        the same column planes, so the extra cost is the record itself
+        (plus the bst frontier-width sampling launch)."""
         qs = np.asarray(qs, dtype=np.uint8)
         if qs.ndim == 1:
             qs = qs[None, :]
+        if explain:
+            return self._explain_topk(qs, int(k), tau0, rerank,
+                                      q_payloads)
         if rerank is not None:
             q_pay = self._check_rerank(rerank, q_payloads, qs.shape[0])
             if self.use_arena:
@@ -869,19 +982,24 @@ class SegmentedIndex:
     def topk(self, q: np.ndarray, k: int,
              tau0: Optional[int] = None, *,
              rerank: Optional[str] = None,
-             q_payloads: Optional[np.ndarray] = None) -> TopKResult:
-        """Single-query ``topk_batch`` (row 0)."""
+             q_payloads: Optional[np.ndarray] = None,
+             explain: bool = False) -> TopKResult:
+        """Single-query ``topk_batch`` (row 0); ``explain=True`` appends
+        the ``QueryExplain`` record."""
         qp = None
         if q_payloads is not None:
             qp = np.asarray(q_payloads, np.uint32)
             if qp.ndim == 1:
                 qp = qp[None, :]
-        res = self.topk_batch(np.asarray(q)[None], k, tau0=tau0,
-                              rerank=rerank, q_payloads=qp)
-        return TopKResult(ids=res.ids[0], dists=res.dists[0], tau=res.tau,
-                          overflow=res.overflow,
-                          scores=(None if res.scores is None
-                                  else res.scores[0]))
+        out = self.topk_batch(np.asarray(q)[None], k, tau0=tau0,
+                              rerank=rerank, q_payloads=qp,
+                              explain=explain)
+        res, ex = out if explain else (out, None)
+        res = TopKResult(ids=res.ids[0], dists=res.dists[0], tau=res.tau,
+                         overflow=res.overflow,
+                         scores=(None if res.scores is None
+                                 else res.scores[0]))
+        return (res, ex) if explain else res
 
     # -- accounting ------------------------------------------------------
 
@@ -1075,7 +1193,9 @@ class SegmentedIndex:
         qs_j = jnp.asarray(qs)
         for seg in self.segments:
             if seg.live.any():
-                dist, ov = self._search_segment(seg, qs_j, tau)
+                with _obs_span("segment_fanout", cat="device",
+                               serial=seg.serial, tau=tau):
+                    dist, ov = self._search_segment(seg, qs_j, tau)
                 overflow += ov
             else:
                 dist = np.full((m, seg.n), BIG_I, np.int32)
@@ -1086,8 +1206,9 @@ class SegmentedIndex:
             planes = pack_vertical(qs, self.b)                # (m, b, W)
             q_vert = jnp.asarray(np.transpose(planes, (1, 2, 0)).copy())
             _dispatch("fanout")
-            d = np.asarray(ops.hamming_distances(self._delta_planes(),
-                                                 q_vert))[:, :nd]
+            with _obs_span("delta_scan", cat="device", rows=nd):
+                d = np.asarray(ops.hamming_distances(self._delta_planes(),
+                                                     q_vert))[:, :nd]
             d = np.where(self._delta_live[None, :] & (d <= tau), d, BIG_I)
             dists.append(d.astype(np.int32))
             col_ids.append(self._delta_ids)
@@ -1097,14 +1218,18 @@ class SegmentedIndex:
         return (np.concatenate(dists, axis=1),
                 np.concatenate(col_ids), overflow)
 
-    def _search_planes(self, qs: np.ndarray,
-                       tau: int) -> Tuple[np.ndarray, int]:
+    def _search_planes(self, qs: np.ndarray, tau: int,
+                       columns_fn=None) -> Tuple[np.ndarray, int]:
         """(m, L) queries -> ((m, n_ids) int32 global distance plane with
         BIG on non-results, total overflow): the column-compressed
         fan-out scattered onto the full global-id axis (the opt-in dense
-        range-search contract — O(m · ids-ever-assigned) memory)."""
+        range-search contract — O(m · ids-ever-assigned) memory).
+        ``columns_fn`` overrides the column source (the explain path
+        passes its recording wrapper)."""
         m = qs.shape[0]
-        dist, col_ids, overflow = self._columns(qs, tau)
+        if columns_fn is None:
+            columns_fn = self._columns
+        dist, col_ids, overflow = columns_fn(qs, tau)
         plane = np.full((m, self.n_ids), BIG_I, np.int32)
         plane[:, col_ids] = dist
         return plane, overflow
@@ -1116,6 +1241,100 @@ class SegmentedIndex:
         if self.use_arena:
             return self._fused_columns(qs, tau)
         return self._search_columns(qs, tau)
+
+    # -- query explain (DESIGN.md §11) -----------------------------------
+
+    def _explain_recorder(self) -> _ExplainRecorder:
+        """Frontier widths are sampled on the bst backend only (the
+        multi/sharded traversals have no single per-level frontier)."""
+        frontier_index = self if self.backend == "bst" else None
+        return _ExplainRecorder(frontier_index=frontier_index)
+
+    def _explain_topk(self, qs: np.ndarray, k: int, tau0: Optional[int],
+                      rerank: Optional[str], q_payloads):
+        """The explain-mode kNN: run the *shared* τ ladder over this
+        index's column planes with a recording wrapper.  The ladder
+        schedule, the column planes, and the (distance, id) / (score,
+        -id) selections are the ones every serving path is already
+        bit-identical to (``_ladder_topk`` vs ``_fused_topk``,
+        ``_ladder_topk_rerank`` vs ``_fused_topk_rerank`` — held by the
+        fused-vs-reference tests), so the result is bit-identical to
+        ``explain=False``."""
+        rec = self._explain_recorder()
+        columns_fn = rec.wrap(self._columns)
+        if rerank is not None:
+            q_pay = self._check_rerank(rerank, q_payloads, qs.shape[0])
+            res = _ladder_topk_rerank(
+                columns_fn, self._payload_rows, self.n_live, self.b,
+                self.L, self.block_m, qs, k, tau0, rerank, q_pay)
+        else:
+            if q_payloads is not None:
+                raise ValueError("q_payloads supplied without rerank=")
+            res = _ladder_topk(columns_fn, self.n_live, self.b, self.L,
+                               qs, k, tau0)
+        return res, rec.finish(
+            op="topk", backend=self.backend, n_queries=qs.shape[0],
+            n_live=self.n_live, k=int(k),
+            tau0=None if tau0 is None else int(tau0),
+            tau_final=int(res.tau), rerank=rerank)
+
+    def _frontier_widths(self, qs: np.ndarray,
+                         tau: int) -> Optional[List[List[int]]]:
+        """Per-query, per-trie-level live frontier widths at this τ,
+        summed across the segment stack ((m, L) — levels past a
+        segment's collapse depth ℓ_s contribute nothing).  Explain-only:
+        one extra cached program launch, deliberately outside the
+        serving dispatch ledger."""
+        if self.backend != "bst" or not self.segments:
+            return None
+        m = qs.shape[0]
+        mb = bucket_m(m)
+        qs_p = jnp.asarray(qs)
+        if mb != m:
+            qs_p = _pad_rows(qs_p, mb)
+        widths = np.asarray(self._widths_fn(int(tau))(qs_p))[:m]
+        return [[int(w) for w in row] for row in widths]
+
+    def _widths_fn(self, tau: int):
+        """Cache the frontier-width sampling program alongside the fused
+        programs (same ``_fused_id`` scope, so the stale-generation
+        purge in ``_fused_fn`` also drops it)."""
+        serials = self._seg_serials()
+        key = (self.backend, self.layout, self._fused_id, serials,
+               "widths", tau, self.block_m)
+        fn = _FUSED_CACHE.get(key)
+        if fn is None:
+            fn = self._build_widths(tau)
+            while len(_FUSED_CACHE) >= _FUSED_CACHE_CAP:
+                _FUSED_CACHE.pop(next(iter(_FUSED_CACHE)))
+            _FUSED_CACHE[key] = fn
+        return fn
+
+    def _build_widths(self, tau: int):
+        """One jitted program: every segment's frontier descent with the
+        per-level width taps, summed into an (m, L) plane (same
+        traversal arithmetic as the fused programs' first half)."""
+        indexes = [seg.index for seg in self.segments]
+        caps_list = [frontier_capacities(ix.t, self.b, tau,
+                                         CAP_MAX_DEFAULT)
+                     for ix in indexes]
+        L = self.L
+
+        @jax.jit
+        def run(qs):
+            _note_trace()
+            qsi = qs.astype(jnp.int32)
+            m = qsi.shape[0]
+            per_level = jnp.zeros((m, L), jnp.int32)
+            for ix, caps in zip(indexes, caps_list):
+                widths: List[jnp.ndarray] = []
+                _traverse_frontier_batch(ix, qsi, tau=tau, caps=caps,
+                                         level_widths=widths)
+                if widths:
+                    w = jnp.stack(widths, axis=-1)        # (m, depth_s)
+                    per_level = per_level.at[:, :w.shape[-1]].add(w)
+            return per_level
+        return run
 
     def _search_segment(self, seg: Segment, qs_j: jnp.ndarray,
                         tau: int) -> Tuple[np.ndarray, int]:
@@ -1569,15 +1788,22 @@ class SegmentedIndex:
             seg_arg = tuple(jnp.asarray(seg.live) for seg in self.segments)
         rung = 0
         while True:
-            fn = self._fused_fn(kind, tau, rung, kk)
-            _dispatch("fused")
-            if staged is not None:
-                out = fn(jnp.asarray(qs_p), seg_arg, staged, delta_vert,
-                         jnp.asarray(delta_live), jnp.asarray(delta_gids))
-            else:
-                out = fn(jnp.asarray(qs_p), seg_arg, delta_vert,
-                         jnp.asarray(delta_live), jnp.asarray(delta_gids))
-            if int(out[-1]) == 0 or self._fused_saturated(rung):
+            # span covers build/fetch + dispatch + the steering-scalar
+            # readback (the sync point where device time surfaces)
+            with _obs_span("rung_dispatch", cat="device", kind=kind,
+                           tau=tau, rung=rung):
+                fn = self._fused_fn(kind, tau, rung, kk)
+                _dispatch("fused")
+                if staged is not None:
+                    out = fn(jnp.asarray(qs_p), seg_arg, staged,
+                             delta_vert, jnp.asarray(delta_live),
+                             jnp.asarray(delta_gids))
+                else:
+                    out = fn(jnp.asarray(qs_p), seg_arg, delta_vert,
+                             jnp.asarray(delta_live),
+                             jnp.asarray(delta_gids))
+                done = int(out[-1]) == 0 or self._fused_saturated(rung)
+            if done:
                 return out
             rung += 1
 
@@ -1619,8 +1845,9 @@ class SegmentedIndex:
             if int(min_surv) >= kk or tau >= self.L:
                 break
             tau = min(self.L, max(tau + 1, 2 * tau))
-        dd, ids = _pad_topk(np.asarray(dists)[:m], np.asarray(ids)[:m],
-                            int(k))
+        with _obs_span("topk_readback", cat="device", k=int(k)):
+            dd, ids = _pad_topk(np.asarray(dists)[:m],
+                                np.asarray(ids)[:m], int(k))
         return TopKResult(ids=jnp.asarray(ids), dists=jnp.asarray(dd),
                           tau=tau, overflow=int(ov))
 
@@ -1787,16 +2014,19 @@ class SegmentedIndex:
             delta_gids = np.zeros(0, np.int32)
         fn = self._rerank_fn(metric, kk)
         _dispatch("rerank")
-        if self.backend == "bst" and self.layout == "suffix":
-            staged_pays = self._refresh_store().stage_payloads()
-            ids, dists, scores = fn(dist, q_pay_vert, staged_pays,
-                                    delta_pay, jnp.asarray(delta_gids))
-        else:
-            ids, dists, scores = fn(dist, q_pay_vert, delta_pay,
-                                    jnp.asarray(delta_gids))
-        ids, dists, scores = _pad_topk_scores(
-            np.asarray(ids)[:m], np.asarray(dists)[:m],
-            np.asarray(scores)[:m], int(k))
+        with _obs_span("rerank", cat="device", metric=metric, kk=kk):
+            if self.backend == "bst" and self.layout == "suffix":
+                staged_pays = self._refresh_store().stage_payloads()
+                ids, dists, scores = fn(dist, q_pay_vert, staged_pays,
+                                        delta_pay,
+                                        jnp.asarray(delta_gids))
+            else:
+                ids, dists, scores = fn(dist, q_pay_vert, delta_pay,
+                                        jnp.asarray(delta_gids))
+            ids, dists, scores = (np.asarray(ids)[:m],
+                                  np.asarray(dists)[:m],
+                                  np.asarray(scores)[:m])
+        ids, dists, scores = _pad_topk_scores(ids, dists, scores, int(k))
         return TopKResult(ids=jnp.asarray(ids), dists=jnp.asarray(dists),
                           tau=tau, overflow=int(ov),
                           scores=jnp.asarray(scores))
@@ -1969,19 +2199,36 @@ class ShardedSegmentedIndex:
         plane[:, col_ids] = dist
         return plane, overflow
 
-    def search_batch(self, qs: np.ndarray, tau: int) -> SegmentedSearchResult:
-        """(m, L) uint8 queries -> global (m, n_ids) mask/dist planes."""
+    def search_batch(self, qs: np.ndarray, tau: int,
+                     explain: bool = False) -> SegmentedSearchResult:
+        """(m, L) uint8 queries -> global (m, n_ids) mask/dist planes.
+        ``explain=True`` appends the ``QueryExplain`` record."""
         qs = np.asarray(qs, dtype=np.uint8)
         if qs.ndim == 1:
             qs = qs[None, :]
+        if explain:
+            rec = _ExplainRecorder()
+            dist, col_ids, overflow = rec.wrap(self._search_columns)(
+                qs, int(tau))
+            plane = np.full((qs.shape[0], self.n_ids), BIG_I, np.int32)
+            plane[:, col_ids] = dist
+            res = SegmentedSearchResult(mask=plane <= tau, dist=plane,
+                                        overflow=overflow)
+            return res, rec.finish(
+                op="search", backend="sharded-stacks",
+                n_queries=qs.shape[0], n_live=self.n_live, k=None,
+                tau0=int(tau), tau_final=int(tau), rerank=None)
         plane, overflow = self._global_plane(qs, int(tau))
         return SegmentedSearchResult(mask=plane <= tau, dist=plane,
                                      overflow=overflow)
 
-    def search(self, q: np.ndarray, tau: int) -> SegmentedSearchResult:
-        res = self.search_batch(np.asarray(q)[None], tau)
-        return SegmentedSearchResult(mask=res.mask[0], dist=res.dist[0],
-                                     overflow=res.overflow)
+    def search(self, q: np.ndarray, tau: int,
+               explain: bool = False) -> SegmentedSearchResult:
+        out = self.search_batch(np.asarray(q)[None], tau, explain=explain)
+        res, ex = out if explain else (out, None)
+        res = SegmentedSearchResult(mask=res.mask[0], dist=res.dist[0],
+                                    overflow=res.overflow)
+        return (res, ex) if explain else res
 
     def _payload_rows(self) -> np.ndarray:
         """(R, Wp) uint32 payload rows in the global column order of
@@ -1992,38 +2239,55 @@ class ShardedSegmentedIndex:
     def topk_batch(self, qs: np.ndarray, k: int,
                    tau0: Optional[int] = None, *,
                    rerank: Optional[str] = None,
-                   q_payloads: Optional[np.ndarray] = None) -> TopKResult:
+                   q_payloads: Optional[np.ndarray] = None,
+                   explain: bool = False) -> TopKResult:
         """Exact global kNN: per-shard column-compressed fan-out on one
         shared τ ladder (same contract as ``SegmentedIndex.topk_batch``,
         including the two-stage ``rerank=`` contract — stage 2 is still
         ONE re-rank dispatch over the merged survivor plane, never one
-        per shard)."""
+        per shard).  ``explain=True`` appends the ``QueryExplain``
+        record (bit-identical result)."""
         qs = np.asarray(qs, dtype=np.uint8)
         if qs.ndim == 1:
             qs = qs[None, :]
+        rec = _ExplainRecorder() if explain else None
+        columns_fn = (rec.wrap(self._search_columns) if explain
+                      else self._search_columns)
         if rerank is not None:
             q_pay = self.shards[0]._check_rerank(rerank, q_payloads,
                                                  qs.shape[0])
-            return _ladder_topk_rerank(
-                self._search_columns, self._payload_rows, self.n_live,
+            res = _ladder_topk_rerank(
+                columns_fn, self._payload_rows, self.n_live,
                 self.b, self.L, self.block_m, qs, k, tau0, rerank, q_pay)
-        if q_payloads is not None:
-            raise ValueError("q_payloads supplied without rerank=")
-        return _ladder_topk(self._search_columns, self.n_live, self.b,
-                            self.L, qs, k, tau0)
+        else:
+            if q_payloads is not None:
+                raise ValueError("q_payloads supplied without rerank=")
+            res = _ladder_topk(columns_fn, self.n_live, self.b,
+                               self.L, qs, k, tau0)
+        if not explain:
+            return res
+        return res, rec.finish(
+            op="topk", backend="sharded-stacks", n_queries=qs.shape[0],
+            n_live=self.n_live, k=int(k),
+            tau0=None if tau0 is None else int(tau0),
+            tau_final=int(res.tau), rerank=rerank)
 
     def topk(self, q: np.ndarray, k: int,
              tau0: Optional[int] = None, *,
              rerank: Optional[str] = None,
-             q_payloads: Optional[np.ndarray] = None) -> TopKResult:
+             q_payloads: Optional[np.ndarray] = None,
+             explain: bool = False) -> TopKResult:
         qp = None
         if q_payloads is not None:
             qp = np.asarray(q_payloads, np.uint32)
             if qp.ndim == 1:
                 qp = qp[None, :]
-        res = self.topk_batch(np.asarray(q)[None], k, tau0=tau0,
-                              rerank=rerank, q_payloads=qp)
-        return TopKResult(ids=res.ids[0], dists=res.dists[0], tau=res.tau,
-                          overflow=res.overflow,
-                          scores=(None if res.scores is None
-                                  else res.scores[0]))
+        out = self.topk_batch(np.asarray(q)[None], k, tau0=tau0,
+                              rerank=rerank, q_payloads=qp,
+                              explain=explain)
+        res, ex = out if explain else (out, None)
+        res = TopKResult(ids=res.ids[0], dists=res.dists[0], tau=res.tau,
+                         overflow=res.overflow,
+                         scores=(None if res.scores is None
+                                 else res.scores[0]))
+        return (res, ex) if explain else res

@@ -11,6 +11,7 @@ launch is not worth it.
 from __future__ import annotations
 
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +26,34 @@ from .hamming_kernel import (BIG, DEFAULT_BLOCK_M, DEFAULT_BLOCK_N,
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# Process-wide kernel-build ledger (DESIGN.md §11): one bump per wrapper
+# entry, keyed by wrapper name, with a ``:ref`` suffix when the call fell
+# back to the pure-jnp oracle.  Wrappers run at *trace* time, so under
+# jit these count kernel bodies staged into compiled programs (a cached
+# program replays without re-entering the wrapper) — the companion to
+# ``segments.dispatch_stats()``, which counts program launches.
+_KSTATS_LOCK = threading.Lock()
+_KERNEL_STATS: dict = {}
+
+
+def _count(name: str, use_kernel: bool) -> None:
+    key = name if use_kernel else name + ":ref"
+    with _KSTATS_LOCK:
+        _KERNEL_STATS[key] = _KERNEL_STATS.get(key, 0) + 1
+
+
+def kernel_stats() -> dict:
+    """Per-wrapper trace-time call counts (``<name>`` kernel path,
+    ``<name>:ref`` oracle fallback)."""
+    with _KSTATS_LOCK:
+        return dict(_KERNEL_STATS)
+
+
+def reset_kernel_stats() -> None:
+    with _KSTATS_LOCK:
+        _KERNEL_STATS.clear()
 
 
 def to_lane_major(planes: jnp.ndarray) -> jnp.ndarray:
@@ -52,6 +81,7 @@ def hamming_distances(db_vert: jnp.ndarray, q_vert: jnp.ndarray,
     m = q_vert.shape[-1]
     if use_kernel is None:
         use_kernel = n >= block_n  # tiny scans: oracle is cheaper than launch
+    _count("hamming_distances", use_kernel)
     if not use_kernel:
         return ref.hamming_distances_ref(db_vert, q_vert)
     block_m = min(block_m, m)  # never compute more pad-query rows than m
@@ -81,6 +111,7 @@ def sparse_verify(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
     n = paths_vert.shape[-1]
     if use_kernel is None:
         use_kernel = n >= block_n
+    _count("sparse_verify", use_kernel)
     if not use_kernel:
         mask, dist = ref.sparse_verify_ref(paths_vert, q_vert, base_dist, tau)
         return mask.astype(jnp.int32), dist
@@ -121,6 +152,7 @@ def sparse_verify_batch(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
     m = q_vert.shape[-1]
     if use_kernel is None:
         use_kernel = n >= block_n
+    _count("sparse_verify_batch", use_kernel)
     if not use_kernel:
         mask, dist = ref.sparse_verify_batch_ref(paths_vert, q_vert,
                                                  base_dist, tau)
@@ -165,6 +197,7 @@ def sparse_verify_arena(paths_vert: jnp.ndarray, q_vert: jnp.ndarray,
     m = q_vert.shape[-1]
     if use_kernel is None:
         use_kernel = n >= block_n
+    _count("sparse_verify_arena", use_kernel)
     if not use_kernel:
         mask, dist = ref.sparse_verify_arena_ref(paths_vert, q_vert,
                                                  base_plane, base_idx,
@@ -213,6 +246,7 @@ def sparse_verify_arena_packed(db_words: jnp.ndarray, q_words: jnp.ndarray,
     m = q_words.shape[-1]
     if use_kernel is None:
         use_kernel = n >= block_n
+    _count("sparse_verify_arena_packed", use_kernel)
     if not use_kernel:
         mask, dist = ref.sparse_verify_arena_packed_ref(
             db_words, q_words, base_plane, base_idx, live, b, S, tau)
@@ -255,6 +289,7 @@ def exact_rerank(pay_vert: jnp.ndarray, q_vert: jnp.ndarray,
     m = q_vert.shape[-1]
     if use_kernel is None:
         use_kernel = n >= block_n  # tiny scans: oracle is cheaper than launch
+    _count("exact_rerank", use_kernel)
     if not use_kernel:
         return ref.exact_rerank_ref(pay_vert, q_vert, surv, metric)
     block_m = min(block_m, m)  # never compute more pad-query rows than m

@@ -21,6 +21,7 @@ micro-batched reads, writes interleaved re-jit-free — and ends with the
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -35,6 +36,7 @@ from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
 from ..distributed.sharding import use_mesh
 from ..launch.mesh import make_host_mesh
 from ..models import model as M
+from ..obs import SlowQueryLog, Tracer
 from ..serving import (CollectionConfig, CollectionRegistry, Scheduler,
                        SchedulerConfig)
 from ..train.steps import make_decode_step, make_prefill_step
@@ -57,9 +59,18 @@ def make_scheduler(args, L: int, b: int, name: str = "docs") -> Scheduler:
             registry = CollectionRegistry.open(data_dir)
         else:
             registry = CollectionRegistry(data_dir=data_dir)
+    tracer = slowlog = None
+    trace_dir = getattr(args, "trace_dir", None)
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
+        tracer = Tracer()
+        slowlog = SlowQueryLog(
+            path=os.path.join(trace_dir, "slow_queries.jsonl"))
     sched = Scheduler(registry=registry, config=SchedulerConfig(
         max_batch=args.max_batch, max_queue=args.max_queue,
-        max_wait_ms=args.max_wait_ms))
+        max_wait_ms=args.max_wait_ms,
+        slow_ms=getattr(args, "slow_ms", None)),
+        tracer=tracer, slowlog=slowlog)
     if registry is None or name not in registry.names():
         # --rerank provisions the exact re-rank plane (DESIGN.md §10):
         # the collection stores per-row token-set bitmaps alongside the
@@ -71,6 +82,20 @@ def make_scheduler(args, L: int, b: int, name: str = "docs") -> Scheduler:
             block_m=args.block_m or DEFAULT_BLOCK_M,
             payload_words=payload_words))
     return sched
+
+
+def dump_trace(sched: Scheduler, args) -> None:
+    """--trace-dir epilogue: write the Chrome trace-event JSON
+    (``tools/trace_report.py`` / Perfetto consume it) and note the
+    slow-query log."""
+    trace_dir = getattr(args, "trace_dir", None)
+    if not trace_dir or sched.tracer is None:
+        return
+    path = sched.tracer.write_chrome(os.path.join(trace_dir, "trace.json"))
+    print(f"wrote {len(sched.tracer)} request traces to {path}")
+    if sched.slowlog is not None and len(sched.slowlog):
+        print(f"  {len(sched.slowlog)} slow requests "
+              f"(>= {args.slow_ms} ms) in {sched.slowlog.path}")
 
 
 def run_ingest(args) -> int:
@@ -111,6 +136,7 @@ def run_ingest(args) -> int:
                   f"at distances {nn[r].dists} (tau*={nn[r].tau})")
         sched.stop()
         sched.registry.close()
+        dump_trace(sched, args)
         print("--- /stats ---")
         print(sched.render_stats())
         return 0
@@ -168,6 +194,7 @@ def run_ingest(args) -> int:
           f"{sched.metrics.batch_fill_ratio():.2f})")
     sched.stop()
     sched.registry.close()              # sync durable stores (--data-dir)
+    dump_trace(sched, args)
     print("--- /stats ---")
     print(sched.render_stats())
     return 0
@@ -217,6 +244,15 @@ def main(argv=None):
                     help="with --data-dir: rebuild collections persisted "
                          "there (manifest segments + WAL replay) before "
                          "serving")
+    ap.add_argument("--trace-dir", default=None,
+                    help="record per-request span traces and write them "
+                         "here: trace.json (Chrome trace-event JSON — "
+                         "Perfetto / chrome://tracing / tools/"
+                         "trace_report.py) plus slow_queries.jsonl")
+    ap.add_argument("--slow-ms", type=float, default=None,
+                    help="slow-query threshold (end-to-end ms): requests "
+                         "at or above it dump their span tree to the "
+                         "slow-query log")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -288,6 +324,7 @@ def main(argv=None):
                 nn = f.result()
                 print(f"  request {r}: top-{args.topk} docs {nn.ids} "
                       f"at distances {nn.dists} (tau*={nn.tau})")
+            dump_trace(sched, args)
     return 0
 
 

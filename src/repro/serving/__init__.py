@@ -6,7 +6,9 @@ request queue with dynamic micro-batching (power-of-two shape buckets →
 zero steady-state re-jits), write interleaving (inserts/deletes fence
 reads but never recompile), bounded queues with explicit overload
 rejection, a multi-tenant collection registry, and ``/stats``-style
-metrics.
+metrics (Prometheus exposition format; request tracing and the
+slow-query log live in ``repro.obs`` — pass ``tracer=`` / configure
+``SchedulerConfig.slow_ms`` to turn them on).
 
 >>> import numpy as np
 >>> from repro.serving import CollectionConfig, Scheduler

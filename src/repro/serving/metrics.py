@@ -1,44 +1,38 @@
-"""Serving metrics: latency percentiles, throughput counters, batching
-efficiency, and a ``/stats``-style text dump (DESIGN.md §5).
+"""Serving metrics: latency percentiles + histograms, throughput
+counters, batching efficiency, and a ``/stats`` text dump in real
+Prometheus exposition format (DESIGN.md §5, §11).
 
 One ``ServingMetrics`` instance is shared by a scheduler and all its
 collections.  Latencies are kept in bounded per-op ring buffers (recent
 window, not full history) so a long-lived server's percentile cost stays
-O(window); counters are plain monotone integers.  All mutators take an
-internal lock — the scheduler records from its worker threads while
-``snapshot()`` / ``render_text()`` may be called from any thread.
+O(window), plus fixed-bucket cumulative ``Histogram``s (full history —
+what a scraper rates over).  All mutators take an internal lock — the
+scheduler records from its worker threads while ``snapshot()`` /
+``render_text()`` may be called from any thread.
 
-Cache efficiency is read straight from the process-level compiled-
-searcher cache (``repro.core.search.searcher_cache_info``): ``hits`` /
-``misses`` are Python-cache lookups, ``traces`` counts actual jit
-traces — the number that must stop growing once every shape bucket is
-warm.
-
-Device-dispatch accounting comes from the segmented query path's
-process-level counters (``repro.core.segments.dispatch_stats``): the
-arena path costs one ``fused`` launch per τ rung regardless of segment
-count, while the reference path counts one ``fanout`` launch per
-segment — the dispatch counter is the per-segment accounting,
-aggregated where it is exact (DESIGN.md §6).
-
-Tier movement comes from the column store's process-level counters
-(``repro.core.column_store.tier_stats``): promotions / demotions count
-blocks crossing the hot/cold boundary, ``prefetches`` counts staged
-copy-ahead transfers and ``staged_bytes`` the bytes they moved
-(DESIGN.md §7).
+Cache / dispatch / tier efficiency come from *process-level* counters
+(``repro.core.search.searcher_cache_info``,
+``repro.core.segments.dispatch_stats``,
+``repro.core.column_store.tier_stats``).  Those globals are shared by
+every index in the process, so each ``ServingMetrics`` snapshots them at
+construction and reports **deltas since its own start** — two schedulers
+(or a test running after a warm-up) no longer see each other's traffic.
+``rebaseline()`` re-zeros the deltas in place.
 """
 
 from __future__ import annotations
 
 import collections
 import threading
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.column_store import tier_stats
 from ..core.search import searcher_cache_info
 from ..core.segments import dispatch_stats
+from ..obs.prom import (DEFAULT_LATENCY_BUCKETS_S, Histogram, format_value,
+                        render_family)
 
 __all__ = ["LatencyWindow", "ServingMetrics"]
 
@@ -71,10 +65,11 @@ class LatencyWindow:
 
 
 class ServingMetrics:
-    """Counters + latency windows for one scheduler.
+    """Counters + latency windows/histograms for one scheduler.
 
     * ``record_latency(op, s)`` — end-to-end (enqueue -> complete).
     * ``record_exec(op, s)``    — device dispatch only.
+    * ``record_queue(op, s)``   — queue wait (enqueue -> batch pop).
     * ``record_batch(op, size, bucket)`` — one coalesced read dispatch;
       feeds batches_total and the batch-fill ratio (Σsize / Σbucket).
     * ``inc(name, n)``          — plain counters (``requests_total:<op>``,
@@ -82,14 +77,28 @@ class ServingMetrics:
       ``write_ops_total``, ``executor_errors_total``, ...).
     """
 
-    def __init__(self, window: int = 2048):
+    def __init__(self, window: int = 2048,
+                 buckets: Sequence[float] = DEFAULT_LATENCY_BUCKETS_S):
         self._lock = threading.Lock()
         self._window = window
+        self._buckets = tuple(buckets)
         self.latency: Dict[str, LatencyWindow] = {}
         self.exec_latency: Dict[str, LatencyWindow] = {}
+        self.queue_latency: Dict[str, LatencyWindow] = {}
+        self._hists: Dict[Tuple[str, str], Histogram] = {}
         self.counters: Dict[str, int] = collections.defaultdict(int)
         self.batch_sizes = 0
         self.batch_buckets = 0
+        self.rebaseline()
+
+    def rebaseline(self) -> None:
+        """Re-zero the process-global cache/dispatch/tier deltas: every
+        later ``snapshot()`` reports activity since this call (called
+        once at construction — i.e. scheduler start)."""
+        with self._lock:
+            self._cache0 = searcher_cache_info()
+            self._disp0 = dispatch_stats()
+            self._tier0 = tier_stats()
 
     # -- recording -------------------------------------------------------
 
@@ -99,13 +108,26 @@ class ServingMetrics:
             win = table[op] = LatencyWindow(self._window)
         return win
 
+    def _hist(self, kind: str, op: str) -> Histogram:
+        h = self._hists.get((kind, op))
+        if h is None:
+            h = self._hists[(kind, op)] = Histogram(self._buckets)
+        return h
+
     def record_latency(self, op: str, seconds: float) -> None:
         with self._lock:
             self._win(self.latency, op).add(seconds)
+            self._hist("latency", op).observe(seconds)
 
     def record_exec(self, op: str, seconds: float) -> None:
         with self._lock:
             self._win(self.exec_latency, op).add(seconds)
+            self._hist("exec_latency", op).observe(seconds)
+
+    def record_queue(self, op: str, seconds: float) -> None:
+        with self._lock:
+            self._win(self.queue_latency, op).add(seconds)
+            self._hist("queue_latency", op).observe(seconds)
 
     def record_batch(self, op: str, size: int, bucket: int) -> None:
         with self._lock:
@@ -128,52 +150,104 @@ class ServingMetrics:
     def snapshot(self) -> Dict[str, object]:
         """One coherent dict of everything: counters, per-op latency
         summaries (count / mean / p50 / p99 ms), batch fill, and the
-        compiled-searcher cache counters."""
+        compiled-searcher cache / dispatch / tier counters **as deltas
+        since this instance's baseline** (``size`` stays absolute — it
+        is an occupancy gauge, not a flow)."""
         with self._lock:
             out: Dict[str, object] = {
                 "counters": dict(self.counters),
                 "latency": {op: w.summary() for op, w in self.latency.items()},
                 "exec_latency": {op: w.summary()
                                  for op, w in self.exec_latency.items()},
+                "queue_latency": {op: w.summary()
+                                  for op, w in self.queue_latency.items()},
                 "batch_fill_ratio": self.batch_fill_ratio(),
             }
-        cache = searcher_cache_info()
+            cache0, disp0, tier0 = self._cache0, self._disp0, self._tier0
+        cache_now = searcher_cache_info()
+        cache = {k: cache_now[k] - cache0.get(k, 0)
+                 for k in cache_now if k != "size"}
+        cache["size"] = cache_now.get("size", 0)
         lookups = cache["hits"] + cache["misses"]
         cache["hit_rate"] = cache["hits"] / lookups if lookups else 0.0
         out["searcher_cache"] = cache
-        out["device_dispatch"] = dispatch_stats()
-        out["tier"] = tier_stats()
+        out["device_dispatch"] = {k: v - disp0.get(k, 0)
+                                  for k, v in dispatch_stats().items()}
+        out["tier"] = {k: v - tier0.get(k, 0)
+                       for k, v in tier_stats().items()}
         return out
 
     def render_text(self, extra: Optional[Dict[str, object]] = None) -> str:
-        """``/stats``-style flat text dump: one ``name value`` line per
-        metric (Prometheus-exposition flavored; labels use ``{op="..."}``).
-        ``extra`` appends pre-flattened gauge lines (queue depths, index
-        occupancy) supplied by the scheduler."""
+        """``/stats`` dump in Prometheus text exposition format: every
+        family gets ``# HELP`` / ``# TYPE`` lines and histogram families
+        render cumulative ``_bucket``/``_sum``/``_count`` series — the
+        output round-trips through ``repro.obs.prom.parse_exposition``
+        (and therefore a real scraper).  ``extra`` appends pre-flattened
+        gauge lines (queue depths, index occupancy) supplied by the
+        scheduler."""
         snap = self.snapshot()
-        lines: List[str] = []
+        out: List[str] = []
+        typed: set = set()
+
+        def emit(family: str, ftype: str, help_text: str,
+                 lines: List[str]) -> None:
+            if family not in typed:
+                out.extend(render_family(family, ftype, help_text, lines))
+                typed.add(family)
+            else:
+                out.extend(lines)
+
+        fams: Dict[str, List[str]] = {}
         for name, val in sorted(snap["counters"].items()):
             if ":" in name:
                 base, op = name.split(":", 1)
-                lines.append(f'serving_{base}{{op="{op}"}} {val}')
+                fam = f"serving_{base}"
+                line = f'{fam}{{op="{op}"}} {format_value(val)}'
             else:
-                lines.append(f"serving_{name} {val}")
+                fam = f"serving_{name}"
+                line = f"{fam} {format_value(val)}"
+            fams.setdefault(fam, []).append(line)
+        for fam in sorted(fams):
+            emit(fam, "counter", "Scheduler request counter.", fams[fam])
+
         for table, label in ((snap["latency"], "latency"),
-                             (snap["exec_latency"], "exec_latency")):
-            for op, s in sorted(table.items()):
-                for stat in ("p50_ms", "p99_ms", "mean_ms"):
-                    lines.append(
-                        f'serving_{label}_{stat}{{op="{op}"}} '
-                        f"{s[stat]:.3f}")
-        lines.append(f"serving_batch_fill_ratio "
-                     f"{snap['batch_fill_ratio']:.4f}")
+                             (snap["exec_latency"], "exec_latency"),
+                             (snap["queue_latency"], "queue_latency")):
+            for stat in ("p50_ms", "p99_ms", "mean_ms"):
+                fam = f"serving_{label}_{stat}"
+                lines = [f'{fam}{{op="{op}"}} {format_value(s[stat])}'
+                         for op, s in sorted(table.items())]
+                if lines:
+                    emit(fam, "gauge",
+                         f"Windowed {label} {stat} per op.", lines)
+
+        emit("serving_batch_fill_ratio", "gauge",
+             "Real queries / dispatched bucket rows.",
+             ["serving_batch_fill_ratio "
+              + format_value(snap["batch_fill_ratio"])])
+
+        with self._lock:
+            hist_items = sorted(self._hists.items())
+            for (kind, op), h in hist_items:
+                fam = f"serving_{kind}_seconds"
+                emit(fam, "histogram",
+                     f"Request {kind} histogram (seconds).",
+                     h.sample_lines(fam, f'op="{op}"'))
+
         for k, v in sorted(snap["searcher_cache"].items()):
-            val = f"{v:.4f}" if isinstance(v, float) else str(v)
-            lines.append(f"searcher_cache_{k} {val}")
+            emit(f"searcher_cache_{k}", "gauge",
+                 "Compiled-searcher cache (delta since scheduler start).",
+                 [f"searcher_cache_{k} {format_value(v)}"])
         for k, v in sorted(snap["device_dispatch"].items()):
-            lines.append(f"device_dispatch_{k} {v}")
+            emit(f"device_dispatch_{k}", "counter",
+                 "Device launches (delta since scheduler start).",
+                 [f"device_dispatch_{k} {format_value(v)}"])
         for k, v in sorted(snap["tier"].items()):
-            lines.append(f"tier_{k} {v}")
+            emit(f"tier_{k}", "counter",
+                 "Column-store tier movement (delta since scheduler start).",
+                 [f"tier_{k} {format_value(v)}"])
         for k, v in sorted((extra or {}).items()):
-            lines.append(f"{k} {v}")
-        return "\n".join(lines) + "\n"
+            fam = k.split("{", 1)[0].split()[0]
+            emit(fam, "gauge", "Scheduler gauge.",
+                 [f"{k} {format_value(v)}"])
+        return "\n".join(out) + "\n"

@@ -49,6 +49,9 @@ from typing import Deque, Dict, List, NamedTuple, Optional, Tuple
 import numpy as np
 
 from ..core.search import TopKResult
+from ..obs.slowlog import SlowQueryLog
+from ..obs.trace import Span, Tracer, attach
+from ..obs.trace import span as _obs_span
 from .batching import bucket_m, pad_to_bucket
 from .collections import Collection, CollectionConfig, CollectionRegistry
 from .metrics import ServingMetrics
@@ -102,11 +105,19 @@ class SchedulerConfig:
       max_wait_ms: longest a partially filled read batch waits for more
                    arrivals before flushing (threaded mode; ``pump()``
                    always flushes immediately).
+      slow_ms:     slow-query threshold (end-to-end, milliseconds); a
+                   request at or above it dumps its span tree into the
+                   scheduler's ``SlowQueryLog``.  None (default)
+                   disables the slow log — and, with no ``tracer``
+                   either, disables span recording entirely (requests
+                   carry no spans and the query path's instrumentation
+                   points are shared no-ops).
     """
 
     max_batch: int = 64
     max_queue: int = 1024
     max_wait_ms: float = 2.0
+    slow_ms: Optional[float] = None
 
 
 @dataclasses.dataclass(eq=False)      # identity equality: requests are
@@ -116,6 +127,7 @@ class _Request:                       # queue entries, never value-compared
     payload: dict
     future: Future
     t_enq: float
+    span: Optional[Span] = None   # request root (tracing enabled only)
 
 
 class _CollState:
@@ -138,11 +150,17 @@ class Scheduler:
 
     def __init__(self, registry: Optional[CollectionRegistry] = None,
                  config: Optional[SchedulerConfig] = None,
-                 metrics: Optional[ServingMetrics] = None):
+                 metrics: Optional[ServingMetrics] = None,
+                 tracer: Optional[Tracer] = None,
+                 slowlog: Optional[SlowQueryLog] = None):
         self.registry = registry if registry is not None \
             else CollectionRegistry()
         self.config = config if config is not None else SchedulerConfig()
         self.metrics = metrics if metrics is not None else ServingMetrics()
+        self.tracer = tracer
+        if slowlog is None and self.config.slow_ms is not None:
+            slowlog = SlowQueryLog()        # slow_ms implies a log to fill
+        self.slowlog = slowlog
         self._states: Dict[str, _CollState] = {}
         self._states_lock = threading.Lock()
         self._workers: Dict[str, threading.Thread] = {}
@@ -201,6 +219,9 @@ class Scheduler:
                     f"collection {name!r} queue full "
                     f"({self.config.max_queue} requests, op={op})",
                     collection=name, op=op, queue_depth=depth)
+            if self.tracer is not None or self.slowlog is not None:
+                req.span = Span("request", cat="request", ts=req.t_enq,
+                                args={"op": op, "collection": name})
             state.queue.append(req)
             state.cond.notify_all()
         self.metrics.inc(f"requests_total:{op}")
@@ -303,70 +324,123 @@ class Scheduler:
         """Run one batch; any exception fails the batch's futures (the
         clients see it) and never escapes to the worker loop — a failed
         batch must not kill a queue's only worker or skip the latency
-        accounting of its requests."""
+        accounting of its requests.
+
+        Tracing (enabled per request at submit): each traced request
+        root gets a ``queue_wait`` child covering enqueue -> here, then
+        links the ONE shared ``batch`` span (the work was genuinely
+        shared by the coalesced group; the Chrome export de-duplicates
+        it).  The batch span is attached to this thread for the
+        execution, so the query path's instrumentation points
+        (``rung_dispatch``, ``tier_stage``, ``rerank``, ...) nest under
+        it with no signature threading."""
         op = batch[0].op
+        t_pop = time.perf_counter()
+        for req in batch:
+            self.metrics.record_queue(op, t_pop - req.t_enq)
+        batch_span: Optional[Span] = None
+        traced = [r for r in batch if r.span is not None]
+        if traced:
+            batch_span = Span(
+                "batch", cat="batch", ts=t_pop,
+                track=threading.current_thread().name,
+                args={"op": op, "collection": name, "size": len(batch),
+                      "key": repr(batch[0].key)})
+            for req in traced:
+                wait = req.span.child("queue_wait", cat="sched")
+                wait.ts, wait.dur = req.t_enq, t_pop - req.t_enq
+                req.span.children.append(batch_span)
         try:
             coll = self.registry.get(name)
-            if op in _WRITES:
-                self._execute_write(coll, batch[0])
+            if batch_span is not None:
+                with attach(batch_span):
+                    self._run_batch(coll, op, batch)
             else:
-                self._execute_reads(coll, batch)
+                self._run_batch(coll, op, batch)
         except Exception as e:                     # noqa: BLE001
             self.metrics.inc("executor_errors_total")
             for req in batch:
                 if not req.future.done():
                     req.future.set_exception(e)
         finally:
+            t_done = time.perf_counter()
+            if batch_span is not None:
+                batch_span.dur = t_done - batch_span.ts
             for req in batch:
-                self.metrics.record_latency(
-                    op, time.perf_counter() - req.t_enq)
+                e2e = t_done - req.t_enq
+                self.metrics.record_latency(op, e2e)
+                if req.span is None:
+                    continue
+                req.span.dur = e2e
+                if self.tracer is not None:
+                    self.tracer.add(req.span)
+                if (self.slowlog is not None
+                        and self.config.slow_ms is not None
+                        and e2e * 1e3 >= self.config.slow_ms):
+                    self.slowlog.record(
+                        req.span, op=op, collection=name,
+                        slow_ms=self.config.slow_ms)
+
+    def _run_batch(self, coll: Collection, op: str,
+                   batch: List[_Request]) -> None:
+        if op in _WRITES:
+            self._execute_write(coll, batch[0])
+        else:
+            self._execute_reads(coll, batch)
 
     def _execute_reads(self, coll: Collection,
                        batch: List[_Request]) -> None:
         op, key = batch[0].op, batch[0].key
         g = len(batch)
-        qs = pad_to_bucket(np.stack([r.payload["q"] for r in batch]))
+        with _obs_span("batch_assembly", cat="sched", size=g,
+                       bucket=bucket_m(g)):
+            qs = pad_to_bucket(np.stack([r.payload["q"] for r in batch]))
         t0 = time.perf_counter()
         if op == "search":
             tau = key[1]
-            res = coll.index.search_batch(qs, tau)
+            with _obs_span("execute", cat="exec", op=op, tau=tau):
+                res = coll.index.search_batch(qs, tau)
             self.metrics.record_exec(op, time.perf_counter() - t0)
             overflow = int(res.overflow)
-            for i, req in enumerate(batch):
-                req.future.set_result(SearchResponse(
-                    mask=np.asarray(res.mask[i]),
-                    dist=np.asarray(res.dist[i]), overflow=overflow))
+            with _obs_span("respond", cat="sched"):
+                for i, req in enumerate(batch):
+                    req.future.set_result(SearchResponse(
+                        mask=np.asarray(res.mask[i]),
+                        dist=np.asarray(res.dist[i]), overflow=overflow))
         else:
             k, tau0, metric = key[1], key[2], key[3]
-            if metric is not None:
-                pays = pad_to_bucket(np.stack(
-                    [r.payload["q_payload"] for r in batch]))
-                res: TopKResult = coll.index.topk_batch(
-                    qs, k, tau0=tau0, rerank=metric, q_payloads=pays)
-            else:
-                res = coll.index.topk_batch(qs, k, tau0=tau0)
+            with _obs_span("execute", cat="exec", op=op, k=k):
+                if metric is not None:
+                    pays = pad_to_bucket(np.stack(
+                        [r.payload["q_payload"] for r in batch]))
+                    res: TopKResult = coll.index.topk_batch(
+                        qs, k, tau0=tau0, rerank=metric, q_payloads=pays)
+                else:
+                    res = coll.index.topk_batch(qs, k, tau0=tau0)
             self.metrics.record_exec(op, time.perf_counter() - t0)
-            ids, dists = np.asarray(res.ids), np.asarray(res.dists)
-            scores = (None if res.scores is None
-                      else np.asarray(res.scores))
-            for i, req in enumerate(batch):
-                req.future.set_result(TopKResponse(
-                    ids=ids[i], dists=dists[i], tau=int(res.tau),
-                    overflow=int(res.overflow),
-                    scores=None if scores is None else scores[i]))
+            with _obs_span("respond", cat="sched"):
+                ids, dists = np.asarray(res.ids), np.asarray(res.dists)
+                scores = (None if res.scores is None
+                          else np.asarray(res.scores))
+                for i, req in enumerate(batch):
+                    req.future.set_result(TopKResponse(
+                        ids=ids[i], dists=dists[i], tau=int(res.tau),
+                        overflow=int(res.overflow),
+                        scores=None if scores is None else scores[i]))
         self.metrics.record_batch(op, g, bucket_m(g))
 
     def _execute_write(self, coll: Collection, req: _Request) -> None:
         t0 = time.perf_counter()
-        if req.op == "insert":
-            result = coll.index.insert(
-                req.payload["sketches"],
-                payloads=req.payload.get("payloads"))
-        else:
-            result = coll.index.delete(req.payload["ids"])
-            frac = coll.config.compact_dead_frac
-            if frac is not None:
-                coll.index.compact(min_dead_frac=frac)
+        with _obs_span("execute", cat="exec", op=req.op):
+            if req.op == "insert":
+                result = coll.index.insert(
+                    req.payload["sketches"],
+                    payloads=req.payload.get("payloads"))
+            else:
+                result = coll.index.delete(req.payload["ids"])
+                frac = coll.config.compact_dead_frac
+                if frac is not None:
+                    coll.index.compact(min_dead_frac=frac)
         self.metrics.record_exec(req.op, time.perf_counter() - t0)
         self.metrics.inc("write_ops_total")
         req.future.set_result(result)

@@ -1,0 +1,191 @@
+#!/usr/bin/env python
+"""Validate and summarize a serving trace (DESIGN.md §11).
+
+Input is what ``python -m repro.launch.serve --trace-dir DIR`` wrote: a
+Chrome trace-event JSON (``trace.json`` — "X" complete events, one tid
+per lane) plus an optional ``slow_queries.jsonl``.  The report:
+
+  * validates the event array is well-formed Chrome trace JSON and that
+    events nest properly per tid (a tid is a stack in the trace model);
+  * reconstructs per-request trees (request root -> queue_wait -> the
+    shared batch span with its assembly / execute / rung_dispatch /
+    rerank / respond phases);
+  * prints e2e p50/p99 and the phase breakdown of the p99 request —
+    queue_wait + batch must cover its end-to-end time;
+  * summarizes the slow-query log when present.
+
+``--check`` turns the report into a gate (CI ``obs-smoke``): exit 1
+unless the file loads, nests, and holds at least one complete request
+tree whose queue_wait + batch spans cover >= 90% of its e2e time.
+
+Usage: ``python tools/trace_report.py TRACE_DIR_or_trace.json [--check]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+EPS_US = 0.01          # rounding slack: durations carry ns precision
+
+
+def load_events(path: str):
+    if os.path.isdir(path):
+        path = os.path.join(path, "trace.json")
+    with open(path) as f:
+        events = json.load(f)
+    if not isinstance(events, list):
+        raise ValueError("trace is not a Chrome event array")
+    for ev in events:
+        if not isinstance(ev, dict) or "ph" not in ev:
+            raise ValueError(f"malformed event: {ev!r}")
+        if ev["ph"] == "X" and not ("ts" in ev and "dur" in ev):
+            raise ValueError(f"X event without ts/dur: {ev!r}")
+    return path, events
+
+
+def check_nesting(events) -> int:
+    """Per tid, X events must properly nest (no partial overlap).
+    Returns the number of lanes checked; raises ValueError on overlap."""
+    lanes = {}
+    for ev in events:
+        if ev["ph"] == "X":
+            lanes.setdefault(ev.get("tid", 0), []).append(ev)
+    for tid, evs in lanes.items():
+        evs.sort(key=lambda e: (e["ts"], -e["dur"]))
+        stack = []
+        for ev in evs:
+            end = ev["ts"] + ev["dur"]
+            while stack and ev["ts"] >= stack[-1] - EPS_US:
+                stack.pop()
+            if stack and end > stack[-1] + EPS_US:
+                raise ValueError(
+                    f"tid {tid}: event {ev['name']!r} overlaps its "
+                    f"enclosing span ({end:.3f} > {stack[-1]:.3f} us)")
+            stack.append(end)
+    return len(lanes)
+
+
+def _by_name(events, name):
+    return [e for e in events if e["ph"] == "X" and e["name"] == name]
+
+
+def request_trees(events):
+    """[(request, queue_wait|None, batch|None)] — queue_wait shares the
+    request's lane; the batch span starts where the queue wait ends and
+    finishes with the request."""
+    batches = _by_name(events, "batch")
+    trees = []
+    for req in _by_name(events, "request"):
+        qw = next((e for e in _by_name(events, "queue_wait")
+                   if e.get("tid") == req.get("tid")), None)
+        batch = None
+        if qw is not None and batches:
+            t_pop = qw["ts"] + qw["dur"]
+            t_end = req["ts"] + req["dur"]
+            batch = min(batches, key=lambda b: abs(b["ts"] - t_pop)
+                        + abs(b["ts"] + b["dur"] - t_end))
+            if (abs(batch["ts"] - t_pop) > 1e3        # > 1 ms off: not ours
+                    or abs(batch["ts"] + batch["dur"] - t_end) > 1e3):
+                batch = None
+        trees.append((req, qw, batch))
+    return trees
+
+
+def contained(events, outer):
+    lo, hi = outer["ts"] - EPS_US, outer["ts"] + outer["dur"] + EPS_US
+    return [e for e in events
+            if e["ph"] == "X" and e is not outer
+            and e["ts"] >= lo and e["ts"] + e["dur"] <= hi
+            and e.get("tid") == outer.get("tid")]
+
+
+def percentile(vals, p):
+    if not vals:
+        return 0.0
+    vals = sorted(vals)
+    i = min(len(vals) - 1, int(round(p / 100 * (len(vals) - 1))))
+    return vals[i]
+
+
+def report(path: str, check: bool) -> int:
+    path, events = load_events(path)
+    lanes = check_nesting(events)
+    trees = request_trees(events)
+    xs = [e for e in events if e["ph"] == "X"]
+    print(f"{path}: {len(xs)} spans on {lanes} lanes, "
+          f"{len(trees)} requests")
+    if not trees:
+        print("no request spans found")
+        return 1 if check else 0
+
+    e2e = [t[0]["dur"] / 1e3 for t in trees]        # ms
+    print(f"request e2e: p50={percentile(e2e, 50):.3f} ms  "
+          f"p99={percentile(e2e, 99):.3f} ms  "
+          f"max={max(e2e):.3f} ms")
+
+    complete = 0
+    p99_req = max(trees, key=lambda t: t[0]["dur"])
+    for req, qw, batch in trees:
+        if qw is not None and batch is not None:
+            complete += 1
+    print(f"complete trees (request + queue_wait + batch): "
+          f"{complete}/{len(trees)}")
+
+    req, qw, batch = p99_req
+    if qw is not None and batch is not None:
+        covered = qw["dur"] + batch["dur"]
+        frac = covered / req["dur"] if req["dur"] else 0.0
+        print(f"slowest request ({req['dur'] / 1e3:.3f} ms, "
+              f"op={req['args'].get('op')}):")
+        print(f"  queue_wait      {qw['dur'] / 1e3:9.3f} ms")
+        phases = contained(events, batch)
+        for ph in phases:
+            label = ph["name"]
+            if ph["name"] == "rung_dispatch":
+                label += f" tau={ph['args'].get('tau')}"
+            print(f"  {label:15s} {ph['dur'] / 1e3:9.3f} ms")
+        print(f"  coverage: (queue_wait + batch) / e2e = {frac:.3f}")
+        if check and frac < 0.9:
+            print("CHECK FAILED: span coverage < 90% of e2e")
+            return 1
+    elif check:
+        print("CHECK FAILED: slowest request has no complete span tree")
+        return 1
+
+    slow_path = os.path.join(os.path.dirname(path), "slow_queries.jsonl")
+    if os.path.exists(slow_path):
+        with open(slow_path) as f:
+            entries = [json.loads(line) for line in f if line.strip()]
+        print(f"slow-query log: {len(entries)} entries in {slow_path}")
+        for e in sorted(entries, key=lambda e: -e["e2e_ms"])[:3]:
+            print(f"  {e['e2e_ms']:.3f} ms op={e.get('op')} "
+                  f"collection={e.get('collection')}")
+
+    if check and complete == 0:
+        print("CHECK FAILED: no complete request tree")
+        return 1
+    if check:
+        print("CHECK OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="trace dir (containing trace.json) or a "
+                                 "trace JSON file")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless the trace validates and holds a "
+                         "complete request tree covering >=90% of e2e")
+    args = ap.parse_args(argv)
+    try:
+        return report(args.path, args.check)
+    except (ValueError, OSError, json.JSONDecodeError) as e:
+        print(f"invalid trace: {e}")
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
