@@ -26,6 +26,15 @@ Rows:
                                   scheduler at 1/4/16 sealed segments —
                                   flat under the fused arena
                                   (DESIGN.md §6; asserted non-smoke)
+  * ``serving/<ds>/burst_goodput`` / ``burst_degraded_frac`` /
+    ``burst_victim_p99_ratio`` — overload-control rows (DESIGN.md §12)
+                                  from the chaos harness's 10× burst +
+                                  slow-dispatch-fault scenario
+                                  (``tools/overload_smoke.run_burst``):
+                                  co-tenant within-deadline goodput,
+                                  fraction of victim answers served
+                                  degraded, and the victim's p99/p50 —
+                                  deadline-bounded, never unbounded
 
 Standalone: ``PYTHONPATH=src python -m benchmarks.bench_serving
 [--smoke] [--clients C] [--ops N] [--out BENCH.json]``.
@@ -35,6 +44,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import sys
 import threading
 import time
@@ -47,6 +57,10 @@ from repro.serving import (CollectionConfig, OverloadError, Scheduler,
 
 from . import common
 from .common import Csv, cap_n, make_dataset
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "tools"))
+import overload_smoke  # noqa: E402  (the chaos harness's burst scenario)
 
 # op mix: (name, cumulative probability)
 MIX = (("topk", 0.70), ("search", 0.90), ("insert", 0.95), ("delete", 1.0))
@@ -112,11 +126,9 @@ def run(csv: Csv, datasets=("review",), clients: int = 8,
         preload = sched.submit_insert("bench", db)
         sched.start()
         ids_pool = list(preload.result(timeout=600).tolist())
-        # warm every shape bucket the mix can dispatch before timing
-        warm = [sched.submit_topk("bench", db[i], k) for i in range(4)]
-        warm += [sched.submit_search("bench", db[i], tau) for i in range(4)]
-        for f in warm:
-            f.result(timeout=600)
+        # pre-jit every power-of-two shape bucket the mix can dispatch
+        # before timing — first-request compiles never pollute the p99
+        sched.warmup(ks=(k,), taus=(tau,))
 
         lock = threading.Lock()
         errors: list = []
@@ -221,6 +233,29 @@ def run(csv: Csv, datasets=("review",), clients: int = 8,
             # flat, not linear, in n_segments (p50 — the p99 of a short
             # run is a single sample and may catch a ladder escalation)
             assert sweep_p99[16] < 6 * max(sweep_p99[1], 1e-3), sweep_p99
+
+        # overload-control burst scenario (DESIGN.md §12): one tenant
+        # fires a 10x open-loop burst under slow-dispatch faults; the
+        # chaos harness measures co-tenant goodput, the degraded
+        # fraction, and the victim's deadline-bounded tail
+        burst_kw = dict(n_docs=1024, burst=120) if common.SMOKE else {}
+        res = overload_smoke.run_burst(**burst_kw)
+        csv.add(f"serving/{name}/burst_goodput", res["goodput"] * 1e6,
+                f"goodput={res['goodput']:.3f};"
+                f"cotenant_ops={res['cotenant_total']};"
+                f"deadline_exceeded={res['deadline_exceeded']};"
+                f"breaker_trips={res['breaker_trips']}")
+        csv.add(f"serving/{name}/burst_degraded_frac",
+                res["degraded_frac"] * 1e6,
+                f"degraded_frac={res['degraded_frac']:.3f};"
+                f"stages={','.join(res['degraded_stages']) or 'none'}")
+        csv.add(f"serving/{name}/burst_victim_p99_ratio",
+                res["victim_p99_ratio"] * 1e6,
+                f"p99_over_p50={res['victim_p99_ratio']:.2f};"
+                f"p50_ms={res['victim_p50_ms']:.1f};"
+                f"p99_ms={res['victim_p99_ms']:.1f}")
+        if not common.SMOKE:
+            overload_smoke.check_burst(res)     # the CI-enforced SLO
 
 
 def main(argv=None) -> int:

@@ -67,7 +67,7 @@ from ..kernels.hamming_kernel import DEFAULT_BLOCK_M
 from ..kernels.ref import RERANK_METRICS
 from .bst import BIG, build_bst
 from .column_store import ColumnStore, tier_stats
-from .cost_model import frontier_capacities, tau_for_k
+from .cost_model import cost_single, frontier_capacities, tau_for_k
 from .distributed_search import (build_sharded_bst, make_sharded_searcher,
                                  sharded_column_dists, topk_from_dists)
 from .hamming import (n_words, pack_suffix_words_jax, pack_vertical,
@@ -1082,6 +1082,33 @@ class SegmentedIndex:
         arena lanes and bucket-padded delta planes the dynamic path
         allocates per row."""
         return self.space_ledger()["model_bits"]
+
+    def cost_hint(self, op: str, *, k: Optional[int] = None,
+                  tau: Optional[int] = None, rows: int = 1) -> float:
+        """Cost-model estimate of one request against the *current*
+        corpus (paper Appendix A, Eq. 2; DESIGN.md §12) — the admission
+        controller's currency.  ``op``:
+
+          * ``"topk"``   — cost of the τ ladder seeded by
+            ``tau_for_k(b, L, n, k)``;
+          * ``"search"`` — cost at the fixed ``tau``;
+          * ``"write"``  — ``rows`` delta appends / tombstone flips,
+            priced as τ=0 probes (cheap relative to any query; their
+            amortized seal/merge cost is the maintenance path's budget,
+            not the admission controller's).
+
+        Pure host arithmetic, monotone in k/τ/rows, never raises —
+        callable on every submit."""
+        n = max(float(self.n_live), 1.0)
+        if op == "write":
+            return max(float(rows), 1.0) \
+                * max(cost_single(self.b, self.L, 0, n), 1e-6)
+        if op == "search":
+            t = min(max(int(tau) if tau is not None else 0, 0), self.L)
+        else:
+            t = tau_for_k(self.b, self.L, n,
+                          max(int(k) if k is not None else 1, 1))
+        return max(cost_single(self.b, self.L, t, n), 1e-6)
 
     def stats(self) -> Dict[str, object]:
         """Lifecycle counters, per-segment occupancy, and the space
@@ -2145,6 +2172,15 @@ class ShardedSegmentedIndex:
 
     def space_bits(self) -> int:
         return sum(shard.space_bits() for shard in self.shards)
+
+    def cost_hint(self, op: str, *, k: Optional[int] = None,
+                  tau: Optional[int] = None, rows: int = 1) -> float:
+        """Sum of the per-shard-stack cost hints (every stack answers
+        every read; writes split their rows round-robin)."""
+        per_rows = max(rows // len(self.shards), 1) if op == "write" \
+            else rows
+        return sum(s.cost_hint(op, k=k, tau=tau, rows=per_rows)
+                   for s in self.shards)
 
     @property
     def tombstones(self) -> int:

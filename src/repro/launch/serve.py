@@ -37,7 +37,8 @@ from ..distributed.sharding import use_mesh
 from ..launch.mesh import make_host_mesh
 from ..models import model as M
 from ..obs import SlowQueryLog, Tracer
-from ..serving import (CollectionConfig, CollectionRegistry, Scheduler,
+from ..serving import (AdmissionConfig, BreakerConfig, CollectionConfig,
+                       CollectionRegistry, DegradePolicy, Scheduler,
                        SchedulerConfig)
 from ..train.steps import make_decode_step, make_prefill_step
 
@@ -66,10 +67,21 @@ def make_scheduler(args, L: int, b: int, name: str = "docs") -> Scheduler:
         tracer = Tracer()
         slowlog = SlowQueryLog(
             path=os.path.join(trace_dir, "slow_queries.jsonl"))
+    # overload control plane (DESIGN.md §12): --degrade-policy standard
+    # turns on cost-budget admission + the degradation ladder;
+    # --breaker adds the per-collection circuit breaker
+    degrade_policy = getattr(args, "degrade_policy", "off")
+    admission = degrade = None
+    if degrade_policy and degrade_policy != "off":
+        admission = AdmissionConfig()
+        degrade = DegradePolicy()
+    breaker = BreakerConfig() if getattr(args, "breaker", False) else None
     sched = Scheduler(registry=registry, config=SchedulerConfig(
         max_batch=args.max_batch, max_queue=args.max_queue,
         max_wait_ms=args.max_wait_ms,
-        slow_ms=getattr(args, "slow_ms", None)),
+        slow_ms=getattr(args, "slow_ms", None),
+        admission=admission, degrade=degrade, breaker=breaker,
+        default_deadline_ms=getattr(args, "deadline_ms", None)),
         tracer=tracer, slowlog=slowlog)
     if registry is None or name not in registry.names():
         # --rerank provisions the exact re-rank plane (DESIGN.md §10):
@@ -172,6 +184,11 @@ def run_ingest(args) -> int:
           f"(space {st['space_bits'] / 8 / 1024:.1f} KiB incl. tombstones, "
           f"{st['tombstones']} tombstones held)")
 
+    if getattr(args, "warmup", False):
+        w = sched.warmup(ks=(args.topk,), taus=(args.tau,))
+        print(f"warmup: {w['calls']} calls over {w['buckets']} shape "
+              f"buckets absorbed {w['traces']} fresh compiles")
+
     rows = rng.integers(0, n, args.batch)
     qs = docs[rows]
     t0 = time.time()
@@ -222,6 +239,24 @@ def main(argv=None):
                     help="per-collection queue bound (overload rejects)")
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
                     help="partial-batch flush deadline")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="default end-to-end latency budget per request; "
+                         "requests expiring in queue fail with "
+                         "DeadlineExceeded before any dispatch "
+                         "(DESIGN.md §12)")
+    ap.add_argument("--degrade-policy", default="off",
+                    choices=["off", "standard"],
+                    help="overload control plane: 'standard' enables "
+                         "cost-budget admission + the graceful-"
+                         "degradation ladder (rerank_off -> shrink_k -> "
+                         "cheap_tau -> reject)")
+    ap.add_argument("--breaker", action="store_true",
+                    help="per-collection circuit breaker over deadline "
+                         "outcomes (open/half-open probing)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-jit every power-of-two shape bucket after "
+                         "ingest so first-request compiles never pollute "
+                         "serving p99")
     ap.add_argument("--index-size", type=int, default=4096)
     ap.add_argument("--tau", type=int, default=3)
     ap.add_argument("--topk", type=int, default=3,

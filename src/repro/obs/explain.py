@@ -75,6 +75,10 @@ class QueryExplain:
       tier:         column-store staging delta (prefetches,
                     staged_bytes, ...).
       duration_ms:  end-to-end host wall-clock of the explained call.
+      degraded:     overload-degradation stage that produced this
+                    answer ("rerank_off" | "shrink_k" | "cheap_tau",
+                    DESIGN.md §12), or None for a full answer.  Set by
+                    the serving layer — the core never degrades.
     """
 
     op: str
@@ -91,6 +95,7 @@ class QueryExplain:
     dispatch: Dict[str, int] = dataclasses.field(default_factory=dict)
     tier: Dict[str, int] = dataclasses.field(default_factory=dict)
     duration_ms: float = 0.0
+    degraded: Optional[str] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -133,4 +138,6 @@ class QueryExplain:
         if self.rerank is not None:
             lines.append(f"  rerank={self.rerank} "
                          f"survivors={self.rerank_survivors}")
+        if self.degraded is not None:
+            lines.append(f"  DEGRADED stage={self.degraded}")
         return "\n".join(lines)

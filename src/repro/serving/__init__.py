@@ -10,6 +10,13 @@ metrics (Prometheus exposition format; request tracing and the
 slow-query log live in ``repro.obs`` — pass ``tracer=`` / configure
 ``SchedulerConfig.slow_ms`` to turn them on).
 
+Overload hardening (DESIGN.md §12) is opt-in per scheduler: set
+``SchedulerConfig.admission`` / ``degrade`` / ``breaker`` to run
+deadline-aware cost-budget admission, a graceful-degradation ladder,
+and a per-collection circuit breaker in front of the ``max_queue``
+backstop; every ``submit_*`` then accepts ``deadline_ms=`` /
+``priority=``.
+
 >>> import numpy as np
 >>> from repro.serving import CollectionConfig, Scheduler
 >>> sched = Scheduler()
@@ -26,6 +33,9 @@ slow-query log live in ``repro.obs`` — pass ``tracer=`` / configure
 from .batching import bucket_m, bucket_table, pad_to_bucket
 from .collections import Collection, CollectionConfig, CollectionRegistry
 from .metrics import LatencyWindow, ServingMetrics
+from .overload import (AdmissionConfig, AdmissionController, BreakerConfig,
+                       CircuitBreaker, DeadlineExceeded, DegradePolicy,
+                       SlowDispatchInjector)
 from .scheduler import (OverloadError, Scheduler, SchedulerConfig,
                         SearchResponse, TopKResponse)
 
@@ -33,6 +43,9 @@ __all__ = [
     "bucket_m", "bucket_table", "pad_to_bucket",
     "Collection", "CollectionConfig", "CollectionRegistry",
     "LatencyWindow", "ServingMetrics",
+    "AdmissionConfig", "AdmissionController", "BreakerConfig",
+    "CircuitBreaker", "DeadlineExceeded", "DegradePolicy",
+    "SlowDispatchInjector",
     "OverloadError", "Scheduler", "SchedulerConfig",
     "SearchResponse", "TopKResponse",
 ]

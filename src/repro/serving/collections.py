@@ -54,6 +54,14 @@ class CollectionConfig:
                     When set, inserts carry ``payloads`` and topk
                     requests may ask for the exact two-stage
                     ``rerank=`` contract; None disables re-ranking.
+      default_deadline_ms: latency budget applied to this collection's
+                    requests that pass ``deadline_ms=None`` (DESIGN.md
+                    §12); wins over the scheduler-wide default.  None
+                    (default) = defer to the scheduler.
+      priority:     default request priority for this collection's
+                    tenants; > 0 bypasses cost-budget admission (still
+                    subject to the hard ``max_queue`` backstop and the
+                    circuit breaker).
       mi_blocks / n_shards / lam / block_m: forwarded to the index.
     """
 
@@ -72,6 +80,8 @@ class CollectionConfig:
     layout: str = "suffix"
     hot_bytes: Optional[int] = None
     payload_words: Optional[int] = None
+    default_deadline_ms: Optional[float] = None
+    priority: int = 0
 
     def create(self):
         """Instantiate the configured dynamic index."""

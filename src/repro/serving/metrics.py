@@ -74,7 +74,12 @@ class ServingMetrics:
       feeds batches_total and the batch-fill ratio (Σsize / Σbucket).
     * ``inc(name, n)``          — plain counters (``requests_total:<op>``,
       ``rejected_total`` plus per-op ``rejected_total:<op>``,
+      ``shed_total:<reason>``, ``deadline_exceeded_total`` plus per-op,
+      ``degraded_total`` plus per-stage ``degraded_total:<stage>``,
       ``write_ops_total``, ``executor_errors_total``, ...).
+    * ``set_gauge(name, v)``    — point-in-time gauges (DESIGN.md §12:
+      ``serving_stopped_dirty``, ...); rendered as their own gauge
+      families in the exposition.
     """
 
     def __init__(self, window: int = 2048,
@@ -87,6 +92,7 @@ class ServingMetrics:
         self.queue_latency: Dict[str, LatencyWindow] = {}
         self._hists: Dict[Tuple[str, str], Histogram] = {}
         self.counters: Dict[str, int] = collections.defaultdict(int)
+        self.gauges: Dict[str, float] = {}
         self.batch_sizes = 0
         self.batch_buckets = 0
         self.rebaseline()
@@ -139,6 +145,12 @@ class ServingMetrics:
         with self._lock:
             self.counters[name] += n
 
+    def set_gauge(self, name: str, value: float) -> None:
+        """Set a point-in-time gauge (full metric name, optionally with
+        a ``{label="..."}`` suffix) exported by ``render_text``."""
+        with self._lock:
+            self.gauges[name] = value
+
     # -- export ----------------------------------------------------------
 
     def batch_fill_ratio(self) -> float:
@@ -156,6 +168,7 @@ class ServingMetrics:
         with self._lock:
             out: Dict[str, object] = {
                 "counters": dict(self.counters),
+                "gauges": dict(self.gauges),
                 "latency": {op: w.summary() for op, w in self.latency.items()},
                 "exec_latency": {op: w.summary()
                                  for op, w in self.exec_latency.items()},
@@ -246,7 +259,9 @@ class ServingMetrics:
             emit(f"tier_{k}", "counter",
                  "Column-store tier movement (delta since scheduler start).",
                  [f"tier_{k} {format_value(v)}"])
-        for k, v in sorted((extra or {}).items()):
+        merged = dict(snap["gauges"])
+        merged.update(extra or {})
+        for k, v in sorted(merged.items()):
             fam = k.split("{", 1)[0].split()[0]
             emit(fam, "gauge", "Scheduler gauge.",
                  [f"{k} {format_value(v)}"])

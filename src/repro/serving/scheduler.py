@@ -32,6 +32,14 @@ Execution model, per collection queue:
   * **Admission control.**  Queues are bounded (``max_queue``); a full
     queue rejects new work with ``OverloadError`` at submit time instead
     of queueing unboundedly — overload is explicit, not silent latency.
+    With ``SchedulerConfig.admission`` set, a pressure-aware control
+    plane (``serving.overload``, DESIGN.md §12) runs *in front of* that
+    backstop: cost-budget admission fed by the τ-ladder cost model,
+    CoDel-style queue-delay pressure tracking, a graceful-degradation
+    ladder applied per batch (``degrade``), and a per-collection circuit
+    breaker (``breaker``).  Requests may carry a ``deadline_ms`` budget;
+    a request whose budget expires while queued is cancelled with
+    ``DeadlineExceeded`` before any device dispatch.
   * **Writes interleave re-jit-free.**  ``insert`` lands in the delta
     buffer, ``delete`` flips traced tombstone bits; neither invalidates
     a compiled searcher, so read batches stream on between writes.
@@ -40,6 +48,7 @@ Execution model, per collection queue:
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 import time
 from collections import deque
@@ -52,35 +61,48 @@ from ..core.search import TopKResult
 from ..obs.slowlog import SlowQueryLog
 from ..obs.trace import Span, Tracer, attach
 from ..obs.trace import span as _obs_span
-from .batching import bucket_m, pad_to_bucket
+from .batching import bucket_m, bucket_table, pad_to_bucket
 from .collections import Collection, CollectionConfig, CollectionRegistry
 from .metrics import ServingMetrics
+from .overload import (AdmissionConfig, AdmissionController, BreakerConfig,
+                       CircuitBreaker, DeadlineExceeded, DegradePolicy,
+                       estimate_units)
 
-__all__ = ["OverloadError", "SchedulerConfig", "Scheduler",
-           "SearchResponse", "TopKResponse"]
+__all__ = ["OverloadError", "DeadlineExceeded", "SchedulerConfig",
+           "Scheduler", "SearchResponse", "TopKResponse"]
 
 _WRITES = ("insert", "delete")
+_LOG = logging.getLogger(__name__)
 
 
 class OverloadError(RuntimeError):
-    """Raised at submit time when a collection's queue is full.  Carries
-    the shed request's context so callers (and logs) can see *what* was
-    rejected: ``collection``, ``op``, and the ``queue_depth`` observed at
-    rejection."""
+    """Raised at submit time when a collection sheds the request — queue
+    full (the hard ``max_queue`` backstop), cost budget exhausted, the
+    degradation ladder at its ``reject`` stage, or the circuit breaker
+    open.  Carries the shed request's context so callers (and logs) can
+    see *what* was rejected — ``collection``, ``op``, ``queue_depth``,
+    ``reason`` — and a machine-readable ``retry_after_ms`` backoff
+    hint."""
 
     def __init__(self, message: str, *, collection: Optional[str] = None,
                  op: Optional[str] = None,
-                 queue_depth: Optional[int] = None):
+                 queue_depth: Optional[int] = None,
+                 retry_after_ms: float = 0.0,
+                 reason: str = "queue_full"):
         super().__init__(message)
         self.collection = collection
         self.op = op
         self.queue_depth = queue_depth
+        self.retry_after_ms = retry_after_ms
+        self.reason = reason
 
 
 class SearchResponse(NamedTuple):
     mask: np.ndarray     # (n_ids,) bool — live ids within τ
     dist: np.ndarray     # (n_ids,) int32 — exact distance where mask, BIG off
     overflow: int        # total dropped frontier entries of the dispatch
+    degraded: Optional[str] = None   # ladder stage that degraded this
+    #                      answer ("cheap_tau"), or None for a full answer
 
 
 class TopKResponse(NamedTuple):
@@ -91,6 +113,9 @@ class TopKResponse(NamedTuple):
     overflow: int
     scores: Optional[np.ndarray] = None   # (k,) f32 exact re-rank scores
     #                      (rerank= requests only); -1.0 on pad
+    degraded: Optional[str] = None   # deepest ladder stage that degraded
+    #                      this answer ("rerank_off" | "shrink_k" |
+    #                      "cheap_tau"), or None for a full answer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,12 +137,34 @@ class SchedulerConfig:
                    either, disables span recording entirely (requests
                    carry no spans and the query path's instrumentation
                    points are shared no-ops).
+      admission:   per-collection adaptive admission control
+                   (``overload.AdmissionConfig``): cost-budget admission
+                   over the τ-ladder cost model + CoDel queue-delay
+                   pressure levels.  None (default) keeps only the hard
+                   ``max_queue`` cliff — pre-§12 behavior.
+      degrade:     graceful-degradation ladder (``overload.DegradePolicy``)
+                   applied per batch at the current pressure level;
+                   requires ``admission``.  None = never degrade.
+      breaker:     per-collection circuit breaker
+                   (``overload.BreakerConfig``) over deadline outcomes.
+                   None = never trip.
+      default_deadline_ms: deadline applied to requests that pass
+                   ``deadline_ms=None`` (per-collection
+                   ``CollectionConfig.default_deadline_ms`` wins over
+                   this scheduler-wide default).  None = no deadline.
+      join_timeout_s: how long ``stop()`` waits for each worker thread
+                   before declaring the shutdown dirty.
     """
 
     max_batch: int = 64
     max_queue: int = 1024
     max_wait_ms: float = 2.0
     slow_ms: Optional[float] = None
+    admission: Optional[AdmissionConfig] = None
+    degrade: Optional[DegradePolicy] = None
+    breaker: Optional[BreakerConfig] = None
+    default_deadline_ms: Optional[float] = None
+    join_timeout_s: float = 60.0
 
 
 @dataclasses.dataclass(eq=False)      # identity equality: requests are
@@ -128,14 +175,21 @@ class _Request:                       # queue entries, never value-compared
     future: Future
     t_enq: float
     span: Optional[Span] = None   # request root (tracing enabled only)
+    deadline: Optional[float] = None   # absolute perf_counter() budget
+    priority: int = 0             # > 0 bypasses cost-budget admission
+    units: float = 1.0            # estimated cost (reference top-k = 1)
 
 
 class _CollState:
-    """Per-collection queue + condition variable."""
+    """Per-collection queue + condition variable (+ the collection's
+    admission controller and circuit breaker, when configured)."""
 
-    def __init__(self):
+    def __init__(self, ctrl: Optional[AdmissionController] = None,
+                 breaker: Optional[CircuitBreaker] = None):
         self.queue: Deque[_Request] = deque()
         self.cond = threading.Condition()
+        self.ctrl = ctrl
+        self.breaker = breaker
 
 
 class Scheduler:
@@ -152,7 +206,8 @@ class Scheduler:
                  config: Optional[SchedulerConfig] = None,
                  metrics: Optional[ServingMetrics] = None,
                  tracer: Optional[Tracer] = None,
-                 slowlog: Optional[SlowQueryLog] = None):
+                 slowlog: Optional[SlowQueryLog] = None,
+                 faults=None):
         self.registry = registry if registry is not None \
             else CollectionRegistry()
         self.config = config if config is not None else SchedulerConfig()
@@ -161,11 +216,18 @@ class Scheduler:
         if slowlog is None and self.config.slow_ms is not None:
             slowlog = SlowQueryLog()        # slow_ms implies a log to fill
         self.slowlog = slowlog
+        # fault-injection hook (chaos harness): any object with
+        # ``hit(label)`` — called once per batch as
+        # ``execute:<collection>:<op>`` before the batch runs, matching
+        # the store.faults protocol (overload.SlowDispatchInjector)
+        self.faults = faults
         self._states: Dict[str, _CollState] = {}
         self._states_lock = threading.Lock()
         self._workers: Dict[str, threading.Thread] = {}
         self._started = False
         self._stopping = False
+        self.stopped_dirty = False          # a stop() failed to join
+        self._dirty: set = set()            # collections with stuck workers
         # adopt collections already in the registry (a recovered
         # CollectionRegistry.open(data_dir)): queue state + metrics tap,
         # exactly as create_collection would have wired them
@@ -194,56 +256,120 @@ class Scheduler:
         with self._states_lock:
             state = self._states.get(name)
             if state is None:
-                state = self._states[name] = _CollState()
+                cfg = self.config
+                ctrl = AdmissionController(cfg.admission) \
+                    if cfg.admission is not None else None
+                breaker = CircuitBreaker(cfg.breaker) \
+                    if cfg.breaker is not None else None
+                state = self._states[name] = _CollState(ctrl, breaker)
                 if self._started and not self._stopping:
                     self._spawn_worker(name)
             return state
 
     # -- submission ------------------------------------------------------
 
-    def _submit(self, name: str, op: str, key: tuple,
-                payload: dict) -> Future:
-        self.registry.get(name)            # raises KeyError if unknown
+    def _shed(self, name: str, op: str, reason: str,
+              retry_after_ms: float, depth: int) -> None:
+        """Reject one request at submit time with full context."""
+        self.metrics.inc("rejected_total")
+        self.metrics.inc(f"rejected_total:{op}")
+        self.metrics.inc(f"shed_total:{reason}")
+        raise OverloadError(
+            f"collection {name!r} shed {op} ({reason}, "
+            f"queue_depth={depth}, retry_after_ms={retry_after_ms:.0f})",
+            collection=name, op=op, queue_depth=depth,
+            retry_after_ms=retry_after_ms, reason=reason)
+
+    def _submit(self, name: str, op: str, key: tuple, payload: dict,
+                deadline_ms: Optional[float] = None,
+                priority: Optional[int] = None) -> Future:
+        coll = self.registry.get(name)     # raises KeyError if unknown
         state = self._ensure_state(name)
+        if deadline_ms is None:
+            deadline_ms = getattr(coll.config, "default_deadline_ms", None)
+        if deadline_ms is None:
+            deadline_ms = self.config.default_deadline_ms
+        if priority is None:
+            priority = int(getattr(coll.config, "priority", 0) or 0)
         fut: Future = Future()
-        req = _Request(op=op, key=key, payload=payload, future=fut,
-                       t_enq=time.perf_counter())
-        with state.cond:
-            if self._stopping:
-                raise RuntimeError("scheduler is stopped")
-            if len(state.queue) >= self.config.max_queue:
+        t_enq = time.perf_counter()
+        req = _Request(
+            op=op, key=key, payload=payload, future=fut, t_enq=t_enq,
+            deadline=(None if deadline_ms is None
+                      else t_enq + float(deadline_ms) / 1e3),
+            priority=int(priority))
+        ctrl, breaker = state.ctrl, state.breaker
+        if ctrl is not None:
+            req.units = estimate_units(coll.index, op, key, payload)
+        probed = False
+        if breaker is not None:
+            ok, retry = breaker.allow()
+            if not ok:
+                self._shed(name, op, "breaker_open", retry,
+                           len(state.queue))
+            probed = True        # admitted through a possibly-probing
+        try:                     # breaker: cancel the slot on any reject
+            with state.cond:
+                if self._stopping:
+                    raise RuntimeError("scheduler is stopped")
                 depth = len(state.queue)
-                self.metrics.inc("rejected_total")
-                self.metrics.inc(f"rejected_total:{op}")
-                raise OverloadError(
-                    f"collection {name!r} queue full "
-                    f"({self.config.max_queue} requests, op={op})",
-                    collection=name, op=op, queue_depth=depth)
-            if self.tracer is not None or self.slowlog is not None:
-                req.span = Span("request", cat="request", ts=req.t_enq,
-                                args={"op": op, "collection": name})
-            state.queue.append(req)
-            state.cond.notify_all()
+                if depth >= self.config.max_queue:
+                    retry = ctrl.retry_after_ms() if ctrl is not None \
+                        else 0.0
+                    self._shed(name, op, "queue_full", retry, depth)
+                if ctrl is not None and req.priority <= 0 \
+                        and depth >= ctrl.config.min_queue:
+                    # past the ladder there is no cheaper answer left:
+                    # shed new best-effort work at submit time
+                    reject_level = (self.config.degrade.reject_level
+                                    if self.config.degrade is not None
+                                    else 2)
+                    if ctrl.pressure() >= reject_level:
+                        self._shed(name, op, "pressure",
+                                   ctrl.retry_after_ms(), depth)
+                if ctrl is not None:
+                    retry = ctrl.admit(req.units, depth, req.priority)
+                    if retry is not None:
+                        self._shed(name, op, "cost_budget", retry, depth)
+                if self.tracer is not None or self.slowlog is not None:
+                    req.span = Span("request", cat="request", ts=req.t_enq,
+                                    args={"op": op, "collection": name})
+                state.queue.append(req)
+                if ctrl is not None:
+                    ctrl.on_admit(req.units)
+                state.cond.notify_all()
+        except BaseException:
+            if probed:
+                breaker.cancel()           # don't leak a half-open probe
+            raise
         self.metrics.inc(f"requests_total:{op}")
         return fut
 
-    def submit_search(self, collection: str, q: np.ndarray,
-                      tau: int) -> Future:
+    def submit_search(self, collection: str, q: np.ndarray, tau: int,
+                      deadline_ms: Optional[float] = None,
+                      priority: Optional[int] = None) -> Future:
         """One range query -> Future[SearchResponse].  Coalesces with
-        other queued ``(collection, τ)`` searches."""
+        other queued ``(collection, τ)`` searches.  ``deadline_ms`` is
+        the request's end-to-end latency budget (expired-in-queue
+        requests fail with ``DeadlineExceeded`` before any dispatch);
+        ``priority > 0`` bypasses cost-budget admission."""
         q = np.asarray(q, dtype=np.uint8)
         return self._submit(collection, "search", ("search", int(tau)),
-                            {"q": q})
+                            {"q": q}, deadline_ms=deadline_ms,
+                            priority=priority)
 
     def submit_topk(self, collection: str, q: np.ndarray, k: int,
                     tau0: Optional[int] = None,
                     rerank: Optional[str] = None,
-                    q_payload: Optional[np.ndarray] = None) -> Future:
+                    q_payload: Optional[np.ndarray] = None,
+                    deadline_ms: Optional[float] = None,
+                    priority: Optional[int] = None) -> Future:
         """One kNN query -> Future[TopKResponse].  Coalesces with other
         queued ``(collection, k, τ0, metric)`` lookups — a two-stage
         ``rerank=`` request never coalesces with a plain one (the batch
         key carries the metric), and ``q_payload`` is the query's (Wp,)
-        uint32 set bitmap."""
+        uint32 set bitmap.  ``deadline_ms``/``priority`` as
+        ``submit_search``."""
         q = np.asarray(q, dtype=np.uint8)
         payload = {"q": q}
         if q_payload is not None:
@@ -252,23 +378,30 @@ class Scheduler:
         return self._submit(collection, "topk",
                             ("topk", int(k),
                              None if tau0 is None else int(tau0), rerank),
-                            payload)
+                            payload, deadline_ms=deadline_ms,
+                            priority=priority)
 
     def submit_insert(self, collection: str, sketches: np.ndarray,
-                      payloads: Optional[np.ndarray] = None) -> Future:
+                      payloads: Optional[np.ndarray] = None,
+                      deadline_ms: Optional[float] = None,
+                      priority: Optional[int] = None) -> Future:
         """Insert -> Future[(k,) int64 global ids].  ``payloads`` carries
         the rows' (k, Wp) uint32 re-rank set bitmaps for collections
         configured with ``payload_words``."""
         payload = {"sketches": np.asarray(sketches, dtype=np.uint8),
                    "payloads": (None if payloads is None
                                 else np.asarray(payloads, np.uint32))}
-        return self._submit(collection, "insert", ("insert",), payload)
+        return self._submit(collection, "insert", ("insert",), payload,
+                            deadline_ms=deadline_ms, priority=priority)
 
-    def submit_delete(self, collection: str, ids) -> Future:
+    def submit_delete(self, collection: str, ids,
+                      deadline_ms: Optional[float] = None,
+                      priority: Optional[int] = None) -> Future:
         """Delete -> Future[int newly-removed count]."""
         return self._submit(collection, "delete", ("delete",),
                             {"ids": np.atleast_1d(np.asarray(ids,
-                                                             np.int64))})
+                                                             np.int64))},
+                            deadline_ms=deadline_ms, priority=priority)
 
     # -- batch formation -------------------------------------------------
 
@@ -288,7 +421,46 @@ class Scheduler:
                     break            # a full group flushes regardless
         return group, False
 
-    def _next_batch(self, state: _CollState,
+    def _fail_deadline(self, name: str, state: _CollState,
+                       req: _Request) -> None:
+        """Cancel one expired request: ``DeadlineExceeded`` to the
+        client (with the controller's backoff hint), outcome fed to the
+        breaker, span closed.  The request never reaches a dispatch."""
+        retry = state.ctrl.retry_after_ms() if state.ctrl is not None \
+            else 0.0
+        budget_ms = (req.deadline - req.t_enq) * 1e3
+        self.metrics.inc("deadline_exceeded_total")
+        self.metrics.inc(f"deadline_exceeded_total:{req.op}")
+        if state.breaker is not None:
+            state.breaker.record(False)
+        if req.span is not None:
+            req.span.args["deadline_exceeded"] = True
+            req.span.dur = time.perf_counter() - req.t_enq
+            if self.tracer is not None:
+                self.tracer.add(req.span)
+        if not req.future.done():
+            req.future.set_exception(DeadlineExceeded(
+                f"{req.op} on {name!r} expired in queue "
+                f"(budget {budget_ms:.0f} ms, cancelled before dispatch)",
+                collection=name, op=req.op, deadline_ms=budget_ms,
+                retry_after_ms=retry))
+
+    def _purge_expired(self, name: str, state: _CollState) -> None:
+        """``state.cond`` held: drop queued requests whose deadline has
+        already passed — they can only waste a device dispatch."""
+        now = time.perf_counter()
+        expired = [r for r in state.queue
+                   if r.deadline is not None and now >= r.deadline]
+        if not expired:
+            return
+        dead = set(map(id, expired))
+        state.queue = deque(r for r in state.queue if id(r) not in dead)
+        for r in expired:
+            if state.ctrl is not None:
+                state.ctrl.on_pop(r.units)
+            self._fail_deadline(name, state, r)
+
+    def _next_batch(self, name: str, state: _CollState,
                     block: bool) -> Optional[List[_Request]]:
         """Pop the next executable batch (one write, or a coalesced read
         group).  ``block=True`` (worker threads) waits for work and holds
@@ -297,7 +469,10 @@ class Scheduler:
         max_wait = self.config.max_wait_ms / 1e3
         with state.cond:
             while True:
+                self._purge_expired(name, state)
                 if not state.queue:
+                    if state.ctrl is not None:
+                        state.ctrl.note_empty()
                     if not block or self._stopping:
                         return None
                     state.cond.wait(timeout=0.1)
@@ -335,9 +510,31 @@ class Scheduler:
         (``rung_dispatch``, ``tier_stage``, ``rerank``, ...) nest under
         it with no signature threading."""
         op = batch[0].op
+        state = self._ensure_state(name)
+        ctrl, breaker = state.ctrl, state.breaker
         t_pop = time.perf_counter()
         for req in batch:
             self.metrics.record_queue(op, t_pop - req.t_enq)
+            if ctrl is not None:
+                ctrl.on_pop(req.units)
+                ctrl.note_delay(t_pop - req.t_enq, now=t_pop)
+        if self.faults is not None:
+            # chaos-harness hook: an armed SlowDispatchInjector sleeps
+            # here — the "device got slow for this tenant" fault
+            self.faults.hit(f"execute:{name}:{op}")
+        # last-gasp deadline check (the fault may have slept): an
+        # expired request must never reach the dispatch below
+        now = time.perf_counter()
+        expired = [r for r in batch
+                   if r.deadline is not None and now >= r.deadline]
+        if expired:
+            for req in expired:
+                self._fail_deadline(name, state, req)
+            dead = set(map(id, expired))
+            batch = [r for r in batch if id(r) not in dead]
+            if not batch:
+                return
+        level = ctrl.pressure() if ctrl is not None else 0
         batch_span: Optional[Span] = None
         traced = [r for r in batch if r.span is not None]
         if traced:
@@ -354,9 +551,9 @@ class Scheduler:
             coll = self.registry.get(name)
             if batch_span is not None:
                 with attach(batch_span):
-                    self._run_batch(coll, op, batch)
+                    self._run_batch(coll, op, batch, level, batch_span)
             else:
-                self._run_batch(coll, op, batch)
+                self._run_batch(coll, op, batch, level, batch_span)
         except Exception as e:                     # noqa: BLE001
             self.metrics.inc("executor_errors_total")
             for req in batch:
@@ -364,11 +561,20 @@ class Scheduler:
                     req.future.set_exception(e)
         finally:
             t_done = time.perf_counter()
+            if ctrl is not None:
+                ctrl.note_exec(sum(r.units for r in batch),
+                               t_done - t_pop)
             if batch_span is not None:
                 batch_span.dur = t_done - batch_span.ts
             for req in batch:
                 e2e = t_done - req.t_enq
                 self.metrics.record_latency(op, e2e)
+                if breaker is not None:
+                    exc = req.future.exception() if req.future.done() \
+                        else None
+                    ok = exc is None and (req.deadline is None
+                                          or t_done <= req.deadline)
+                    breaker.record(ok)
                 if req.span is None:
                     continue
                 req.span.dur = e2e
@@ -381,23 +587,29 @@ class Scheduler:
                         req.span, op=op, collection=name,
                         slow_ms=self.config.slow_ms)
 
-    def _run_batch(self, coll: Collection, op: str,
-                   batch: List[_Request]) -> None:
+    def _run_batch(self, coll: Collection, op: str, batch: List[_Request],
+                   level: int = 0,
+                   batch_span: Optional[Span] = None) -> None:
         if op in _WRITES:
             self._execute_write(coll, batch[0])
         else:
-            self._execute_reads(coll, batch)
+            self._execute_reads(coll, batch, level, batch_span)
 
-    def _execute_reads(self, coll: Collection,
-                       batch: List[_Request]) -> None:
+    def _execute_reads(self, coll: Collection, batch: List[_Request],
+                       level: int = 0,
+                       batch_span: Optional[Span] = None) -> None:
         op, key = batch[0].op, batch[0].key
         g = len(batch)
+        policy = self.config.degrade
+        degraded: Optional[str] = None
         with _obs_span("batch_assembly", cat="sched", size=g,
                        bucket=bucket_m(g)):
             qs = pad_to_bucket(np.stack([r.payload["q"] for r in batch]))
         t0 = time.perf_counter()
         if op == "search":
             tau = key[1]
+            if policy is not None and level > 0:
+                tau, degraded = policy.apply_search(level, tau)
             with _obs_span("execute", cat="exec", op=op, tau=tau):
                 res = coll.index.search_batch(qs, tau)
             self.metrics.record_exec(op, time.perf_counter() - t0)
@@ -406,9 +618,16 @@ class Scheduler:
                 for i, req in enumerate(batch):
                     req.future.set_result(SearchResponse(
                         mask=np.asarray(res.mask[i]),
-                        dist=np.asarray(res.dist[i]), overflow=overflow))
+                        dist=np.asarray(res.dist[i]), overflow=overflow,
+                        degraded=degraded))
         else:
             k, tau0, metric = key[1], key[2], key[3]
+            if policy is not None and level > 0:
+                # degradation changes *parameters*, never kernels: the
+                # degraded answer is bit-identical to an undegraded run
+                # at the same effective (k, τ0, rerank) settings
+                k, tau0, metric, degraded = policy.apply_topk(
+                    level, k, tau0, metric)
             with _obs_span("execute", cat="exec", op=op, k=k):
                 if metric is not None:
                     pays = pad_to_bucket(np.stack(
@@ -426,7 +645,14 @@ class Scheduler:
                     req.future.set_result(TopKResponse(
                         ids=ids[i], dists=dists[i], tau=int(res.tau),
                         overflow=int(res.overflow),
-                        scores=None if scores is None else scores[i]))
+                        scores=None if scores is None else scores[i],
+                        degraded=degraded))
+        if degraded is not None:
+            self.metrics.inc("degraded_total", g)
+            self.metrics.inc(f"degraded_total:{degraded}", g)
+            if batch_span is not None:
+                batch_span.args["degrade"] = degraded
+                batch_span.args["pressure_level"] = level
         self.metrics.record_batch(op, g, bucket_m(g))
 
     def _execute_write(self, coll: Collection, req: _Request) -> None:
@@ -473,7 +699,7 @@ class Scheduler:
     def _worker(self, name: str) -> None:
         state = self._ensure_state(name)
         while True:
-            batch = self._next_batch(state, block=True)
+            batch = self._next_batch(name, state, block=True)
             if batch is None:
                 return                      # stopping and drained
             if batch:
@@ -487,22 +713,42 @@ class Scheduler:
 
     def stop(self) -> None:
         """Drain every queue (outstanding futures complete) and join the
-        workers.  Subsequent submits raise."""
+        workers.  Subsequent submits raise.
+
+        A worker that fails to join within ``config.join_timeout_s`` is
+        a loud event, never a silent one: it is logged at ERROR,
+        ``stopped_dirty`` flips (surfaced in ``stats()`` and as the
+        ``serving_stopped_dirty`` gauge), and ``pump()`` permanently
+        skips the stuck collection — its queue may still be owned by
+        the wedged thread, and a second driver would break the
+        one-executor-per-queue invariant (a read could pass a write
+        fence)."""
         self._stopping = True
         with self._states_lock:
-            states = list(self._states.values())
-        for state in states:
+            states = list(self._states.items())
+        for _, state in states:
             with state.cond:
                 state.cond.notify_all()
-        for t in self._workers.values():
-            t.join(timeout=60.0)
+        for name, t in list(self._workers.items()):
+            t.join(timeout=self.config.join_timeout_s)
+            if t.is_alive():
+                self.stopped_dirty = True
+                self._dirty.add(name)
+                self.metrics.inc("stopped_dirty_total")
+                self.metrics.set_gauge("serving_stopped_dirty", 1)
+                _LOG.error(
+                    "stop(): worker %r failed to join within %.1f s — "
+                    "DIRTY shutdown; collection %r is quarantined from "
+                    "pump() (its queue may still be owned by the wedged "
+                    "thread)", t.name, self.config.join_timeout_s, name)
         self._workers.clear()
         self._started = False
         self.pump()                         # finish anything left behind
 
     def pump(self) -> int:
         """Synchronous drive: drain every collection queue on the calling
-        thread (deterministic — no timers).  Returns batches executed."""
+        thread (deterministic — no timers).  Returns batches executed.
+        Collections quarantined by a dirty ``stop()`` are skipped."""
         executed = 0
         progressed = True
         while progressed:
@@ -510,14 +756,52 @@ class Scheduler:
             with self._states_lock:
                 items = list(self._states.items())
             for name, state in items:
+                if name in self._dirty:
+                    continue
                 while True:
-                    batch = self._next_batch(state, block=False)
+                    batch = self._next_batch(name, state, block=False)
                     if not batch:
                         break
                     self._execute(name, batch)
                     executed += 1
                     progressed = True
         return executed
+
+    def warmup(self, collection: Optional[str] = None,
+               ks: Tuple[int, ...] = (8,),
+               taus: Tuple[int, ...] = ()) -> Dict[str, int]:
+        """Pre-jit every power-of-two shape bucket up to ``max_batch``
+        so first-request compile time never pollutes serving p99 (the
+        multi-second smoke tail in BENCH_serving.json was dominated by
+        one trace per (bucket, k/τ) on the first live request).
+
+        Drives ``topk_batch`` for each k in ``ks`` and ``search_batch``
+        for each τ in ``taus`` over zero-sketch queries at every bucket
+        size, for ``collection`` (default: all).  Empty collections are
+        skipped (their searchers re-specialize on first insert anyway).
+        Returns ``{"buckets", "calls", "traces"}`` — ``traces`` is the
+        number of fresh compiles the warmup absorbed."""
+        from ..core.search import searcher_cache_info
+        names = [collection] if collection is not None \
+            else self.registry.names()
+        buckets = bucket_table(self.config.max_batch)
+        traces0 = searcher_cache_info().get("traces", 0)
+        calls = 0
+        for name in names:
+            coll = self.registry.get(name)
+            if getattr(coll.index, "n_live", 0) == 0:
+                continue
+            for bkt in buckets:
+                qs = np.zeros((bkt, coll.config.L), dtype=np.uint8)
+                for k in ks:
+                    coll.index.topk_batch(qs, int(k))
+                    calls += 1
+                for tau in taus:
+                    coll.index.search_batch(qs, int(tau))
+                    calls += 1
+        self.metrics.inc("warmup_calls_total", calls)
+        return {"buckets": len(buckets), "calls": calls,
+                "traces": searcher_cache_info().get("traces", 0) - traces0}
 
     # -- introspection ---------------------------------------------------
 
@@ -529,12 +813,31 @@ class Scheduler:
 
     def stats(self) -> Dict[str, object]:
         """One dict: metrics snapshot + queue depths + per-collection
-        index occupancy (segments, tombstones, live counts)."""
+        index occupancy (segments, tombstones, live counts) + the
+        overload control plane's state (pressure level, queued cost
+        units, breaker state/trips) when configured."""
         with self._states_lock:
             depths = {name: len(state.queue)
                       for name, state in self._states.items()}
-        return {**self.metrics.snapshot(), "queue_depth": depths,
-                "collections": self.registry.stats()}
+            overload: Dict[str, Dict[str, object]] = {}
+            for name, state in self._states.items():
+                d: Dict[str, object] = {}
+                if state.ctrl is not None:
+                    d["pressure_level"] = state.ctrl.pressure()
+                    d["queued_units"] = state.ctrl.queued_units()
+                    d["retry_after_ms"] = state.ctrl.retry_after_ms()
+                    d["cost_sheds"] = state.ctrl.sheds
+                if state.breaker is not None:
+                    d["breaker"] = state.breaker.state()
+                    d["breaker_trips"] = state.breaker.trips_total
+                if d:
+                    overload[name] = d
+        out = {**self.metrics.snapshot(), "queue_depth": depths,
+               "collections": self.registry.stats(),
+               "stopped_dirty": self.stopped_dirty}
+        if overload:
+            out["overload"] = overload
+        return out
 
     def render_stats(self) -> str:
         """``/stats``-style text dump of everything ``stats()`` reports."""
@@ -543,6 +846,15 @@ class Scheduler:
             for name, state in self._states.items():
                 extra[f'serving_queue_depth{{collection="{name}"}}'] = \
                     len(state.queue)
+                if state.breaker is not None:
+                    extra[f'serving_breaker_state{{collection="{name}"}}'] \
+                        = state.breaker.state_code()
+                if state.ctrl is not None:
+                    extra[f'serving_pressure_level{{collection="{name}"}}'] \
+                        = state.ctrl.pressure()
+                    extra[f'serving_queued_cost_units'
+                          f'{{collection="{name}"}}'] = \
+                        state.ctrl.queued_units()
         for name, st in self.registry.stats().items():
             for gauge in ("n_live", "tombstones", "n_segments", "n_ids",
                           "arena_bytes", "device_bytes", "host_bytes"):

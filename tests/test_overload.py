@@ -1,0 +1,348 @@
+"""Overload control plane (DESIGN.md §12): deadline propagation cancels
+expired work *before* any device dispatch, the CoDel-style admission
+controller escalates only on a standing queue, the degradation ladder
+produces answers bit-identical to an undegraded run at the same
+effective parameters (and says so in the response), the per-collection
+circuit breaker walks closed → open → half-open → closed, ``stop()``
+failures are loud, warmup absorbs every shape-bucket compile, and every
+new signal round-trips through the strict Prometheus parser."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.segments import dispatch_stats
+from repro.obs.prom import parse_exposition
+from repro.serving import (AdmissionConfig, AdmissionController,
+                           BreakerConfig, CircuitBreaker, CollectionConfig,
+                           DeadlineExceeded, DegradePolicy, OverloadError,
+                           Scheduler, SchedulerConfig, SlowDispatchInjector)
+from repro.serving.overload import estimate_units
+
+L, B = 8, 2
+
+
+def corpus(n=64, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << B, size=(n, L), dtype=np.uint8)
+
+
+def make_sched(admission=False, degrade=False, breaker=None, faults=None,
+               n=64, **kw):
+    sched = Scheduler(config=SchedulerConfig(
+        max_batch=4, max_queue=256, max_wait_ms=1.0,
+        admission=AdmissionConfig(cost_capacity=1024.0) if admission
+        else None,
+        degrade=DegradePolicy() if degrade else None,
+        breaker=breaker, **kw), faults=faults)
+    sched.create_collection("docs", CollectionConfig(L=L, b=B))
+    sched.submit_insert("docs", corpus(n))
+    sched.pump()
+    return sched
+
+
+def force_level(ctrl, level):
+    """Fabricate a standing queue with timestamps far in the future so
+    real pops (near-zero delays at the real clock) can't close a CoDel
+    interval underneath the test."""
+    start = time.perf_counter() + 1e9
+    for i in range(level + 1):
+        ctrl.note_delay(0.05, now=start + 0.11 * i)
+
+
+# -- deadlines --------------------------------------------------------------
+
+def test_expired_requests_never_reach_the_device():
+    sched = make_sched(admission=True)
+    docs = corpus()
+    futs = [sched.submit_topk("docs", docs[i], 3, deadline_ms=0.01)
+            for i in range(8)]
+    time.sleep(0.01)                    # every budget is now blown
+    before = dispatch_stats()["total"]
+    sched.pump()
+    assert dispatch_stats()["total"] == before   # zero device launches
+    for f in futs:
+        with pytest.raises(DeadlineExceeded) as ei:
+            f.result(timeout=5)
+        assert ei.value.collection == "docs" and ei.value.op == "topk"
+        assert ei.value.retry_after_ms >= 0.0
+    snap = sched.stats()
+    assert snap["counters"]["deadline_exceeded_total"] == 8
+    assert snap["counters"]["deadline_exceeded_total:topk"] == 8
+
+
+def test_live_requests_unaffected_by_expired_neighbours():
+    sched = make_sched(admission=True)
+    docs = corpus()
+    dead = sched.submit_topk("docs", docs[0], 3, deadline_ms=0.01)
+    live = sched.submit_topk("docs", docs[1], 3, deadline_ms=60_000.0)
+    time.sleep(0.01)
+    sched.pump()
+    with pytest.raises(DeadlineExceeded):
+        dead.result(timeout=5)
+    res = live.result(timeout=5)
+    direct = sched.registry.get("docs").index.topk_batch(
+        docs[1][None, :], 3)
+    assert np.array_equal(res.ids, np.asarray(direct.ids)[0])
+    assert res.degraded is None
+
+
+def test_default_deadline_comes_from_collection_config():
+    sched = Scheduler(config=SchedulerConfig(max_batch=4, max_queue=256))
+    sched.create_collection("docs", CollectionConfig(
+        L=L, b=B, default_deadline_ms=0.01))
+    sched.submit_insert("docs", corpus())
+    sched.pump()
+    fut = sched.submit_topk("docs", corpus()[0], 3)   # inherits 0.01ms
+    time.sleep(0.01)
+    sched.pump()
+    with pytest.raises(DeadlineExceeded):
+        fut.result(timeout=5)
+
+
+# -- admission --------------------------------------------------------------
+
+def test_codel_escalates_on_standing_queue_only():
+    ctrl = AdmissionController(AdmissionConfig())
+    t = 1000.0
+    ctrl.note_delay(0.05, now=t)                  # opens the interval
+    ctrl.note_delay(0.001, now=t + 0.05)          # one dip under target
+    ctrl.note_delay(0.05, now=t + 0.11)           # closes: min was 1ms
+    assert ctrl.pressure() == 0                   # burst absorbed
+    ctrl.note_delay(0.05, now=t + 0.22)           # closes: min 50ms
+    ctrl.note_delay(0.05, now=t + 0.33)
+    assert ctrl.pressure() == 2                   # standing queue
+    ctrl.note_empty()                             # CoDel exit condition
+    assert ctrl.pressure() == 0
+
+
+def test_cost_budget_sheds_but_min_queue_always_admits():
+    cfg = AdmissionConfig(cost_capacity=4.0, min_queue=2)
+    ctrl = AdmissionController(cfg)
+    for _ in range(8):
+        ctrl.on_admit(1.0)
+    # budget is 2x blown, but a shallow queue is always admitted
+    assert ctrl.admit(1.0, queue_len=1, priority=0) is None
+    shed = ctrl.admit(1.0, queue_len=8, priority=0)
+    assert shed is not None and shed >= 1.0       # retry_after_ms hint
+
+
+def test_estimate_units_scales_with_k_and_clamps():
+    idx = Scheduler()
+    idx.create_collection("docs", CollectionConfig(L=L, b=B))
+    idx.submit_insert("docs", corpus(64))
+    idx.pump()
+    index = idx.registry.get("docs").index
+    small = estimate_units(index, "topk", ("topk", 2, None, None), {})
+    big = estimate_units(index, "topk", ("topk", 32, None, None), {})
+    assert 1 / 16 <= small <= big <= 64
+
+
+# -- degradation ladder -----------------------------------------------------
+
+def test_degrade_policy_reports_only_what_changed():
+    pol = DegradePolicy()
+    assert pol.reject_level == 4
+    # level 1 = rerank_off: a plain topk is untouched -> no stage
+    assert pol.apply_topk(1, 5, None, None) == (5, None, None, None)
+    # ... but a rerank request is downgraded
+    k, tau0, metric, stage = pol.apply_topk(1, 5, None, "l2")
+    assert metric is None and stage == "rerank_off"
+    # level 2 shrinks k (never below k_floor)
+    k, _, _, stage = pol.apply_topk(2, 8, None, None)
+    assert k == 4 and stage == "shrink_k"
+    assert pol.apply_topk(2, 1, None, None)[0] == 1
+    # level 3 forces the cheap ladder start / caps search tau
+    _, tau0, _, stage = pol.apply_topk(3, 8, None, None)
+    assert tau0 == 0 and stage == "cheap_tau"
+    assert pol.apply_search(3, 4) == (1, "cheap_tau")
+    assert pol.apply_search(3, 1) == (1, None)    # already cheap
+
+
+def test_degraded_answers_bit_identical_and_labelled():
+    sched = make_sched(admission=True, degrade=True)
+    idx = sched.registry.get("docs").index
+    docs = corpus()
+    force_level(sched._states["docs"].ctrl, 2)
+    fut = sched.submit_topk("docs", docs[3], 8)
+    sched.pump()
+    res = fut.result(timeout=5)
+    pol = sched.config.degrade
+    k_eff, tau0_eff, _, stage = pol.apply_topk(2, 8, None, None)
+    assert res.degraded == stage == "shrink_k"
+    direct = idx.topk_batch(docs[3][None, :], k_eff, tau0=tau0_eff)
+    assert np.array_equal(res.ids, np.asarray(direct.ids)[0])
+    assert np.array_equal(res.dists, np.asarray(direct.dists)[0])
+    snap = sched.stats()
+    assert snap["counters"]["degraded_total:shrink_k"] == 1
+
+
+def test_pressure_reject_sheds_new_work_but_spares_priority():
+    sched = make_sched(admission=True, degrade=True)
+    docs = corpus()
+    state = sched._states["docs"]
+    force_level(state.ctrl, sched.config.degrade.reject_level)
+    # a deep queue + reject-level pressure sheds priority-0 work
+    for i in range(state.ctrl.config.min_queue):
+        sched.submit_topk("docs", docs[i], 3, priority=1)
+    with pytest.raises(OverloadError) as ei:
+        sched.submit_topk("docs", docs[0], 3)
+    assert ei.value.reason == "pressure"
+    assert ei.value.retry_after_ms >= 0.0
+    fut = sched.submit_topk("docs", docs[0], 3, priority=1)   # exempt
+    sched.pump()
+    fut.result(timeout=5)
+
+
+# -- circuit breaker --------------------------------------------------------
+
+def test_breaker_walks_closed_open_halfopen_closed():
+    clock = [0.0]
+    br = CircuitBreaker(BreakerConfig(window=8, min_samples=4,
+                                      fail_frac=0.5, open_ms=100.0,
+                                      probes=2), clock=lambda: clock[0])
+    assert br.state() == "closed"
+    for _ in range(4):
+        br.record(False)
+    assert br.state() == "open" and br.trips_total == 1
+    ok, retry = br.allow()
+    assert not ok and retry > 0.0
+    clock[0] = 0.15                     # open window elapses
+    assert br.state() == "half_open"
+    assert br.allow()[0] and br.allow()[0]        # probe budget
+    assert not br.allow()[0]
+    br.record(True)
+    br.record(True)
+    assert br.state() == "closed"
+
+
+def test_breaker_reopen_backs_off_and_cancel_refunds_probe():
+    clock = [0.0]
+    br = CircuitBreaker(BreakerConfig(window=8, min_samples=2,
+                                      fail_frac=0.5, open_ms=100.0,
+                                      probes=1, backoff=2.0),
+                        clock=lambda: clock[0])
+    br.record(False), br.record(False)            # trip #1: 100ms
+    clock[0] = 0.15
+    assert br.allow()[0]
+    br.record(False)                              # failed probe: 200ms
+    assert br.trips_total == 2
+    clock[0] = 0.30                    # 150ms into a 200ms open window
+    assert not br.allow()[0]
+    clock[0] = 0.40
+    assert br.allow()[0]               # half-open, probe slot taken
+    br.cancel()                        # admission rejected it instead
+    assert br.allow()[0]               # the slot was refunded
+
+
+def test_breaker_trips_in_scheduler_and_sheds_with_retry_hint():
+    sched = make_sched(admission=True, breaker=BreakerConfig(
+        window=8, min_samples=4, fail_frac=0.5, open_ms=50.0, probes=2))
+    docs = corpus()
+    for i in range(8):
+        sched.submit_topk("docs", docs[i], 3, deadline_ms=0.01)
+    time.sleep(0.01)
+    sched.pump()                       # purge -> 8 failures -> OPEN
+    assert sched._states["docs"].breaker.state() == "open"
+    with pytest.raises(OverloadError) as ei:
+        sched.submit_topk("docs", docs[0], 3)
+    assert ei.value.reason == "breaker_open"
+    assert ei.value.retry_after_ms > 0.0
+    time.sleep(0.08)                   # open window elapses; probes heal
+    for _ in range(2):
+        f = sched.submit_topk("docs", docs[0], 3)
+        sched.pump()
+        f.result(timeout=5)
+    assert sched._states["docs"].breaker.state() == "closed"
+
+
+# -- threaded burst + faults ------------------------------------------------
+
+def test_burst_under_faults_keeps_cotenant_clean_threaded():
+    inj = SlowDispatchInjector(delay_s=0.02, match="execute:docs:topk")
+    sched = make_sched(admission=True, degrade=True, faults=inj)
+    sched.create_collection("quiet", CollectionConfig(L=L, b=B))
+    sched.submit_insert("quiet", corpus())
+    sched.pump()
+    docs = corpus()
+    sched.start()
+    futs = [sched.submit_topk("docs", docs[i % 64], 3, deadline_ms=150.0)
+            for i in range(48)]
+    ok = err = 0
+    for f in futs:
+        try:
+            f.result(timeout=30)
+            ok += 1
+        except DeadlineExceeded:
+            err += 1
+    # the co-tenant's collection is untouched by the victim's faults
+    t0 = time.perf_counter()
+    q = sched.submit_topk("quiet", docs[0], 3, deadline_ms=5_000.0)
+    q.result(timeout=30)
+    assert (time.perf_counter() - t0) < 5.0
+    sched.stop()
+    assert ok + err == 48 and err >= 1            # faults bit something
+    assert inj.fired >= 1
+    assert not sched.stopped_dirty
+
+
+def test_stop_join_failure_is_loud_and_quarantines(caplog):
+    inj = SlowDispatchInjector(delay_s=0.5, match="execute:docs")
+    sched = make_sched(admission=True, faults=inj, join_timeout_s=0.05)
+    docs = corpus()
+    sched.start()
+    fut = sched.submit_topk("docs", docs[0], 3)   # worker naps 0.5s
+    time.sleep(0.05)                              # let it enter the fault
+    import logging
+    with caplog.at_level(logging.ERROR, logger="repro.serving.scheduler"):
+        sched.stop()
+    assert sched.stopped_dirty
+    assert sched.stats()["counters"]["stopped_dirty_total"] == 1
+    assert any("join" in r.message for r in caplog.records)
+    assert sched.pump() == 0           # dirty collections are quarantined
+    fut.result(timeout=30)             # the stuck worker still finishes
+
+
+# -- warmup -----------------------------------------------------------------
+
+def test_warmup_absorbs_all_bucket_compiles():
+    from repro.core import clear_searcher_cache
+    clear_searcher_cache()
+    sched = make_sched()
+    rep = sched.warmup(ks=(3,), taus=(1,))
+    assert rep["buckets"] >= 1 and rep["traces"] >= 1
+    assert rep["calls"] == 2 * rep["buckets"]
+    again = sched.warmup(ks=(3,), taus=(1,))
+    assert again["traces"] == 0        # idempotent: everything compiled
+    sched.create_collection("empty", CollectionConfig(L=L, b=B))
+    assert sched.warmup(collection="empty")["calls"] == 0
+
+
+# -- observability ----------------------------------------------------------
+
+def test_new_signals_round_trip_through_prom_parser():
+    sched = make_sched(admission=True, degrade=True,
+                       breaker=BreakerConfig())
+    docs = corpus()
+    dead = sched.submit_topk("docs", docs[0], 3, deadline_ms=0.01)
+    time.sleep(0.01)
+    force_level(sched._states["docs"].ctrl, 2)
+    live = sched.submit_topk("docs", docs[1], 8)
+    sched.pump()
+    with pytest.raises(DeadlineExceeded):
+        dead.result(timeout=5)
+    assert live.result(timeout=5).degraded == "shrink_k"
+    parsed = parse_exposition(sched.render_stats())
+    names = {s[0] for s in parsed["samples"]}
+    for family in ("serving_deadline_exceeded_total",
+                   "serving_degraded_total", "serving_breaker_state",
+                   "serving_pressure_level", "serving_queued_cost_units"):
+        assert family in names, (family, sorted(names))
+    by = {(s[0], tuple(sorted(s[1].items()))): s[2]
+          for s in parsed["samples"]}
+    assert by[("serving_breaker_state",
+               (("collection", "docs"),))] == 0.0  # closed
+    assert by[("serving_pressure_level",
+               (("collection", "docs"),))] >= 0.0
